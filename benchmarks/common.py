@@ -1,0 +1,40 @@
+"""Shared helpers for the paper-table benchmarks.
+
+No ImageNet/SQuAD on this box: the paper's accuracy deltas are driven by
+the retained-saliency objective the permutation explicitly optimises
+(Eq. 1), so benchmarks report retained-saliency fractions on real-shaped
+weight tensors plus end-to-end eval-loss on a synthetically trained LM
+(DESIGN.md §7). Timing uses wall-clock over repeated calls.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+
+def time_us(fn, *args, repeat: int = 5, warmup: int = 1) -> float:
+    for _ in range(warmup):
+        r = fn(*args)
+        jax.block_until_ready(r) if hasattr(r, "block_until_ready") or isinstance(
+            r, jax.Array
+        ) else None
+    t0 = time.perf_counter()
+    for _ in range(repeat):
+        r = fn(*args)
+        if isinstance(r, jax.Array):
+            r.block_until_ready()
+    return (time.perf_counter() - t0) / repeat * 1e6
+
+
+def structured_weights(rng: np.random.Generator, n_out: int, n_in: int) -> np.ndarray:
+    """Synthetic weights with realistic row/column scale structure
+    (per-channel variance spread, as in trained conv/linear layers)."""
+    row = np.exp(rng.normal(scale=0.6, size=(n_out, 1)))
+    col = np.exp(rng.normal(scale=0.6, size=(1, n_in)))
+    return (rng.normal(size=(n_out, n_in)) * row * col).astype(np.float32)
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    print(f"{name},{us_per_call:.1f},{derived}")

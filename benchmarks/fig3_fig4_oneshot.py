@@ -1,0 +1,56 @@
+"""Figures 3/4 analogue — one-shot pruning quality vs sparsity.
+
+Per sparsity in {65, 75, 85}%, reports retained-saliency fraction for
+  HiNM (gyro) / HiNM-NoPerm / OVW (vector-only + k-means OCP) /
+  Unstructured (upper bound),
+on ResNet-shaped conv weights (flattened to (C_out, C_in*k*k), magnitude
+saliency — the paper's CNN setting, V=32).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, structured_weights, time_us
+from repro.core import baselines
+from repro.core.gyro import gyro_permute
+from repro.core.types import HiNMConfig
+
+# (C_out, C_in*k*k) for representative ResNet18/50 conv layers
+SHAPES = [(128, 1152), (256, 2304)]
+SPARSITIES = [0.65, 0.75, 0.85]
+
+
+def vector_sparsity_for(total: float, n: int = 2, m: int = 4) -> float:
+    """total = 1 - (1-sv) * N/M  ->  sv."""
+    return 1.0 - (1.0 - total) * m / n
+
+
+def run() -> None:
+    rng = np.random.default_rng(0)
+    for total in SPARSITIES:
+        sv = vector_sparsity_for(total)
+        cfg = HiNMConfig(v=32, n=2, m=4, vector_sparsity=sv)
+        fr = {"hinm": [], "noperm": [], "ovw": [], "unstructured": []}
+        t_gyro = 0.0
+        for shape in SHAPES:
+            sal = np.abs(structured_weights(rng, *shape))
+            import time as _t
+
+            t0 = _t.perf_counter()
+            gy = gyro_permute(sal, cfg, ocp_iters=10, icp_iters=8,
+                              rng=np.random.default_rng(1))
+            t_gyro += (_t.perf_counter() - t0) * 1e6
+            nop = gyro_permute(sal, cfg, rng=np.random.default_rng(1),
+                               run_ocp=False, run_icp=False)
+            fr["hinm"].append(gy.retained_fraction)
+            fr["noperm"].append(nop.retained_fraction)
+            fr["ovw"].append(baselines.ovw_prune(sal, 32, total,
+                                                 np.random.default_rng(1)))
+            fr["unstructured"].append(baselines.unstructured_retained(sal, total))
+        for k, v in fr.items():
+            emit(f"fig3_oneshot_{int(total*100)}pct_{k}", t_gyro / len(SHAPES),
+                 f"retained_frac={np.mean(v):.4f}")
+
+
+if __name__ == "__main__":
+    run()

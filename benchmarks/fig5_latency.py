@@ -1,0 +1,55 @@
+"""Figure 5 analogue — runtime overhead of gyro-permutation.
+
+The paper's claim: the permuted vec_idx adds NO latency because the kernel
+performs the indexed gather anyway. We measure the HiNM SpMM with
+(a) identity vec_idx (unpermuted) vs (b) gyro-permuted vec_idx, on both
+the XLA fast path (jit, CPU wall-clock) and the Pallas kernel in interpret
+mode, across sparsity ratios and vector sizes — the delta should be noise.
+Also reports packed/dense weight-byte ratio (the TPU bandwidth win).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, structured_weights, time_us
+from repro.core import packing
+from repro.core.gyro import gyro_permute
+from repro.core.types import HiNMConfig
+from repro.kernels import ops
+
+
+def run() -> None:
+    rng = np.random.default_rng(0)
+    b, n_out, n_in = 64, 768, 768
+    x = jnp.asarray(rng.normal(size=(b, n_in)).astype(np.float32))
+    for sv, total in ((1.0 / 3.0, 2.0 / 3.0), (0.5, 0.75), (0.75, 0.875)):
+        for v in (32, 64):
+            cfg = HiNMConfig(v=v, n=2, m=4, vector_sparsity=sv)
+            w = structured_weights(rng, n_out, n_in)
+            sal = np.abs(w)
+            gy = gyro_permute(sal, cfg, ocp_iters=6, icp_iters=6,
+                              rng=np.random.default_rng(1))
+            w_p = jnp.asarray(w[gy.out_perm])
+            p_ident = packing.pack(w_p, cfg)                        # ascending order
+            p_gyro = packing.pack(w_p, cfg,
+                                  col_ids=jnp.asarray(gy.col_order),
+                                  sal=jnp.asarray(sal[gy.out_perm]))
+
+            f = jax.jit(lambda xx, pp: ops.hinm_matmul(xx, pp, backend="xla"),
+                        static_argnames=())
+            t_ident = time_us(lambda: f(x, p_ident).block_until_ready(), repeat=20)
+            t_gyro = time_us(lambda: f(x, p_gyro).block_until_ready(), repeat=20)
+            ratio = p_gyro.packed_bytes() / p_gyro.dense_bytes()
+            emit(
+                f"fig5_latency_s{int(total*100)}_v{v}",
+                t_gyro,
+                f"identity_us={t_ident:.1f};overhead_pct="
+                f"{100*(t_gyro-t_ident)/max(t_ident,1e-9):.1f};"
+                f"weight_bytes_ratio={ratio:.3f}",
+            )
+
+
+if __name__ == "__main__":
+    run()

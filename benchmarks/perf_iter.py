@@ -1,0 +1,102 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Perf hillclimb driver (EXPERIMENTS.md §Perf).
+
+Runs one (arch, shape) cell under a set of knob variants and reports the
+three roofline terms + artifact memory for each, so every
+hypothesis -> change -> measure cycle is one invocation:
+
+  PYTHONPATH=src python -m benchmarks.perf_iter --arch qwen2_5_14b \
+      --shape decode_32k --variants baseline,embed_fs,packed_model_t
+"""
+
+import argparse
+import json
+import time
+
+VARIANTS = {
+    # name: knob overrides
+    "baseline": {},
+    "embed_fs": {"embed_feature_shard": True},
+    "packed_model_t": {"packed_t_axes": "model"},
+    "packed_model_t_embed_fs": {"packed_t_axes": "model", "embed_feature_shard": True},
+    "seq_shard_cache": {"decode_seq_shard": True, "embed_feature_shard": True},
+    "xent_chunk_128": {"xent_chunk": 128, "embed_feature_shard": True},
+    "kvblock_1024": {"kv_block": 1024, "embed_feature_shard": True},
+    "shard_map": {"packed_t_axes": "model_only", "packed_shard_map": True},
+    "seq_par_decode": {"packed_t_axes": "model_only", "packed_shard_map": True,
+                       "decode_seq_shard": True, "seq_parallel_decode": True},
+    "shard_map_embed_fs": {"packed_t_axes": "model_only", "packed_shard_map": True,
+                           "embed_feature_shard": True},
+    "all_opt": {"embed_feature_shard": True, "packed_t_axes": "both"},
+}
+
+
+def measure(arch: str, shape: str, overrides: dict) -> dict:
+    import jax
+
+    from benchmarks import roofline as rl
+    from repro import perf_knobs
+    from repro.configs.base import load_arch
+    from repro.launch import cells as cell_lib
+    from repro.launch import hlo_stats
+    from repro.launch.mesh import make_production_mesh
+
+    mesh = make_production_mesh(multi_pod=False)
+    cfg = load_arch(arch)
+    with perf_knobs.knobs(**overrides):
+        # full-depth artifact: memory + collective schedule
+        t0 = time.time()
+        cell = cell_lib.build_cell(cfg, shape, mesh)
+        compiled = cell_lib.lower_cell(cell, mesh).compile()
+        cs = hlo_stats.cost_summary(compiled)
+        coll = hlo_stats.collective_bytes_nested(
+            compiled.as_text(), cfg.n_layers // rl._period(cfg))
+        # probe: loop-corrected flops
+        stats = rl.extrapolated_cell_stats(cfg, shape, mesh)
+        compile_s = time.time() - t0
+
+    mem_bytes = cs["argument_bytes"] + cs["output_bytes"] + 2 * cs["temp_bytes"]
+    return {
+        "arch": arch, "shape": shape, "overrides": overrides,
+        "compute_term_s": stats["flops"] / rl.PEAK_FLOPS,
+        "memory_term_s": mem_bytes / rl.HBM_BW,
+        "collective_term_s": coll["total_bytes"] / rl.ICI_BW,
+        "coll_by_kind_gb": {k: round(v / 1e9, 2) for k, v in coll["bytes"].items()},
+        "hbm_gb": (cs["argument_bytes"] + cs["temp_bytes"] + cs["output_bytes"]
+                   - cs["alias_bytes"]) / 1e9,
+        "flops_per_device": stats["flops"],
+        "coll_bytes_per_device": coll["total_bytes"],
+        "compile_seconds": round(compile_s, 1),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--variants", default="baseline")
+    ap.add_argument("--out", default="experiments/perf")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    names = args.variants.split(",")
+    print(f"{'variant':26s} {'compute_s':>10s} {'memory_s':>10s} {'coll_s':>10s} "
+          f"{'hbm_GB':>8s} {'dominant':>10s}")
+    for name in names:
+        r = measure(args.arch, args.shape, VARIANTS[name])
+        terms = {"compute": r["compute_term_s"], "memory": r["memory_term_s"],
+                 "collective": r["collective_term_s"]}
+        dom = max(terms, key=terms.get)
+        r["dominant"] = dom
+        with open(os.path.join(
+                args.out, f"{args.arch}__{args.shape}__{name}.json"), "w") as f:
+            json.dump(r, f, indent=1)
+        print(f"{name:26s} {r['compute_term_s']:10.3e} {r['memory_term_s']:10.3e} "
+              f"{r['collective_term_s']:10.3e} {r['hbm_gb']:8.2f} {dom:>10s}",
+              flush=True)
+
+
+if __name__ == "__main__":
+    main()

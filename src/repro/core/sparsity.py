@@ -1,0 +1,116 @@
+"""HiNM mask construction — jit-friendly jnp implementations.
+
+All functions operate on a *saliency* array `sal` of the same shape as the
+weight (higher = more important) and return boolean keep-masks. They are the
+single source of truth for the sparsity pattern; packing, the Pallas kernels
+and the training-time masked-dense path are all validated against them.
+
+Layout convention: weights are (n_out, n_in); column-wise V x 1 vectors run
+along the output-channel axis (axis 0), N:M groups run along the
+input-channel axis (axis 1) over the *kept* columns in their current order.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import HiNMConfig
+
+
+def nm_mask(sal: jax.Array, n: int = 2, m: int = 4, axis: int = -1) -> jax.Array:
+    """Keep-mask for N:M sparsity along `axis` (top-N of every M group)."""
+    if sal.shape[axis] % m != 0:
+        raise ValueError(f"axis size {sal.shape[axis]} % M={m} != 0")
+    sal = jnp.moveaxis(sal, axis, -1)
+    shape = sal.shape
+    g = sal.reshape(shape[:-1] + (shape[-1] // m, m))
+    # rank within each group, descending saliency; keep rank < n
+    order = jnp.argsort(g, axis=-1, descending=True)
+    ranks = jnp.argsort(order, axis=-1)
+    mask = (ranks < n).reshape(shape)
+    return jnp.moveaxis(mask, -1, axis)
+
+
+def vector_scores(sal: jax.Array, v: int) -> jax.Array:
+    """(n_out, n_in) -> (T, n_in): per-tile column-vector saliency sums.
+
+    Accumulated in f32 so the vector selection is invariant to the storage
+    dtype (bf16 sums would reorder near-tied columns)."""
+    n_out, n_in = sal.shape
+    return sal.astype(jnp.float32).reshape(n_out // v, v, n_in).sum(axis=1)
+
+
+def vector_mask(sal: jax.Array, cfg: HiNMConfig) -> jax.Array:
+    """Keep-mask for per-tile top-K column-vector pruning. (n_out, n_in)."""
+    n_out, n_in = sal.shape
+    cfg.validate_shape(n_out, n_in)
+    k = cfg.kept_columns(n_in)
+    scores = vector_scores(sal, cfg.v)                      # (T, n_in)
+    order = jnp.argsort(scores, axis=-1, descending=True)
+    ranks = jnp.argsort(order, axis=-1)
+    keep_cols = ranks < k                                    # (T, n_in)
+    return jnp.repeat(keep_cols, cfg.v, axis=0)
+
+
+def kept_column_ids(sal: jax.Array, cfg: HiNMConfig) -> jax.Array:
+    """(T, K) ids of kept columns per tile, in ascending column order.
+
+    Stable: among kept columns the original ordering is preserved, which is
+    what the 'no permutation' baseline uses as its N:M grouping order.
+    """
+    n_out, n_in = sal.shape
+    k = cfg.kept_columns(n_in)
+    scores = vector_scores(sal, cfg.v)                      # (T, n_in)
+    order = jnp.argsort(scores, axis=-1, descending=True)
+    ranks = jnp.argsort(order, axis=-1)
+    keep = ranks < k
+    col_ids = jnp.broadcast_to(jnp.arange(n_in), scores.shape)
+    # sort key: dropped columns pushed to the end, kept stay in column order
+    key = jnp.where(keep, col_ids, n_in + col_ids)
+    return jnp.sort(key, axis=-1)[:, :k].astype(jnp.int32)
+
+
+def hinm_mask_from_columns(
+    sal: jax.Array, col_ids: jax.Array, cfg: HiNMConfig
+) -> jax.Array:
+    """HiNM keep-mask given an explicit per-tile kept-column order.
+
+    `col_ids` (T, K) defines both which columns survive vector pruning and
+    the order in which they are grouped into M-groups for N:M pruning (the
+    ICP degree of freedom). Returns a (n_out, n_in) boolean mask.
+    """
+    n_out, n_in = sal.shape
+    t = cfg.num_tiles(n_out)
+    k = col_ids.shape[-1]
+    sal_t = sal.reshape(t, cfg.v, n_in)
+    gathered = jnp.take_along_axis(sal_t, col_ids[:, None, :], axis=2)  # (T,V,K)
+    nm = nm_mask(gathered, cfg.n, cfg.m, axis=-1)                       # (T,V,K)
+    full = jnp.zeros((t, cfg.v, n_in), dtype=bool)
+    full = jax.vmap(lambda f, m_, c: f.at[:, c].set(m_))(full, nm, col_ids)
+    return full.reshape(n_out, n_in)
+
+
+def hinm_mask(sal: jax.Array, cfg: HiNMConfig) -> jax.Array:
+    """HiNM keep-mask in the current layout (no permutation search)."""
+    return hinm_mask_from_columns(sal, kept_column_ids(sal, cfg), cfg)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def retained_saliency(sal: jax.Array, cfg: HiNMConfig) -> jax.Array:
+    """||M . rho|| for the current layout — the objective of Eq. (1)."""
+    return jnp.sum(sal * hinm_mask(sal, cfg))
+
+
+def unstructured_mask(sal: jax.Array, sparsity: float) -> jax.Array:
+    """Global magnitude top-k keep-mask (the paper's 'Unstructured')."""
+    total = sal.size
+    keep = max(1, int(round(total * (1.0 - sparsity))))
+    flat = sal.reshape(-1)
+    thresh = jax.lax.top_k(flat, keep)[0][-1]
+    return (sal >= thresh).reshape(sal.shape)
+
+
+def apply_mask(w: jax.Array, mask: jax.Array) -> jax.Array:
+    return w * mask.astype(w.dtype)

@@ -1,0 +1,317 @@
+"""Path-based sharding rules (MaxText-style logical axes, resolved with
+divisibility checks so every assigned architecture maps onto the fixed
+(16, 16) / (2, 16, 16) production meshes without manual per-arch tables).
+
+Axis roles:
+  dp    : batch — ('pod', 'data') on the multi-pod mesh, ('data',) otherwise
+  fsdp  : parameter sharding over 'data' (ZeRO-3 style; gathered on use by
+          XLA SPMD). Pod axis intentionally excluded: across pods we run
+          pure DP (params replicated per pod, gradients all-reduced over
+          'pod' + 'data'), matching the ICI/DCI bandwidth hierarchy.
+  tp    : tensor parallel over 'model'
+  heads : tp, but only when the head count divides the axis (GQA models
+          with few KV heads fall back to unsharded weights — attention then
+          runs data-parallel while the FFN keeps full TP)
+  ep    : expert parallel over 'model' when n_experts divides it, else
+          experts stay TP inside each expert
+
+Every role silently degrades to replication when the dim is not divisible
+by the target axis — the rule engine never produces an invalid spec.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.types import PackedHiNM
+
+
+def batch_axes(mesh: Mesh) -> tuple[str, ...]:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name]
+
+
+def _fits(dim: int, mesh: Mesh, axis) -> bool:
+    if axis is None:
+        return False
+    if isinstance(axis, tuple):
+        n = int(np.prod([_axis_size(mesh, a) for a in axis]))
+    else:
+        n = _axis_size(mesh, axis)
+    return dim % n == 0 and dim >= n
+
+
+def _resolve(role, dim: int, mesh: Mesh, cfg) -> Any:
+    """role -> mesh axis name (or None), honouring divisibility."""
+    if role is None:
+        return None
+    if role == "dp":
+        ax = batch_axes(mesh)
+        ax = ax if len(ax) > 1 else ax[0]
+        return ax if _fits(dim, mesh, ax) else None
+    if role == "fsdp":
+        if (cfg is not None and getattr(cfg, "fsdp_pods", False)
+                and "pod" in mesh.axis_names and _fits(dim, mesh, ("data", "pod"))):
+            return ("data", "pod")
+        return "data" if _fits(dim, mesh, "data") else None
+    if role == "tp":
+        return "model" if _fits(dim, mesh, "model") else None
+    if role == "heads":
+        return "model" if _fits(dim, mesh, "model") else None
+    if role == "ep":
+        return "model" if _fits(dim, mesh, "model") else None
+    raise ValueError(role)
+
+
+def _packed_spec(shape: tuple[int, ...], mesh: Mesh, cfg, field: str):
+    """Specs for PackedHiNM array fields (layer-stacking dim already
+    stripped by the caller). Tile dim T gets TP — tiles are independent
+    (DESIGN.md §2). An expert-leading dim takes EP instead when it divides
+    'model'."""
+    ndim = len(shape)
+    if field in ("vals", "nm_idx"):
+        t_axis = ndim - 3
+    else:  # vec_idx
+        t_axis = ndim - 2
+    spec = [None] * ndim
+    if t_axis > 0 and _fits(shape[0], mesh, "model"):  # expert dim EP
+        spec[0] = "model"
+        if _fits(shape[-1], mesh, "data"):
+            spec[-1] = "data"
+        return P(*spec)
+    # tiles are independent: prefer sharding T over BOTH axes (outputs are
+    # tile-local, so no weight gather is ever needed); fall back to
+    # T x model + trailing-dim x data (FSDP-style, gathered on use)
+    from repro.perf_knobs import KNOBS
+
+    if KNOBS.packed_t_axes == "both" and _fits(shape[t_axis], mesh, ("model", "data")):
+        spec[t_axis] = ("model", "data")
+    elif _fits(shape[t_axis], mesh, "model"):
+        spec[t_axis] = "model"
+        if KNOBS.packed_t_axes != "model_only" and _fits(shape[-1], mesh, "data"):
+            spec[-1] = "data"
+    return P(*spec)
+
+
+def _rule_for(path: str, shape: tuple[int, ...], mesh: Mesh, cfg):
+    """Return role tuple for a dense param leaf."""
+    nd = len(shape)
+    seg = path.split("/")
+    key = seg[-1]
+    parent = seg[-2] if len(seg) > 1 else ""
+
+    def roles(*rs):
+        return tuple(rs)
+
+    if key == "table":
+        from repro.perf_knobs import KNOBS
+
+        # feature-sharded: the token gather's output is naturally
+        # (batch, 'model')-sharded; vocab-sharding forces SPMD to fully
+        # rematerialise the (B*S, D) gather output (§Perf iteration 1)
+        if KNOBS.embed_feature_shard:
+            return roles(None, "tp")
+        return roles("tp", "fsdp")
+    if key in ("scale",) or (key == "bias" and nd == 1 and parent.startswith("ln")):
+        return (None,) * nd
+    if key == "lam":
+        return roles("tp")
+    if key == "conv":
+        return roles(None, "tp")
+    if key == "r":
+        return (None,) * nd
+    if key == "b":
+        base = (None,) * (nd - 1)
+        # bias shards like its weight's output dim
+        if parent in ("wq",):
+            return base + ("heads" if cfg and cfg.n_heads % _axis_size(mesh, "model") == 0 else None,)
+        if parent in ("wk", "wv"):
+            return base + ("heads" if cfg and cfg.n_kv_heads % _axis_size(mesh, "model") == 0 else None,)
+        if parent in ("wo", "wd", "wout"):
+            return base + (None,)
+        return base + ("tp",)
+    if key != "w":
+        return (None,) * nd
+
+    # weight matrices: stored (n_in, n_out); expert stacks (E, n_in, n_out)
+    lead = ()
+    if nd == 3:  # expert stack
+        if cfg and cfg.n_experts and _fits(shape[0], mesh, "model"):
+            return ("ep", "fsdp", None)
+        lead = (None,)
+    if parent in ("wq",):
+        out_role = "heads" if cfg and cfg.n_heads % _axis_size(mesh, "model") == 0 else None
+        return lead + ("fsdp", out_role)
+    if parent in ("wk", "wv"):
+        out_role = "heads" if cfg and cfg.n_kv_heads % _axis_size(mesh, "model") == 0 else None
+        return lead + ("fsdp", out_role)
+    if parent == "wo":
+        in_role = "heads" if cfg and cfg.n_heads % _axis_size(mesh, "model") == 0 else None
+        return lead + (in_role, "fsdp")
+    if parent in ("wd", "wout"):
+        return lead + ("tp", "fsdp")
+    if parent == "router":
+        return lead + (None, None)
+    if parent == "lm_head":
+        return lead + ("fsdp", "tp")
+    # default projection: shard output dim TP, input dim FSDP
+    return lead + ("fsdp", "tp")
+
+
+def _spec_for_leaf(path: str, leaf, mesh: Mesh, cfg) -> P:
+    shape = tuple(leaf.shape)
+    roles = _rule_for(path, shape, mesh, cfg)
+    resolved = []
+    used = set()
+    for role, dim in zip(roles, shape):
+        ax = _resolve(role, dim, mesh, cfg)
+        # an axis may appear at most once in a spec
+        if ax is not None and not isinstance(ax, tuple) and ax in used:
+            ax = None
+        if isinstance(ax, tuple) and any(a in used for a in ax):
+            ax = None
+        if ax is not None:
+            used.update(ax if isinstance(ax, tuple) else (ax,))
+        resolved.append(ax)
+    # scan-stacked layer leading dim: roles computed for the layer shape
+    return P(*resolved)
+
+
+def param_specs(params, mesh: Mesh, cfg=None):
+    """Pytree of PartitionSpec matching `params` (arrays or ShapeDtypeStructs).
+
+    Scan-stacked leading dims (n_layers / pattern stacks) are detected by
+    comparing path depth: any leaf under 'blocks'/'stacks'/'enc'/'dec' has a
+    leading layer axis that is never sharded.
+    """
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    specs = []
+    for pathkeys, leaf in flat:
+        path = "/".join(_key_str(k) for k in pathkeys)
+        stacked = any(s in path.split("/") for s in ("blocks", "enc", "dec", "stacks"))
+        field = path.split("/")[-1]
+        if field in ("vals", "vec_idx", "nm_idx"):
+            inner_shape = tuple(leaf.shape[1:]) if stacked else tuple(leaf.shape)
+            spec = _packed_spec(inner_shape, mesh, cfg, field)
+            if stacked:
+                spec = P(*((None,) + tuple(spec)))
+            specs.append(spec)
+            continue
+        if stacked:
+            # strip the layer axis, rule on the per-layer shape, re-prepend
+            inner = jax.ShapeDtypeStruct(leaf.shape[1:], leaf.dtype)
+            spec = _spec_for_leaf(path, inner, mesh, cfg)
+            spec = P(*((None,) + tuple(spec)))
+        else:
+            spec = _spec_for_leaf(path, leaf, mesh, cfg)
+        specs.append(spec)
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def _key_str(k) -> str:
+    if hasattr(k, "key"):
+        return str(k.key)
+    if hasattr(k, "name"):  # GetAttrKey (registered dataclass fields)
+        return str(k.name)
+    if hasattr(k, "idx"):
+        return str(k.idx)
+    return str(k).lstrip(".")
+
+
+def opt_state_specs(opt_state, pspecs):
+    """Specs for optimizer state given param specs.
+
+    AdamW: mu/nu mirror params. Adafactor: vr drops the last dim's axis,
+    vc drops the second-to-last. count: replicated."""
+    if "mu" in opt_state:
+        return {
+            "mu": pspecs,
+            "nu": pspecs,
+            "count": P(),
+        }
+
+    def fact(spec_leaf, state_leaf):
+        spec = tuple(spec_leaf)
+        if isinstance(state_leaf, dict) and "vr" in state_leaf:
+            return {
+                "vr": P(*spec[:-1]) if len(spec) > 1 else P(),
+                "vc": P(*(spec[:-2] + spec[-1:])) if len(spec) > 1 else P(),
+            }
+        return {"v": P(*spec)}
+
+    v = jax.tree.map(
+        fact, pspecs, opt_state["v"],
+        is_leaf=lambda x: isinstance(x, P),
+    )
+    return {"v": v, "count": P()}
+
+
+def batch_specs(batch, mesh: Mesh):
+    """Input batch: shard the leading (global batch) dim over dp axes."""
+    dp = batch_axes(mesh)
+    dp = dp if len(dp) > 1 else dp[0]
+
+    def f(leaf):
+        if leaf.ndim == 0:
+            return P()
+        if _fits(leaf.shape[0], mesh, dp):
+            return P(dp, *([None] * (leaf.ndim - 1)))
+        return P(*([None] * leaf.ndim))
+
+    return jax.tree.map(f, batch)
+
+
+def cache_specs(cache, mesh: Mesh, cfg=None):
+    """Decode-cache sharding: batch over dp; KV heads over 'model' when
+    divisible, else the sequence (slot) dim over 'model'; recurrent states
+    shard their feature dim over 'model'."""
+    dp = batch_axes(mesh)
+    dp = dp if len(dp) > 1 else dp[0]
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache)
+    specs = []
+    for pathkeys, leaf in flat:
+        path = "/".join(_key_str(k) for k in pathkeys)
+        name = path.split("/")[-1]
+        nd = leaf.ndim
+        if name in ("k", "v") and nd == 5:  # (L, B, S, KV, hd)
+            from repro.perf_knobs import KNOBS
+
+            sp = [None] * 5
+            if _fits(leaf.shape[1], mesh, dp):
+                sp[1] = dp
+            if (not KNOBS.decode_seq_shard) and _fits(leaf.shape[3], mesh, "model"):
+                sp[3] = "model"
+            elif _fits(leaf.shape[2], mesh, "model"):
+                sp[2] = "model"
+            specs.append(P(*sp))
+        elif name in ("pos", "kpos"):
+            specs.append(P(*([None] * nd)))
+        elif name == "enc_out" and nd == 3:  # (B, T, D)
+            sp = [None] * 3
+            if _fits(leaf.shape[0], mesh, dp):
+                sp[0] = dp
+            specs.append(P(*sp))
+        else:
+            # recurrent states: (L, B, feat...) — batch over dp, last dim tp
+            sp = [None] * nd
+            if nd >= 2 and _fits(leaf.shape[1], mesh, dp):
+                sp[1] = dp
+            if nd >= 3 and _fits(leaf.shape[-1], mesh, "model"):
+                sp[-1] = "model"
+            specs.append(P(*sp))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def to_named(tree_specs, mesh: Mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        tree_specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )

@@ -1,0 +1,111 @@
+"""Pallas TPU kernel: HiNM sparse matmul  y = x @ W_packed^T.
+
+TPU adaptation of the paper's SpMM (DESIGN.md §2, §5). Per grid cell
+(one output tile x one batch block):
+
+  1. *Indexed gather* — the tile's `vec_idx` row (VMEM, int32) selects the
+     K kept input channels out of the (n_in, Bblk) activation block resident
+     in VMEM. This is the TPU analogue of the paper's global->shared indexed
+     load: a permuted `vec_idx` (the ICP order) costs exactly the same as an
+     identity one, so the runtime input-channel reorder is free.
+  2. *In-VMEM N:M decompression* — packed values (V, Kn) are expanded
+     against their 2-bit slot indices to a dense (V, K) tile with a
+     one-hot-compare contraction on the VPU (the STC-metadata equivalent;
+     TPU has no sparse MXU so the N:M level buys bandwidth, not FLOPs).
+  3. *Dense MXU contraction* — (V, K) @ (K, Bblk) accumulated in f32.
+
+Layouts: activations enter as xT (n_in, B) so the gather runs on the
+sublane axis; outputs leave as (n_out, B) with rows in packed (OCP) order.
+
+VMEM budget per cell (defaults V=32, Bblk=256, bf16):
+  xT block n_in*Bblk*2  (e.g. 5120*256*2 = 2.5 MiB)
+  gather   K*Bblk*4     (f32 working copy, 2.5 MiB at K=n/2)
+  weights  V*K*4 + decompress transient V*K*2  (~1 MiB)
+comfortably inside 16 MiB VMEM with double buffering.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BBLK = 256
+VMEM_BUDGET_BYTES = 8 * 1024 * 1024  # conservative half of v5e VMEM
+
+
+def _kernel(x_ref, vals_ref, nm_ref, idx_ref, out_ref, *, nn: int, mm: int):
+    idx = idx_ref[0]                                  # (K,) int32
+    xg = jnp.take(x_ref[...], idx, axis=0)            # (K, Bblk) sublane gather
+    vals = vals_ref[0]                                # (V, Kn)
+    slots = nm_ref[0].astype(jnp.int32)               # (V, Kn)
+    v, kn = vals.shape
+    g = kn // nn
+    v4 = vals.reshape(v, g, nn)
+    s4 = slots.reshape(v, g, nn)
+    iota = jax.lax.broadcasted_iota(jnp.int32, (v, g, nn, mm), 3)
+    w = (v4[..., None] * (iota == s4[..., None]).astype(vals.dtype)).sum(axis=2)
+    w = w.reshape(v, g * mm)                          # (V, K) dense tile
+    acc = jax.lax.dot_general(
+        w.astype(jnp.float32),
+        xg.astype(jnp.float32),
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    out_ref[...] = acc.astype(out_ref.dtype)
+
+
+def pick_bblk(n_in: int, k: int, b: int, itemsize: int = 2) -> int:
+    """Largest batch block keeping the VMEM working set under budget."""
+    bblk = DEFAULT_BBLK
+    while bblk > 8:
+        ws = n_in * bblk * itemsize + k * bblk * 4 + 4 * k * 32
+        if ws <= VMEM_BUDGET_BYTES:
+            break
+        bblk //= 2
+    return max(8, min(bblk, max(8, b)))
+
+
+@functools.partial(
+    jax.jit, static_argnames=("nn", "mm", "bblk", "interpret", "out_dtype")
+)
+def hinm_spmm(
+    x_t: jax.Array,       # (n_in, B) activations, transposed
+    vals: jax.Array,      # (T, V, Kn)
+    nm_idx: jax.Array,    # (T, V, Kn) int8
+    vec_idx: jax.Array,   # (T, K) int32
+    *,
+    nn: int = 2,
+    mm: int = 4,
+    bblk: int | None = None,
+    interpret: bool = False,
+    out_dtype=None,
+) -> jax.Array:
+    """Returns y_t (n_out, B) = W_packed @ x, rows in packed order."""
+    n_in, b = x_t.shape
+    t, v, kn = vals.shape
+    k = vec_idx.shape[-1]
+    if kn != k // mm * nn:
+        raise ValueError(f"Kn={kn} inconsistent with K={k}, {nn}:{mm}")
+    out_dtype = out_dtype or x_t.dtype
+    bblk = bblk or pick_bblk(n_in, k, b, jnp.dtype(x_t.dtype).itemsize)
+    if b % bblk != 0:
+        pad = bblk - b % bblk
+        x_t = jnp.pad(x_t, ((0, 0), (0, pad)))
+    bp = x_t.shape[1]
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, nn=nn, mm=mm),
+        grid=(t, bp // bblk),
+        in_specs=[
+            pl.BlockSpec((n_in, bblk), lambda i, j: (0, j)),
+            pl.BlockSpec((1, v, kn), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, v, kn), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, k), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((v, bblk), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((t * v, bp), out_dtype),
+        interpret=interpret,
+    )(x_t, vals, nm_idx, vec_idx)
+    return out[:, :b]

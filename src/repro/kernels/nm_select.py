@@ -1,0 +1,66 @@
+"""Pallas TPU kernel: fused N:M magnitude select (training-time pruning).
+
+Keeps the top-N-of-each-M group along the last axis by |w| and zeroes the
+rest, in one VMEM pass. Used by the gradual-pruning train step, where the
+mask is recomputed from the live weights every pruning interval.
+
+Rank computation is an O(M^2) compare-reduce (M is 4): rank_i = #{j :
+|w_j| > |w_i|  or  (|w_j| == |w_i| and j < i)} — sort-free, VPU-friendly,
+and bit-exact against the argsort-based oracle in ref.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(w_ref, out_ref, *, nn: int, mm: int):
+    w = w_ref[...]                                     # (Rblk, Cblk)
+    r, c = w.shape
+    g = w.reshape(r, c // mm, mm)
+    mag = jnp.abs(g)
+    a = mag[..., :, None]                              # (R, G, M, 1) self
+    b = mag[..., None, :]                              # (R, G, 1, M) other
+    ii = jax.lax.broadcasted_iota(jnp.int32, (r, c // mm, mm, mm), 2)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (r, c // mm, mm, mm), 3)
+    beats = (b > a) | ((b == a) & (jj < ii))
+    rank = beats.sum(axis=3)                           # (R, G, M)
+    keep = rank < nn
+    out_ref[...] = jnp.where(keep, g, 0).reshape(r, c)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("nn", "mm", "rblk", "cblk", "interpret")
+)
+def nm_select(
+    w: jax.Array,
+    *,
+    nn: int = 2,
+    mm: int = 4,
+    rblk: int = 256,
+    cblk: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """Top-N-of-M select along the last axis of a 2-D array."""
+    rows, cols = w.shape
+    if cols % mm != 0:
+        raise ValueError(f"cols={cols} % M={mm} != 0")
+    rblk = min(rblk, rows)
+    cblk = min(cblk, cols)
+    # block must hold whole M-groups
+    cblk = max(mm, (cblk // mm) * mm)
+    if rows % rblk != 0 or cols % cblk != 0:
+        # fall back to one row/col block if shapes don't tile evenly
+        rblk = rows if rows % rblk else rblk
+        cblk = cols if cols % cblk else cblk
+    return pl.pallas_call(
+        functools.partial(_kernel, nn=nn, mm=mm),
+        grid=(rows // rblk, cols // cblk),
+        in_specs=[pl.BlockSpec((rblk, cblk), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((rblk, cblk), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((rows, cols), w.dtype),
+        interpret=interpret,
+    )(w)

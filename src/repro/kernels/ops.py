@@ -1,0 +1,75 @@
+"""Public jit'd wrappers around the Pallas kernels, with CPU routing.
+
+`backend="auto"` uses the Pallas kernel on TPU and the XLA fast-path
+formulation elsewhere (same dataflow, so CPU tests and dry-run HLO remain
+representative). `backend="interpret"` forces the Pallas kernel in
+interpret mode — the correctness-validation path exercised by tests.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import PackedHiNM
+from repro.kernels import hinm_spmm as _spmm
+from repro.kernels import nm_select as _nmsel
+from repro.kernels import ref as _ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def hinm_matmul(
+    x: jax.Array,
+    p: PackedHiNM,
+    backend: str = "auto",
+    chunk_bytes: int | None = None,
+) -> jax.Array:
+    """y (..., n_out) = x (..., n_in) @ W_packed^T (rows in packed order)."""
+    lead = x.shape[:-1]
+    xb = x.reshape(-1, x.shape[-1])
+    if backend == "auto":
+        backend = "pallas" if _on_tpu() else "xla"
+    if backend == "xla":
+        from repro.perf_knobs import KNOBS
+
+        y = None
+        if KNOBS.packed_shard_map:
+            y = _ref.hinm_spmm_shard_map(xb, p)
+        if y is None:
+            y = _ref.hinm_spmm_xla(xb, p, chunk_bytes=chunk_bytes)
+    elif backend in ("pallas", "interpret"):
+        y_t = _spmm.hinm_spmm(
+            xb.T,
+            p.vals,
+            p.nm_idx,
+            p.vec_idx,
+            nn=p.config.n,
+            mm=p.config.m,
+            interpret=(backend == "interpret") or not _on_tpu(),
+            out_dtype=x.dtype,
+        )
+        y = y_t.T
+    elif backend == "oracle":
+        y = _ref.hinm_spmm_oracle(xb, p)
+    else:
+        raise ValueError(f"unknown backend {backend!r}")
+    return y.reshape(*lead, p.n_out)
+
+
+def nm_apply(w: jax.Array, nn: int = 2, mm: int = 4, backend: str = "auto") -> jax.Array:
+    """Apply N:M magnitude selection along the last axis (any leading dims)."""
+    lead = w.shape[:-1]
+    wb = w.reshape(-1, w.shape[-1])
+    if backend == "auto":
+        backend = "pallas" if _on_tpu() else "xla"
+    if backend == "xla":
+        out = _ref.nm_select_ref(wb, nn, mm)
+    elif backend in ("pallas", "interpret"):
+        out = _nmsel.nm_select(
+            wb, nn=nn, mm=mm, interpret=(backend == "interpret") or not _on_tpu()
+        )
+    else:
+        raise ValueError(f"unknown backend {backend!r}")
+    return out.reshape(*lead, w.shape[-1])

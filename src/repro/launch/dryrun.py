@@ -1,0 +1,105 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape)
+cell on the production meshes and record memory / cost / collective stats.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun                 # all cells, both meshes
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2_0_5b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --mesh single   # 16x16 only
+
+Results land in experiments/dryrun/<arch>__<shape>__<mesh>.json and a
+summary table is printed (consumed by EXPERIMENTS.md §Dry-run and the
+roofline harness).
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+
+def main() -> None:
+    import jax  # deferred: device count is locked at first jax import
+
+    from repro.configs.base import ARCH_IDS, SHAPES, load_arch
+    from repro.launch import cells as cell_lib
+    from repro.launch import hlo_stats
+    from repro.launch.mesh import make_production_mesh
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all", help="arch id or 'all'")
+    ap.add_argument("--shape", default="all", help="shape name or 'all'")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--collectives", action="store_true",
+                    help="also parse per-kind collective bytes from the HLO")
+    args = ap.parse_args()
+
+    archs = list(ARCH_IDS) if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = []
+    if args.mesh in ("single", "both"):
+        meshes.append(("single_pod_16x16", make_production_mesh(multi_pod=False)))
+    if args.mesh in ("multi", "both"):
+        meshes.append(("multi_pod_2x16x16", make_production_mesh(multi_pod=True)))
+
+    os.makedirs(args.out, exist_ok=True)
+    rows = []
+    failures = 0
+    for arch in archs:
+        cfg = load_arch(arch)
+        for shape in shapes:
+            for mesh_name, mesh in meshes:
+                tag = f"{arch}__{shape}__{mesh_name}"
+                t0 = time.time()
+                try:
+                    cell = cell_lib.build_cell(cfg, shape, mesh)
+                    if cell.skipped:
+                        rows.append((tag, "SKIP", cell.skipped))
+                        with open(os.path.join(args.out, tag + ".json"), "w") as f:
+                            json.dump({"status": "skipped", "reason": cell.skipped,
+                                       "arch": arch, "shape": shape,
+                                       "mesh": mesh_name}, f, indent=1)
+                        print(f"[SKIP] {tag}: {cell.skipped}", flush=True)
+                        continue
+                    lowered = cell_lib.lower_cell(cell, mesh)
+                    compiled = lowered.compile()
+                    stats = hlo_stats.cost_summary(compiled)
+                    if args.collectives:
+                        stats["collectives"] = hlo_stats.collective_bytes(
+                            compiled.as_text()
+                        )
+                    stats.update(
+                        status="ok", arch=arch, shape=shape, mesh=mesh_name,
+                        kind=cell.kind, devices=int(mesh.devices.size),
+                        compile_seconds=round(time.time() - t0, 1),
+                    )
+                    with open(os.path.join(args.out, tag + ".json"), "w") as f:
+                        json.dump(stats, f, indent=1)
+                    hbm = (stats["argument_bytes"] + stats["temp_bytes"]
+                           + stats["output_bytes"] - stats["alias_bytes"]) / 1e9
+                    rows.append((tag, "OK",
+                                 f"hbm={hbm:.2f}GB flops/dev={stats['flops_per_device']/1e12:.2f}T "
+                                 f"({stats['compile_seconds']}s)"))
+                    print(f"[OK]   {tag}: {rows[-1][2]}", flush=True)
+                except Exception as e:  # noqa: BLE001 - report and continue
+                    failures += 1
+                    rows.append((tag, "FAIL", repr(e)))
+                    with open(os.path.join(args.out, tag + ".json"), "w") as f:
+                        json.dump({"status": "failed", "error": traceback.format_exc(),
+                                   "arch": arch, "shape": shape, "mesh": mesh_name},
+                                  f, indent=1)
+                    print(f"[FAIL] {tag}: {e!r}", flush=True)
+
+    print("\n=== dry-run summary ===")
+    ok = sum(1 for _, s, _ in rows if s == "OK")
+    sk = sum(1 for _, s, _ in rows if s == "SKIP")
+    print(f"{ok} ok / {sk} skipped / {failures} failed / {len(rows)} cells")
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,106 @@
+"""Extract roofline inputs from compiled dry-run artifacts.
+
+- FLOPs / bytes from compiled.cost_analysis()  (caveat: XLA counts a while
+  loop body ONCE; the roofline harness corrects via layer-unrolled cost
+  probes — see benchmarks/roofline.py).
+- Collective bytes by parsing the compiled HLO text: sum of operand sizes
+  of all-gather / all-reduce / reduce-scatter / all-to-all /
+  collective-permute ops, with while-loop trip-count attribution handled by
+  the caller.
+"""
+from __future__ import annotations
+
+import re
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1,
+    "u64": 8, "u32": 4, "u16": 2, "u8": 1,
+    "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+
+def shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum output-shape bytes per collective kind over the module text.
+
+    Output shape is used (for all-gather it is the post-gather size = bytes
+    received per device; for all-reduce it equals the tensor size, the
+    standard 2(n-1)/n factor is applied by the roofline model, not here).
+    """
+    out: dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    counts: dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        m = re.match(r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|\S+)\s+([\w\-]+)\(", ls)
+        if not m:
+            continue
+        op = m.group(2)
+        base = op.replace("-start", "").replace("-done", "")
+        if base in _COLLECTIVES and not op.endswith("-done"):
+            out[base] += shape_bytes(m.group(1))
+            counts[base] += 1
+    return {"bytes": out, "counts": counts,
+            "total_bytes": sum(out.values())}
+
+
+def collective_bytes_nested(hlo_text: str, loop_trips: int) -> dict:
+    """Collective bytes with while-body scaling.
+
+    HLO text lists one computation per block; collectives inside non-ENTRY
+    computations sit in some loop body (layer scan, microbatch loop, ...)
+    and are scaled by `loop_trips` (the dominant layer-loop trip count).
+    This is exact for the layer scan and an upper bound for collectives in
+    shorter loops (xent chunks); ENTRY-level collectives count once.
+    """
+    out = {k: 0.0 for k in _COLLECTIVES}
+    in_entry = False
+    for line in hlo_text.splitlines():
+        if line.startswith("ENTRY"):
+            in_entry = True
+            continue
+        if line and not line[0].isspace() and line.rstrip().endswith("{"):
+            in_entry = False
+            continue
+        ls = line.strip()
+        m = re.match(r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|\S+)\s+([\w\-]+)\(", ls)
+        if not m:
+            continue
+        op = m.group(2)
+        base = op.replace("-start", "").replace("-done", "")
+        if base in _COLLECTIVES and not op.endswith("-done"):
+            scale = 1.0 if in_entry else float(loop_trips)
+            out[base] += shape_bytes(m.group(1)) * scale
+    return {"bytes": out, "total_bytes": sum(out.values())}
+
+
+def cost_summary(compiled) -> dict:
+    ca = compiled.cost_analysis()
+    ma = compiled.memory_analysis()
+    return {
+        "flops_per_device": float(ca.get("flops", 0.0)),
+        "bytes_accessed_per_device": float(ca.get("bytes accessed", 0.0)),
+        "argument_bytes": int(ma.argument_size_in_bytes),
+        "output_bytes": int(ma.output_size_in_bytes),
+        "temp_bytes": int(ma.temp_size_in_bytes),
+        "alias_bytes": int(ma.alias_size_in_bytes),
+    }

@@ -1,0 +1,180 @@
+"""Encoder-decoder transformer (seamless-m4t backbone).
+
+The speech frontend is a stub per the assignment: `input_specs()` provides
+precomputed frame embeddings (B, T_enc, D) straight into the encoder.
+Decoder layers: causal self-attention (RoPE) + cross-attention to the
+encoder output (no positional rotation) + FFN.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import module as nn
+from repro.models.module import PruneSpec
+
+
+def init_enc_layer(key, cfg):
+    ks = nn.split_keys(key, 2)
+    return {
+        "ln1": L.norm_init(cfg),
+        "attn": L.attention_init(ks[0], cfg),
+        "ln2": L.norm_init(cfg),
+        "mlp": L.mlp_init(ks[1], cfg),
+    }
+
+
+def init_dec_layer(key, cfg):
+    ks = nn.split_keys(key, 3)
+    return {
+        "ln1": L.norm_init(cfg),
+        "attn": L.attention_init(ks[0], cfg),
+        "ln_x": L.norm_init(cfg),
+        "xattn": L.attention_init(ks[1], cfg),
+        "ln2": L.norm_init(cfg),
+        "mlp": L.mlp_init(ks[2], cfg),
+    }
+
+
+def init(key, cfg):
+    n_enc = cfg.n_enc_layers or cfg.n_layers
+    ks = nn.split_keys(key, n_enc + cfg.n_layers + 3)
+    enc = [init_enc_layer(ks[i], cfg) for i in range(n_enc)]
+    dec = [init_dec_layer(ks[n_enc + i], cfg) for i in range(cfg.n_layers)]
+    return {
+        "frontend_proj": nn.dense_init(ks[-3], cfg.d_model, cfg.d_model, cfg.dtype),
+        "embed": nn.embed_init(ks[-2], cfg.vocab_padded, cfg.d_model, cfg.dtype),
+        "enc": jax.tree.map(lambda *xs: jnp.stack(xs), *enc),
+        "dec": jax.tree.map(lambda *xs: jnp.stack(xs), *dec),
+        "ln_enc": L.norm_init(cfg),
+        "ln_f": L.norm_init(cfg),
+        "lm_head": nn.dense_init(ks[-1], cfg.d_model, cfg.vocab_padded, cfg.dtype),
+    }
+
+
+def _cross_attention(params, x, enc_out, cfg):
+    """Standard cross-attention: queries from x, keys/values from enc_out."""
+    b, s, _ = x.shape
+    t = enc_out.shape[1]
+    h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = nn.linear(params["wq"], x).reshape(b, s, h, hd)
+    k = nn.linear(params["wk"], enc_out).reshape(b, t, kvh, hd)
+    v = nn.linear(params["wv"], enc_out).reshape(b, t, kvh, hd)
+    qp = jnp.zeros((b, s), jnp.int32)
+    kp = jnp.zeros((b, t), jnp.int32)
+    out = L._attn_chunked(q, k, v, qp, kp, causal=False, window=0)
+    return nn.linear(params["wo"], out.reshape(b, s, h * hd))
+
+
+def encode(params, cfg, frames: jax.Array, remat: bool = True):
+    """frames: (B, T, D) stub embeddings -> encoder output (B, T, D)."""
+    x = nn.linear(params["frontend_proj"], frames.astype(cfg.dtype))
+    b, t, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32), (b, t))
+
+    def body(carry, lp):
+        x = nn.constrain_batch(carry)
+        h, _ = L.attention(lp["attn"], L.norm(lp["ln1"], x, cfg), positions, cfg,
+                           bidirectional=True)
+        x = x + h
+        x = x + L.mlp(lp["mlp"], L.norm(lp["ln2"], x, cfg), cfg)
+        return x, None
+
+    from repro.models import probe_mode
+
+    probing = probe_mode.enabled()
+    fn = jax.checkpoint(body) if (remat and not probing) else body
+    x, _ = jax.lax.scan(fn, x, params["enc"], unroll=True if probing else 1)
+    return L.norm(params["ln_enc"], x, cfg)
+
+
+def _dec_stack(params, cfg, x, positions, enc_out, caches=None, remat: bool = True):
+    def body(carry, layer):
+        x = nn.constrain_batch(carry)
+        lp, lc = layer if caches is not None else (layer, None)
+        h, nc = L.attention(lp["attn"], L.norm(lp["ln1"], x, cfg), positions, cfg, lc)
+        x = x + h
+        x = x + _cross_attention(lp["xattn"], L.norm(lp["ln_x"], x, cfg), enc_out, cfg)
+        x = x + L.mlp(lp["mlp"], L.norm(lp["ln2"], x, cfg), cfg)
+        return x, nc
+
+    from repro.models import probe_mode
+
+    probing = probe_mode.enabled()
+    fn = jax.checkpoint(body) if (remat and not probing) else body
+    xs = params["dec"] if caches is None else (params["dec"], caches)
+    return jax.lax.scan(fn, x, xs, unroll=True if probing else 1)
+
+
+def forward(params, cfg, tokens, embeds=None, remat: bool = True):
+    """Training: embeds = frame stub (B, T_enc, D); tokens = decoder input."""
+    if embeds is None:
+        raise ValueError("enc-dec forward requires frontend frame embeddings")
+    enc_out = encode(params, cfg, embeds, remat=remat)
+    x = nn.embed(params["embed"], tokens)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x, _ = _dec_stack(params, cfg, x, positions, enc_out, remat=remat)
+    return L.norm(params["ln_f"], x, cfg)
+
+
+def logits_fn(params, x):
+    return nn.linear(params["lm_head"], x)
+
+
+def make_cache(cfg, batch: int, max_seq: int, dtype=None, t_enc: int | None = None):
+    dtype = dtype or cfg.dtype
+    t_enc = t_enc or max_seq
+    return {
+        "self": {
+            "k": jnp.zeros((cfg.n_layers, batch, max_seq, cfg.n_kv_heads, cfg.head_dim), dtype),
+            "v": jnp.zeros((cfg.n_layers, batch, max_seq, cfg.n_kv_heads, cfg.head_dim), dtype),
+            "pos": jnp.zeros((cfg.n_layers,), jnp.int32),
+            "kpos": jnp.full((cfg.n_layers, max_seq), 2**30, jnp.int32),
+        },
+        "enc_out": jnp.zeros((batch, t_enc, cfg.d_model), dtype),
+    }
+
+
+def prefill(params, cfg, tokens, cache, embeds=None):
+    enc_out = encode(params, cfg, embeds) if embeds is not None else cache["enc_out"]
+    x = nn.embed(params["embed"], tokens)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x, new_self = _dec_stack(params, cfg, x, positions, enc_out, caches=cache["self"])
+    new_cache = {"self": new_self, "enc_out": enc_out}
+    return L.norm(params["ln_f"], x, cfg)[:, -1], new_cache
+
+
+def decode_step(params, cfg, tokens, cache):
+    x = nn.embed(params["embed"], tokens)
+    b = x.shape[0]
+    pos = cache["self"]["pos"][0]
+    positions = jnp.broadcast_to(pos.astype(jnp.int32), (b, 1))
+    x, new_self = _dec_stack(params, cfg, x, positions, cache["enc_out"], caches=cache["self"])
+    x = L.norm(params["ln_f"], x, cfg)
+    return logits_fn(params, x[:, 0]), {"self": new_self, "enc_out": cache["enc_out"]}
+
+
+def hinm_plan(cfg):
+    def attn_specs(prefix):
+        return [
+            PruneSpec(f"{prefix}/wq", can_permute_rows=False),
+            PruneSpec(f"{prefix}/wk", can_permute_rows=False),
+            PruneSpec(f"{prefix}/wv", row_blocks=cfg.n_kv_heads,
+                      consumers=(f"{prefix}/wo:gqa",)),
+            PruneSpec(f"{prefix}/wo", can_permute_rows=False),
+        ]
+
+    mlp_specs = [
+        PruneSpec("mlp/wg", tied=("mlp/wu",), consumers=("mlp/wd",)),
+        PruneSpec("mlp/wd", can_permute_rows=False),
+    ] if cfg.act == "swiglu" else [
+        PruneSpec("mlp/wu", consumers=("mlp/wd",)),
+        PruneSpec("mlp/wd", can_permute_rows=False),
+    ]
+    return {
+        "enc": attn_specs("attn") + mlp_specs,
+        "dec": attn_specs("attn") + attn_specs("xattn") + mlp_specs,
+    }

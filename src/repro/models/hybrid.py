@@ -1,0 +1,199 @@
+"""RecurrentGemma-style hybrid stack: pattern (rec, rec, attn) per period,
+each layer = temporal mixer + MLP (Griffin residual-block structure).
+
+Layers are grouped by pattern position into scan stacks (n_layers need not
+divide the pattern length — leftover layers run as a partial period), so
+HLO size stays depth-independent while allowing heterogeneous blocks.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import module as nn
+from repro.models import rglru
+from repro.models.module import PruneSpec
+
+
+def _layer_kinds(cfg) -> list[str]:
+    p = cfg.block_pattern or ("rec", "rec", "attn")
+    return [p[i % len(p)] for i in range(cfg.n_layers)]
+
+
+def init_layer(key, cfg, kind: str):
+    ks = nn.split_keys(key, 2)
+    if kind == "attn":
+        mixer = {"ln": L.norm_init(cfg), "attn": L.attention_init(ks[0], cfg)}
+    else:
+        mixer = rglru.rglru_block_init(ks[0], cfg)
+    return {"kind_" + kind: mixer, "ln_mlp": L.norm_init(cfg), "mlp": L.mlp_init(ks[1], cfg)}
+
+
+def apply_layer(params, cfg, kind, x, positions, cache=None):
+    x = nn.constrain_batch(x)
+    if kind == "attn":
+        m = params["kind_attn"]
+        h, new_cache = L.attention(m["attn"], L.norm(m["ln"], x, cfg), positions, cfg, cache)
+        x = x + h
+    else:
+        x, new_cache = rglru.rglru_block(params["kind_rec"], cfg, x, cache)
+    x = x + L.mlp(params["mlp"], L.norm(params["ln_mlp"], x, cfg), cfg)
+    return x, new_cache
+
+
+def _group(cfg):
+    """Pattern-position grouping: returns (kinds, counts, full_periods)."""
+    kinds = _layer_kinds(cfg)
+    plen = len(cfg.block_pattern or ("rec", "rec", "attn"))
+    counts = [len([i for i in range(cfg.n_layers) if i % plen == j]) for j in range(plen)]
+    return kinds, counts, min(counts)
+
+
+def init(key, cfg):
+    kinds, counts, _ = _group(cfg)
+    plen = len(counts)
+    ks = nn.split_keys(key, cfg.n_layers + 2)
+    stacks = []
+    for j in range(plen):
+        idxs = [i for i in range(cfg.n_layers) if i % plen == j]
+        layer_params = [init_layer(ks[i], cfg, kinds[i]) for i in idxs]
+        stacks.append(jax.tree.map(lambda *xs: jnp.stack(xs), *layer_params))
+    return {
+        "embed": nn.embed_init(ks[-2], cfg.vocab_padded, cfg.d_model, cfg.dtype),
+        "stacks": stacks,
+        "ln_f": L.norm_init(cfg),
+        "lm_head": nn.dense_init(ks[-1], cfg.d_model, cfg.vocab_padded, cfg.dtype),
+    }
+
+
+def _run_stack(params, cfg, x, positions, caches=None, remat: bool = True):
+    kinds, counts, n_full = _group(cfg)
+    plen = len(counts)
+    pattern = (cfg.block_pattern or ("rec", "rec", "attn"))
+
+    def period(carry, layer_slices):
+        x = carry
+        new_caches = []
+        for j in range(plen):
+            lp = layer_slices[2 * j]
+            lc = layer_slices[2 * j + 1]
+            x, nc = apply_layer(lp, cfg, pattern[j], x, positions, lc)
+            new_caches.append(nc)
+        return x, tuple(new_caches)
+
+    from repro.models import probe_mode
+
+    probing = probe_mode.enabled()
+    fn = jax.checkpoint(period) if (remat and not probing) else period
+    xs = []
+    for j in range(plen):
+        sl = jax.tree.map(lambda a: a[:n_full], params["stacks"][j])
+        cl = None if caches is None else jax.tree.map(lambda a: a[:n_full], caches[j])
+        xs += [sl, cl]
+    x, scanned_caches = jax.lax.scan(fn, x, tuple(xs), unroll=True if probing else 1)
+
+    new_caches = list(scanned_caches) if caches is not None else [None] * plen
+    # leftover partial period
+    for j in range(plen):
+        if counts[j] > n_full:
+            lp = jax.tree.map(lambda a: a[n_full], params["stacks"][j])
+            lc = None if caches is None else jax.tree.map(lambda a: a[n_full], caches[j])
+            x, nc = apply_layer(lp, cfg, pattern[j], x, positions, lc)
+            if caches is not None:
+                new_caches[j] = jax.tree.map(
+                    lambda s, one: jnp.concatenate([s, one[None]], axis=0),
+                    new_caches[j], nc,
+                )
+    return x, (tuple(new_caches) if caches is not None else None)
+
+
+def forward(params, cfg, tokens, embeds=None, remat: bool = True):
+    x = nn.embed(params["embed"], tokens)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x, _ = _run_stack(params, cfg, x, positions, remat=remat)
+    return L.norm(params["ln_f"], x, cfg)
+
+
+def logits_fn(params, x):
+    return nn.linear(params["lm_head"], x)
+
+
+def make_cache(cfg, batch: int, max_seq: int, dtype=None):
+    dtype = dtype or cfg.dtype
+    kinds, counts, _ = _group(cfg)
+    plen = len(counts)
+    pattern = cfg.block_pattern or ("rec", "rec", "attn")
+    r = cfg.rglru_dim or cfg.d_model
+    win = min(cfg.window or max_seq, max_seq)
+    caches = []
+    for j in range(plen):
+        n = counts[j]
+        if pattern[j] == "attn":
+            caches.append({
+                "k": jnp.zeros((n, batch, win, cfg.n_kv_heads, cfg.head_dim), dtype),
+                "v": jnp.zeros((n, batch, win, cfg.n_kv_heads, cfg.head_dim), dtype),
+                "pos": jnp.zeros((n,), jnp.int32),
+                "kpos": jnp.full((n, win), 2**30, jnp.int32),
+            })
+        else:
+            caches.append({
+                "h": jnp.zeros((n, batch, r), jnp.float32),
+                "conv": jnp.zeros((n, batch, rglru.CONV_K - 1, r), dtype),
+            })
+    return tuple(caches)
+
+
+def prefill(params, cfg, tokens, cache, embeds=None):
+    x = nn.embed(params["embed"], tokens)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x, new_cache = _run_stack(params, cfg, x, positions, caches=cache)
+    return L.norm(params["ln_f"], x, cfg)[:, -1], new_cache
+
+
+def decode_step(params, cfg, tokens, cache):
+    x = nn.embed(params["embed"], tokens)
+    b = x.shape[0]
+    # decode position comes from the first attention stack's pos counter
+    pattern = cfg.block_pattern or ("rec", "rec", "attn")
+    attn_j = pattern.index("attn")
+    pos = cache[attn_j]["pos"][0]
+    positions = jnp.broadcast_to(pos.astype(jnp.int32), (b, 1))
+    x, new_cache = _run_stack(params, cfg, x, positions, caches=cache)
+    x = L.norm(params["ln_f"], x, cfg)
+    return logits_fn(params, x[:, 0]), new_cache
+
+
+def hinm_plan(cfg) -> list[PruneSpec]:
+    """Plan is resolved per pattern-position stack by the pruning walker."""
+    plans = {}
+    pattern = cfg.block_pattern or ("rec", "rec", "attn")
+    for j, kind in enumerate(pattern):
+        specs = []
+        if kind == "attn":
+            specs += [
+                PruneSpec("kind_attn/attn/wq", can_permute_rows=False),
+                PruneSpec("kind_attn/attn/wk", can_permute_rows=False),
+                PruneSpec("kind_attn/attn/wv", row_blocks=cfg.n_kv_heads,
+                          consumers=("kind_attn/attn/wo:gqa",)),
+                PruneSpec("kind_attn/attn/wo", can_permute_rows=False),
+            ]
+        else:
+            specs += [
+                PruneSpec("kind_rec/" + s.path, can_permute_rows=False)
+                for s in rglru.rglru_plan_specs()
+            ]
+        if cfg.act == "swiglu":
+            specs += [
+                PruneSpec("mlp/wg", tied=("mlp/wu",), consumers=("mlp/wd",)),
+                PruneSpec("mlp/wd", can_permute_rows=False),
+            ]
+        else:
+            specs += [
+                PruneSpec("mlp/wu", consumers=("mlp/wd",)),
+                PruneSpec("mlp/wd", can_permute_rows=False),
+            ]
+        plans[j] = specs
+    return plans

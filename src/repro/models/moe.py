@@ -1,0 +1,108 @@
+"""Top-k MoE FFN with capacity-based sort-free dispatch.
+
+Dispatch is the scatter/gather formulation (static shapes, EP/TP-shardable):
+tokens are routed to a fixed-capacity (E, C, D) buffer via one-hot position
+assignment computed with cumsum over expert one-hots — no (B,S,E,C) GShard
+dispatch tensor is ever materialised. Tokens overflowing an expert's
+capacity are dropped (standard Switch behaviour); capacity_factor controls
+the drop rate.
+
+Expert weights are stacked (E, d_in, d_out). Sharding: experts go
+expert-parallel over 'model' when E divides the axis, otherwise
+tensor-parallel inside each expert over d_ff (see distributed/sharding.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import module as nn
+
+
+def moe_init(key, cfg):
+    e, d, f = cfg.n_experts, cfg.d_model, cfg.d_ff
+    ks = nn.split_keys(key, 4)
+
+    def stack_init(k, n_in, n_out):
+        keys = nn.split_keys(k, e)
+        return {"w": jnp.stack([nn.uniform_init(kk, n_in, n_out, cfg.dtype) for kk in keys])}
+
+    return {
+        "router": nn.dense_init(ks[0], d, e, jnp.float32),
+        "wg": stack_init(ks[1], d, f),
+        "wu": stack_init(ks[2], d, f),
+        "wd": stack_init(ks[3], f, d),
+    }
+
+
+def _expert_linear(p, x):
+    """x: (E, C, d_in) @ w: (E, d_in, d_out) -> (E, C, d_out)."""
+    from repro.core.types import PackedHiNM
+    from repro.kernels import ops as kops
+
+    w = p["w"]
+    if isinstance(w, PackedHiNM):
+        # per-expert packed weights (array fields carry a leading E axis);
+        # the vmap multiplies the tile-chunk transient by E, so shrink the
+        # per-call chunk budget accordingly
+        e = x.shape[0]
+        cb = max(1 << 20, 256 * 1024 * 1024 // (8 * e))
+        return jax.vmap(lambda pe, xe: kops.hinm_matmul(xe, pe, chunk_bytes=cb))(w, x)
+    return jnp.einsum("ecd,edf->ecf", x, w.astype(x.dtype))
+
+
+def moe_apply(params, x: jax.Array, cfg, capacity_factor: float = 1.25) -> jax.Array:
+    """x: (B, S, D) -> (B, S, D)."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    nt = b * s
+    xf = x.reshape(nt, d)
+
+    logits = nn.linear(params["router"], xf.astype(jnp.float32))     # (N, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    topv, topi = jax.lax.top_k(probs, k)                              # (N, k)
+    topv = topv / jnp.maximum(topv.sum(-1, keepdims=True), 1e-9)
+
+    cap = int(nt * k * capacity_factor / e)
+    cap = max(8, ((cap + 7) // 8) * 8)
+
+    # position of each (token, slot) within its expert queue
+    onehot = jax.nn.one_hot(topi, e, dtype=jnp.int32)                 # (N, k, E)
+    flat = onehot.reshape(nt * k, e)
+    pos_in_e = jnp.cumsum(flat, axis=0) - flat                        # (N*k, E)
+    pos = (pos_in_e * flat).sum(-1).reshape(nt, k)                    # (N, k)
+    keep = pos < cap
+    eid = topi
+
+    # scatter tokens into (E, C, D); token-capacity dim stays data-parallel
+    buf = jnp.zeros((e, cap, d), x.dtype)
+    tok_ids = jnp.broadcast_to(jnp.arange(nt)[:, None], (nt, k))
+    flat_eid = jnp.where(keep, eid, 0).reshape(-1)
+    flat_pos = jnp.where(keep, pos, cap - 1).reshape(-1)  # dropped -> overwritten slot
+    flat_keep = keep.reshape(-1)
+    src = jnp.where(flat_keep[:, None], xf[tok_ids.reshape(-1)], 0).astype(x.dtype)
+    buf = buf.at[flat_eid, flat_pos].add(src * flat_keep[:, None].astype(x.dtype))
+    buf = nn.constrain(buf, (None, "dp", None))
+
+    # expert FFN (swiglu); hidden stays (capacity x dp, d_ff x tp)
+    gate = jax.nn.silu(_expert_linear(params["wg"], buf).astype(jnp.float32))
+    up = _expert_linear(params["wu"], buf).astype(jnp.float32)
+    hidden = nn.constrain((gate * up).astype(x.dtype), (None, "dp", "tp"))
+    out_buf = _expert_linear(params["wd"], hidden)          # (E, C, D)
+    out_buf = nn.constrain(out_buf, (None, "dp", None))
+
+    # gather back with routing weights
+    gathered = out_buf[flat_eid, flat_pos]                             # (N*k, D)
+    gathered = gathered * (topv.reshape(-1, 1) * flat_keep[:, None]).astype(gathered.dtype)
+    y = gathered.reshape(nt, k, d).sum(axis=1)
+    return y.reshape(b, s, d)
+
+
+def aux_load_balance_loss(params, x: jax.Array, cfg) -> jax.Array:
+    """Switch-style load-balance auxiliary loss (mean fraction * mean prob)."""
+    b, s, d = x.shape
+    logits = nn.linear(params["router"], x.reshape(-1, d).astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    top1 = jnp.argmax(probs, axis=-1)
+    frac = jnp.mean(jax.nn.one_hot(top1, cfg.n_experts, dtype=jnp.float32), axis=0)
+    return cfg.n_experts * jnp.sum(frac * probs.mean(axis=0))

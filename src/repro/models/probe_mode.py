@@ -1,0 +1,30 @@
+"""Cost-probe mode: globally switches model internals from memory-efficient
+loops (lax.scan / lax.map) to unrolled/one-shot forms so that XLA's
+cost_analysis counts every FLOP (a while-loop body is otherwise counted
+ONCE regardless of trip count).
+
+Used only by the roofline harness, which compiles small-depth probe
+configs in this mode and extrapolates linearly in depth (and sequence
+length for time-recurrent archs). Never enabled at runtime — the unrolled
+forms would blow past HBM.
+"""
+from __future__ import annotations
+
+import contextlib
+
+_ENABLED = False
+
+
+def enabled() -> bool:
+    return _ENABLED
+
+
+@contextlib.contextmanager
+def cost_probe():
+    global _ENABLED
+    prev = _ENABLED
+    _ENABLED = True
+    try:
+        yield
+    finally:
+        _ENABLED = prev

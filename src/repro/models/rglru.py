@@ -1,0 +1,103 @@
+"""RecurrentGemma / Griffin-style hybrid: RG-LRU recurrent blocks
+interleaved with local (sliding-window) attention, pattern (rec, rec, attn).
+
+RG-LRU (Griffin, arXiv:2402.19427): a diagonal gated linear recurrence
+  r_t = sigmoid(W_a x_t),  i_t = sigmoid(W_x x_t)
+  a_t = a^(c * r_t)            (a = sigmoid(Lambda), per-channel)
+  h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+computed with an associative scan over time (sub-quadratic; the reason
+this arch runs the long_500k decode cell).
+
+The recurrence block wraps the RG-LRU with in/out projections and a short
+depthwise temporal conv, following Griffin's recurrent block. The diagonal
+gate parameters (Lambda, conv filters) are per-channel vectors — not
+matmuls — and are exempt from HiNM (DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import module as nn
+from repro.models.module import PruneSpec
+
+C_SCALE = 8.0
+CONV_K = 4
+
+
+def rglru_block_init(key, cfg):
+    d, r = cfg.d_model, cfg.rglru_dim or cfg.d_model
+    ks = nn.split_keys(key, 5)
+    return {
+        "ln": L.norm_init(cfg),
+        "win": nn.dense_init(ks[0], d, r, cfg.dtype),       # input branch
+        "wgate": nn.dense_init(ks[1], d, r, cfg.dtype),     # multiplicative branch
+        "conv": jax.random.normal(ks[2], (CONV_K, r), cfg.dtype) * 0.02,
+        "wa": nn.dense_init(ks[3], r, r, cfg.dtype),        # recurrence gate
+        "wx": nn.dense_init(ks[4], r, r, cfg.dtype),        # input gate
+        "lam": jnp.full((r,), 2.0, jnp.float32),            # a = sigmoid(lam)
+        "wout": nn.dense_init(nn.split_keys(key, 6)[5], r, d, cfg.dtype),
+    }
+
+
+def _rglru_scan(x: jax.Array, a_t: jax.Array, h0: jax.Array):
+    """h_t = a_t * h_{t-1} + x_t via associative scan. x,a_t: (B,S,R)."""
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, b1 * a2 + b2
+
+    a_seq, b_seq = jax.lax.associative_scan(combine, (a_t, x), axis=1)
+    return a_seq * h0[:, None, :] + b_seq
+
+
+def rglru_block(params, cfg, x, cache=None):
+    """x: (B, S, D); cache: {"h": (B,R), "conv": (B,CONV_K-1,R)} or None."""
+    inp = L.norm(params["ln"], x, cfg)
+    u = nn.linear(params["win"], inp)                        # (B,S,R)
+    gate_branch = jax.nn.gelu(nn.linear(params["wgate"], inp).astype(jnp.float32))
+
+    # short causal depthwise conv over time
+    if cache is None:
+        pad = jnp.zeros((u.shape[0], CONV_K - 1, u.shape[2]), u.dtype)
+        hist = jnp.concatenate([pad, u], axis=1)
+        conv_prev = None
+    else:
+        hist = jnp.concatenate([cache["conv"].astype(u.dtype), u], axis=1)
+        conv_prev = hist[:, -(CONV_K - 1):, :]
+    w = params["conv"].astype(jnp.float32)
+    uc = sum(
+        hist[:, i : i + u.shape[1], :].astype(jnp.float32) * w[i]
+        for i in range(CONV_K)
+    )
+
+    r = jax.nn.sigmoid(nn.linear(params["wa"], uc.astype(u.dtype)).astype(jnp.float32))
+    i = jax.nn.sigmoid(nn.linear(params["wx"], uc.astype(u.dtype)).astype(jnp.float32))
+    log_a = -C_SCALE * jax.nn.softplus(-params["lam"]) * r   # log a_t <= 0
+    a_t = jnp.exp(log_a)
+    gated_x = jnp.sqrt(jnp.maximum(1.0 - a_t**2, 1e-9)) * (i * uc.astype(jnp.float32))
+
+    h0 = cache["h"].astype(jnp.float32) if cache is not None else jnp.zeros(
+        (u.shape[0], u.shape[2]), jnp.float32
+    )
+    h = _rglru_scan(gated_x, a_t, h0)                        # (B,S,R)
+    out = (h * gate_branch).astype(x.dtype)
+    y = nn.linear(params["wout"], out)
+    new_cache = None
+    if cache is not None:
+        new_cache = {"h": h[:, -1, :], "conv": conv_prev.astype(cache["conv"].dtype)}
+    return x + y, new_cache
+
+
+def rglru_plan_specs(prefix: str = "") -> list[PruneSpec]:
+    # The R channels are threaded through per-channel gates (lam, conv) and
+    # an elementwise product of two branches — permuting any projection's
+    # rows would require rewriting all of them plus the vector params, so
+    # the recurrent block is ICP-only (OCP identity). See DESIGN.md §6.
+    p = prefix
+    return [
+        PruneSpec(f"{p}{name}", can_permute_rows=False)
+        for name in ("win", "wgate", "wa", "wx", "wout")
+    ]

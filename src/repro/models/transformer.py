@@ -1,0 +1,163 @@
+"""Decoder-only transformer (covers qwen2.5-14b, starcoder2-15b, qwen2-0.5b,
+codeqwen1.5-7b, and the phi-3-vision / MoE backbones).
+
+Layer stack is scan-compatible: params are stacked over the layer dimension
+and the forward pass runs `jax.lax.scan` over layers (with optional remat),
+keeping HLO size independent of depth — essential for the 48-64L dry-runs.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import module as nn
+from repro.models.module import PruneSpec
+
+
+def init_block(key, cfg):
+    ks = nn.split_keys(key, 2)
+    p = {
+        "ln1": L.norm_init(cfg),
+        "attn": L.attention_init(ks[0], cfg),
+        "ln2": L.norm_init(cfg),
+    }
+    if cfg.family == "moe":
+        from repro.models import moe
+
+        p["moe"] = moe.moe_init(ks[1], cfg)
+    else:
+        p["mlp"] = L.mlp_init(ks[1], cfg)
+    return p
+
+
+def block(params, cfg, x, positions, cache=None):
+    x = nn.constrain_batch(x)
+    h, new_cache = L.attention(params["attn"], L.norm(params["ln1"], x, cfg), positions, cfg, cache)
+    x = x + h
+    if cfg.family == "moe":
+        from repro.models import moe
+
+        x = x + moe.moe_apply(params["moe"], L.norm(params["ln2"], x, cfg), cfg)
+    else:
+        x = x + L.mlp(params["mlp"], L.norm(params["ln2"], x, cfg), cfg)
+    return x, new_cache
+
+
+def init(key, cfg):
+    ks = nn.split_keys(key, cfg.n_layers + 3)
+    blocks = [init_block(ks[i], cfg) for i in range(cfg.n_layers)]
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *blocks)
+    p = {
+        "embed": nn.embed_init(ks[-3], cfg.vocab_padded, cfg.d_model, cfg.dtype),
+        "blocks": stacked,
+        "ln_f": L.norm_init(cfg),
+        "lm_head": nn.dense_init(ks[-1], cfg.d_model, cfg.vocab_padded, cfg.dtype),
+    }
+    return p
+
+
+def _scan_blocks(params, cfg, x, positions, caches=None, remat: bool = True):
+    """Scan over stacked layer params (and stacked caches on decode)."""
+
+    def body(carry, layer):
+        if caches is None:
+            lp = layer
+            y, _ = block(lp, cfg, carry, positions, None)
+            return y, None
+        lp, lc = layer
+        y, nc = block(lp, cfg, carry, positions, lc)
+        return y, nc
+
+    from repro.models import probe_mode
+
+    probing = probe_mode.enabled()
+    fn = jax.checkpoint(body) if (remat and not probing) else body
+    xs = params["blocks"] if caches is None else (params["blocks"], caches)
+    x, new_caches = jax.lax.scan(fn, x, xs, unroll=True if probing else 1)
+    return x, new_caches
+
+
+def embed_inputs(params, cfg, tokens, embeds=None):
+    """Token embedding; `embeds` (B, P, D) is the modality-frontend stub
+    (precomputed patch/frame embeddings) prepended for vlm configs."""
+    x = nn.embed(params["embed"], tokens)
+    if embeds is not None:
+        x = jnp.concatenate([embeds.astype(x.dtype), x], axis=1)
+    return nn.constrain_batch(x)
+
+
+def forward(params, cfg, tokens, embeds=None, remat: bool = True):
+    """Training/eval forward: logits (B, S_total, vocab_padded)."""
+    x = embed_inputs(params, cfg, tokens, embeds)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x, _ = _scan_blocks(params, cfg, x, positions, remat=remat)
+    x = L.norm(params["ln_f"], x, cfg)
+    return x  # pre-logits; loss computes the vocab projection chunked
+
+
+def logits_fn(params, x):
+    return nn.linear(params["lm_head"], x)
+
+
+def make_cache(cfg, batch: int, max_seq: int, dtype=None):
+    dtype = dtype or cfg.dtype
+    kv = {
+        "k": jnp.zeros((cfg.n_layers, batch, max_seq, cfg.n_kv_heads, cfg.head_dim), dtype),
+        "v": jnp.zeros((cfg.n_layers, batch, max_seq, cfg.n_kv_heads, cfg.head_dim), dtype),
+        "pos": jnp.zeros((cfg.n_layers,), jnp.int32),
+        "kpos": jnp.full((cfg.n_layers, max_seq), 2**30, jnp.int32),
+    }
+    return kv
+
+
+def prefill(params, cfg, tokens, cache, embeds=None):
+    """Fill the KV cache; returns (last-token pre-logits (B, D), cache)."""
+    x = embed_inputs(params, cfg, tokens, embeds)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x, new_cache = _scan_blocks(params, cfg, x, positions, caches=cache)
+    x = L.norm(params["ln_f"], x, cfg)
+    return x[:, -1], new_cache
+
+
+def decode_step(params, cfg, tokens, cache):
+    """One decode step. tokens (B, 1); returns (logits (B, vocab), cache)."""
+    x = nn.embed(params["embed"], tokens)
+    b = x.shape[0]
+    pos = cache["pos"][0]
+    positions = jnp.broadcast_to(pos.astype(jnp.int32), (b, 1))
+    x, new_cache = _scan_blocks(params, cfg, x, positions, caches=cache)
+    x = L.norm(params["ln_f"], x, cfg)
+    return logits_fn(params, x[:, 0]), new_cache
+
+
+def hinm_plan(cfg) -> list[PruneSpec]:
+    """Prunable projections per layer (paper: attention + FFN linears)."""
+    specs = [
+        PruneSpec("attn/wq", can_permute_rows=False),
+        PruneSpec("attn/wk", can_permute_rows=False),
+        PruneSpec(
+            "attn/wv",
+            row_blocks=cfg.n_kv_heads,
+            consumers=("attn/wo:gqa",),
+        ),
+        PruneSpec("attn/wo", can_permute_rows=False),
+    ]
+    prefix = "moe" if cfg.family == "moe" else "mlp"
+    if cfg.act == "swiglu":
+        # gate/up rows are elementwise-coupled -> one shared OCP perm,
+        # folded into wd's columns (free at runtime via its vec_idx).
+        specs += [
+            PruneSpec(f"{prefix}/wg", tied=(f"{prefix}/wu",), consumers=(f"{prefix}/wd",)),
+            PruneSpec(f"{prefix}/wd", can_permute_rows=False),
+        ]
+    else:
+        specs += [
+            PruneSpec(f"{prefix}/wu", consumers=(f"{prefix}/wd",)),
+            PruneSpec(f"{prefix}/wd", can_permute_rows=False),
+        ]
+    return specs

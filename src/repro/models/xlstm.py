@@ -1,0 +1,191 @@
+"""xLSTM (arXiv:2405.04517): alternating mLSTM and sLSTM blocks.
+
+mLSTM — matrix-memory LSTM with exponential gating:
+  C_t = f_t * C_{t-1} + i_t * (v_t k_t^T);  n_t = f_t * n_{t-1} + i_t * k_t
+  h_t = (C_t q_t) / max(|n_t^T q_t|, 1)
+per head, with stabilised exponential input gates. Parallelisable over the
+sequence via a cumulative-log-gate formulation (implemented with an
+associative scan over the per-step log f); this is the block we run for
+long_500k decode (state is O(d_k * d_v), not O(S)).
+
+sLSTM — scalar-memory LSTM with block-diagonal recurrent weights (one block
+per head) and exponential gating; inherently sequential, implemented with
+lax.scan over time.
+
+Projections (q/k/v/out, gate pre-activations) are HiNM-prunable; the
+per-channel gate/state parameters are not (DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import module as nn
+from repro.models.module import PruneSpec
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def mlstm_init(key, cfg):
+    d, h = cfg.d_model, cfg.n_heads
+    ks = nn.split_keys(key, 6)
+    return {
+        "ln": L.norm_init(cfg),
+        "wq": nn.dense_init(ks[0], d, d, cfg.dtype),
+        "wk": nn.dense_init(ks[1], d, d, cfg.dtype),
+        "wv": nn.dense_init(ks[2], d, d, cfg.dtype),
+        "wi": nn.dense_init(ks[3], d, h, cfg.dtype, bias=True),   # input gate (per head)
+        "wf": nn.dense_init(ks[4], d, h, cfg.dtype, bias=True),   # forget gate
+        "wo_gate": nn.dense_init(ks[5], d, d, cfg.dtype, bias=True),
+        "wout": nn.dense_init(nn.split_keys(key, 7)[6], d, d, cfg.dtype),
+    }
+
+
+def mlstm_block(params, cfg, x, cache=None):
+    """x: (B,S,D). cache: {"c": (B,H,dk,dv), "n": (B,H,dk), "m": (B,H)}."""
+    b, s, d = x.shape
+    h = cfg.n_heads
+    dk = d // h
+    inp = L.norm(params["ln"], x, cfg)
+    q = nn.linear(params["wq"], inp).reshape(b, s, h, dk)
+    k = nn.linear(params["wk"], inp).reshape(b, s, h, dk) * (dk ** -0.5)
+    v = nn.linear(params["wv"], inp).reshape(b, s, h, dk)
+    logi = nn.linear(params["wi"], inp).astype(jnp.float32)          # (B,S,H)
+    logf = jax.nn.log_sigmoid(nn.linear(params["wf"], inp).astype(jnp.float32))
+
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+
+    if cache is None:
+        c0 = jnp.zeros((b, h, dk, dk), jnp.float32)
+        n0 = jnp.zeros((b, h, dk), jnp.float32)
+        m0 = jnp.full((b, h), -1e30, jnp.float32)
+    else:
+        c0, n0, m0 = (cache["c"].astype(jnp.float32), cache["n"].astype(jnp.float32),
+                      cache["m"].astype(jnp.float32))
+
+    def step(carry, t):
+        c, n, m = carry
+        qi, ki, vi, ii, fi = t
+        m_new = jnp.maximum(fi + m, ii)                              # (B,H)
+        fg = jnp.exp(fi + m - m_new)[..., None]
+        ig = jnp.exp(ii - m_new)[..., None]
+        c = c * fg[..., None] + ig[..., None] * (ki[..., :, None] * vi[..., None, :])
+        n = n * fg + ig * ki
+        num = jnp.einsum("bhkv,bhk->bhv", c, qi)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, qi)), 1.0)
+        out = num / den[..., None]
+        return (c, n, m_new), out
+
+    # (S, B, H, dk) ordering for all per-step tensors
+    xs = (
+        jnp.einsum("bshk->sbhk", qf),
+        jnp.einsum("bshk->sbhk", kf),
+        jnp.einsum("bshk->sbhk", vf),
+        jnp.einsum("bsh->sbh", logi),
+        jnp.einsum("bsh->sbh", logf),
+    )
+    from repro.models import probe_mode
+
+    (c, n, m), outs = jax.lax.scan(step, (c0, n0, m0), xs,
+                                   unroll=True if probe_mode.enabled() else 1)
+    out = jnp.einsum("sbhv->bshv", outs).reshape(b, s, d)
+    gate = jax.nn.sigmoid(nn.linear(params["wo_gate"], inp).astype(jnp.float32))
+    y = nn.linear(params["wout"], (out * gate).astype(x.dtype))
+    new_cache = None
+    if cache is not None:
+        new_cache = {"c": c, "n": n, "m": m}
+    return x + y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def slstm_init(key, cfg):
+    d, h = cfg.d_model, cfg.n_heads
+    dh = d // h
+    ks = nn.split_keys(key, 6)
+    return {
+        "ln": L.norm_init(cfg),
+        "wz": nn.dense_init(ks[0], d, d, cfg.dtype, bias=True),
+        "wi": nn.dense_init(ks[1], d, d, cfg.dtype, bias=True),
+        "wf": nn.dense_init(ks[2], d, d, cfg.dtype, bias=True),
+        "wo": nn.dense_init(ks[3], d, d, cfg.dtype, bias=True),
+        # block-diagonal recurrent weights: (H, dh, dh) per gate
+        "r": jax.random.normal(ks[4], (4, h, dh, dh), cfg.dtype) * (dh ** -0.5),
+        "wout": nn.dense_init(ks[5], d, d, cfg.dtype),
+    }
+
+
+def slstm_block(params, cfg, x, cache=None):
+    """x: (B,S,D). cache: {"c","n","h","m": (B,D) / (B,H)}. Sequential scan."""
+    b, s, d = x.shape
+    h_heads = cfg.n_heads
+    dh = d // h_heads
+    inp = L.norm(params["ln"], x, cfg)
+    z_in = nn.linear(params["wz"], inp).astype(jnp.float32)
+    i_in = nn.linear(params["wi"], inp).astype(jnp.float32)
+    f_in = nn.linear(params["wf"], inp).astype(jnp.float32)
+    o_in = nn.linear(params["wo"], inp).astype(jnp.float32)
+    r = params["r"].astype(jnp.float32)                              # (4,H,dh,dh)
+
+    if cache is None:
+        c0 = jnp.zeros((b, d), jnp.float32)
+        n0 = jnp.ones((b, d), jnp.float32)
+        h0 = jnp.zeros((b, d), jnp.float32)
+        m0 = jnp.zeros((b, d), jnp.float32)
+    else:
+        c0, n0, h0, m0 = (cache[k].astype(jnp.float32) for k in ("c", "n", "h", "m"))
+
+    def rec(hprev):  # (B, D) -> per-gate recurrent contribution (4, B, D)
+        hh = hprev.reshape(b, h_heads, dh)
+        return jnp.einsum("bhi,ghio->gbho", hh, r).reshape(4, b, d)
+
+    def step(carry, t):
+        c, n, hprev, m = carry
+        zi, ii, fi, oi = t
+        rz, ri, rf, ro = rec(hprev)
+        z = jnp.tanh(zi + rz)
+        logf = jax.nn.log_sigmoid(fi + rf)
+        logi = ii + ri
+        m_new = jnp.maximum(logf + m, logi)
+        fg = jnp.exp(logf + m - m_new)
+        ig = jnp.exp(logi - m_new)
+        c = fg * c + ig * z
+        n = fg * n + ig
+        hv = jax.nn.sigmoid(oi + ro) * (c / jnp.maximum(n, 1.0))
+        return (c, n, hv, m_new), hv
+
+    xs = tuple(jnp.einsum("bsd->sbd", t) for t in (z_in, i_in, f_in, o_in))
+    from repro.models import probe_mode
+
+    (c, n, hv, m), outs = jax.lax.scan(step, (c0, n0, h0, m0), xs,
+                                       unroll=True if probe_mode.enabled() else 1)
+    out = jnp.einsum("sbd->bsd", outs).astype(x.dtype)
+    y = nn.linear(params["wout"], out)
+    new_cache = None
+    if cache is not None:
+        new_cache = {"c": c, "n": n, "h": hv, "m": m}
+    return x + y, new_cache
+
+
+def xlstm_plan_specs(kind: str) -> list[PruneSpec]:
+    if kind == "mlstm":
+        return [
+            PruneSpec("wq", can_permute_rows=False),
+            PruneSpec("wk", can_permute_rows=False),
+            PruneSpec("wv", can_permute_rows=False),
+            PruneSpec("wo_gate", can_permute_rows=False),
+            PruneSpec("wout", can_permute_rows=False),
+        ]
+    return [
+        PruneSpec(name, can_permute_rows=False)
+        for name in ("wz", "wi", "wf", "wo", "wout")
+    ]

@@ -1,0 +1,111 @@
+"""xLSTM-125m model: alternating (mLSTM, sLSTM) blocks, no separate FFN
+(the blocks carry their own projections; cfg.d_ff == 0)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import module as nn
+from repro.models import xlstm as X
+from repro.models.module import PruneSpec
+
+
+def _pattern(cfg):
+    return cfg.block_pattern or ("mlstm", "slstm")
+
+
+def init(key, cfg):
+    pattern = _pattern(cfg)
+    plen = len(pattern)
+    if cfg.n_layers % plen:
+        raise ValueError("xlstm n_layers must divide the block pattern")
+    n_p = cfg.n_layers // plen
+    ks = nn.split_keys(key, cfg.n_layers + 2)
+    stacks = []
+    for j, kind in enumerate(pattern):
+        init_fn = X.mlstm_init if kind == "mlstm" else X.slstm_init
+        layer_params = [init_fn(ks[p * plen + j], cfg) for p in range(n_p)]
+        stacks.append(jax.tree.map(lambda *xs: jnp.stack(xs), *layer_params))
+    return {
+        "embed": nn.embed_init(ks[-2], cfg.vocab_padded, cfg.d_model, cfg.dtype),
+        "stacks": stacks,
+        "ln_f": L.norm_init(cfg),
+        "lm_head": nn.dense_init(ks[-1], cfg.d_model, cfg.vocab_padded, cfg.dtype),
+    }
+
+
+def _run(params, cfg, x, caches=None, remat: bool = True):
+    pattern = _pattern(cfg)
+
+    def period(carry, slices):
+        x = nn.constrain_batch(carry)
+        outs = []
+        for j, kind in enumerate(pattern):
+            fn = X.mlstm_block if kind == "mlstm" else X.slstm_block
+            lc = None if caches is None else slices[2 * j + 1]
+            x, nc = fn(slices[2 * j], cfg, x, lc)
+            outs.append(nc)
+        return x, tuple(outs)
+
+    from repro.models import probe_mode
+
+    probing = probe_mode.enabled()
+    fn = jax.checkpoint(period) if (remat and not probing) else period
+    xs = []
+    for j in range(len(pattern)):
+        xs += [params["stacks"][j], None if caches is None else caches[j]]
+    x, new_caches = jax.lax.scan(fn, x, tuple(xs), unroll=True if probing else 1)
+    return x, (new_caches if caches is not None else None)
+
+
+def forward(params, cfg, tokens, embeds=None, remat: bool = True):
+    x = nn.embed(params["embed"], tokens)
+    x, _ = _run(params, cfg, x, remat=remat)
+    return L.norm(params["ln_f"], x, cfg)
+
+
+def logits_fn(params, x):
+    return nn.linear(params["lm_head"], x)
+
+
+def make_cache(cfg, batch: int, max_seq: int, dtype=None):
+    del max_seq  # state is O(1) in sequence length
+    pattern = _pattern(cfg)
+    n_p = cfg.n_layers // len(pattern)
+    d, h = cfg.d_model, cfg.n_heads
+    dk = d // h
+    caches = []
+    for kind in pattern:
+        if kind == "mlstm":
+            caches.append({
+                "c": jnp.zeros((n_p, batch, h, dk, dk), jnp.float32),
+                "n": jnp.zeros((n_p, batch, h, dk), jnp.float32),
+                "m": jnp.full((n_p, batch, h), -1e30, jnp.float32),
+            })
+        else:
+            caches.append({
+                "c": jnp.zeros((n_p, batch, d), jnp.float32),
+                "n": jnp.ones((n_p, batch, d), jnp.float32),
+                "h": jnp.zeros((n_p, batch, d), jnp.float32),
+                "m": jnp.zeros((n_p, batch, d), jnp.float32),
+            })
+    return tuple(caches)
+
+
+def prefill(params, cfg, tokens, cache, embeds=None):
+    x = nn.embed(params["embed"], tokens)
+    x, new_cache = _run(params, cfg, x, caches=cache)
+    return L.norm(params["ln_f"], x, cfg)[:, -1], new_cache
+
+
+def decode_step(params, cfg, tokens, cache):
+    x = nn.embed(params["embed"], tokens)
+    x, new_cache = _run(params, cfg, x, caches=cache)
+    x = L.norm(params["ln_f"], x, cfg)
+    return logits_fn(params, x[:, 0]), new_cache
+
+
+def hinm_plan(cfg):
+    pattern = _pattern(cfg)
+    return {j: X.xlstm_plan_specs(kind) for j, kind in enumerate(pattern)}

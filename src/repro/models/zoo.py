@@ -1,0 +1,53 @@
+"""Family dispatch: one uniform interface over all assigned architectures.
+
+  init(key, cfg)                          -> params
+  forward(params, cfg, batch...)          -> pre-logits (B, S, D)
+  logits_fn(params, x)                    -> vocab projection
+  make_cache(cfg, batch, max_seq)         -> decode cache pytree
+  prefill / decode_step                   -> serving
+  hinm_plan(cfg)                          -> prune specs (see pruning walker)
+"""
+from __future__ import annotations
+
+from repro.models import encdec, hybrid, transformer, xlstm_model
+
+_FAMILY = {
+    "dense": transformer,
+    "moe": transformer,
+    "vlm": transformer,
+    "hybrid": hybrid,
+    "ssm": xlstm_model,
+    "encdec": encdec,
+}
+
+
+def model_for(cfg):
+    return _FAMILY[cfg.family]
+
+
+def init(key, cfg):
+    return model_for(cfg).init(key, cfg)
+
+
+def forward(params, cfg, tokens, embeds=None, remat: bool = True):
+    return model_for(cfg).forward(params, cfg, tokens, embeds=embeds, remat=remat)
+
+
+def logits_fn(params, cfg, x):
+    return model_for(cfg).logits_fn(params, x)
+
+
+def make_cache(cfg, batch: int, max_seq: int, dtype=None, **kw):
+    return model_for(cfg).make_cache(cfg, batch, max_seq, dtype=dtype, **kw)
+
+
+def prefill(params, cfg, tokens, cache, embeds=None):
+    return model_for(cfg).prefill(params, cfg, tokens, cache, embeds=embeds)
+
+
+def decode_step(params, cfg, tokens, cache):
+    return model_for(cfg).decode_step(params, cfg, tokens, cache)
+
+
+def hinm_plan(cfg):
+    return model_for(cfg).hinm_plan(cfg)

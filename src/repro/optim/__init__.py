@@ -1,0 +1,19 @@
+from repro.optim.optimizers import (
+    adafactor_init,
+    adafactor_update,
+    adamw_init,
+    adamw_update,
+    clip_by_global_norm,
+    cosine_schedule,
+    make_optimizer,
+)
+
+__all__ = [
+    "adafactor_init",
+    "adafactor_update",
+    "adamw_init",
+    "adamw_update",
+    "clip_by_global_norm",
+    "cosine_schedule",
+    "make_optimizer",
+]

@@ -1,0 +1,44 @@
+"""Error-feedback top-k gradient compression for the DP all-reduce.
+
+At 1000+-node scale the data-parallel gradient all-reduce can dominate step
+time for small models / large DP degrees. We provide the standard
+EF-SGD/EF21-style compressor: each step, only the top-k fraction of gradient
+magnitudes (per leaf) is exchanged; the residual is carried in a local error
+buffer and added back before the next compression. Convergence-neutral at
+k >= ~1% in practice.
+
+The compressor runs *inside* the jit'd train step (the masked gradient is
+still all-reduced by XLA, but with (1-k) of entries zeroed, enabling
+sparse-friendly collective implementations; on TPU the win is realised via
+reduced-precision/structured all-reduce — we expose the hook and benchmark
+the bytes delta in benchmarks/compression_bench.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ef_topk_init(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def ef_topk_compress(grads, error, k_frac: float = 0.01):
+    """Returns (compressed_grads, new_error). Top-k by |g| per leaf."""
+
+    def one(g, e):
+        g32 = g.astype(jnp.float32) + e
+        flat = g32.reshape(-1)
+        k = max(1, int(flat.shape[0] * k_frac))
+        thresh = jax.lax.top_k(jnp.abs(flat), k)[0][-1]
+        mask = jnp.abs(g32) >= thresh
+        sent = jnp.where(mask, g32, 0.0)
+        return sent.astype(g.dtype), g32 - sent
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(error)
+    outs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (
+        jax.tree.unflatten(tdef, [o[0] for o in outs]),
+        jax.tree.unflatten(tdef, [o[1] for o in outs]),
+    )

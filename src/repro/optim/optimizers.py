@@ -1,0 +1,147 @@
+"""Optimizers (functional, pytree-based — no external deps).
+
+- AdamW with fp32 state and decoupled weight decay (default).
+- Adafactor (factored second moment, no first moment) for the very large
+  configs (grok-1) where AdamW state would not fit the per-device HBM
+  budget at 256 chips (DESIGN.md §3).
+- Global-norm clipping and cosine/linear-warmup schedules.
+
+Masked params (HiNM): the train step re-applies masks after the update, so
+optimizers stay mask-agnostic (pruned coordinates are re-zeroed at use time).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int) -> Callable:
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / jnp.maximum(warmup, 1)
+        frac = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+        cos = base_lr * 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warmup, warm, cos)
+
+    return lr
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), gn
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+
+def adamw_init(params):
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "mu": jax.tree.map(zeros, params),
+        "nu": jax.tree.map(zeros, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_update(
+    grads, state, params, lr, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1
+):
+    count = state["count"] + 1
+    c = count.astype(jnp.float32)
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_p = jax.tree.leaves(params)
+    flat_mu = jax.tree.leaves(state["mu"])
+    flat_nu = jax.tree.leaves(state["nu"])
+
+    new_mu, new_nu, new_p = [], [], []
+    for g, mu, nu, p in zip(flat_g, flat_mu, flat_nu, flat_p):
+        g32 = g.astype(jnp.float32)
+        mu = b1 * mu + (1 - b1) * g32
+        nu = b2 * nu + (1 - b2) * g32 * g32
+        mu_hat = mu / (1 - b1**c)
+        nu_hat = nu / (1 - b2**c)
+        step = mu_hat / (jnp.sqrt(nu_hat) + eps) + weight_decay * p.astype(jnp.float32)
+        new_mu.append(mu)
+        new_nu.append(nu)
+        new_p.append((p.astype(jnp.float32) - lr * step).astype(p.dtype))
+    return (
+        jax.tree.unflatten(tdef, new_p),
+        {
+            "mu": jax.tree.unflatten(tdef, new_mu),
+            "nu": jax.tree.unflatten(tdef, new_nu),
+            "count": count,
+        },
+    )
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (Shazeer & Stern, 2018) — factored second moments
+# ---------------------------------------------------------------------------
+
+
+def adafactor_init(params):
+    def f(p):
+        if p.ndim >= 2:
+            return {
+                "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+            }
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+    return {"v": jax.tree.map(f, params), "count": jnp.zeros((), jnp.int32)}
+
+
+def adafactor_update(grads, state, params, lr, decay=0.8, eps=1e-30, clip_thr=1.0):
+    count = state["count"] + 1
+    c = count.astype(jnp.float32)
+    beta = 1.0 - c ** (-decay)
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_p = jax.tree.leaves(params)
+    flat_v = tdef.flatten_up_to(state["v"])
+
+    new_v, new_p = [], []
+    for g, v, p in zip(flat_g, flat_v, flat_p):
+        g32 = g.astype(jnp.float32)
+        sq = g32 * g32 + eps
+        if p.ndim >= 2:
+            vr = beta * v["vr"] + (1 - beta) * sq.mean(axis=-1)
+            vc = beta * v["vc"] + (1 - beta) * sq.mean(axis=-2)
+            denom = vr.mean(axis=-1, keepdims=True)
+            prec = (vr / jnp.maximum(denom, eps))[..., None] * vc[..., None, :]
+            update = g32 * jax.lax.rsqrt(jnp.maximum(prec, eps))
+            nv = {"vr": vr, "vc": vc}
+        else:
+            nv = {"v": beta * v["v"] + (1 - beta) * sq}
+            update = g32 * jax.lax.rsqrt(jnp.maximum(nv["v"], eps))
+        rms = jnp.sqrt(jnp.mean(update * update) + 1e-12)
+        update = update / jnp.maximum(1.0, rms / clip_thr)
+        new_v.append(nv)
+        new_p.append((p.astype(jnp.float32) - lr * update).astype(p.dtype))
+    return (
+        jax.tree.unflatten(tdef, new_p),
+        {"v": jax.tree.unflatten(tdef, new_v), "count": count},
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable  # (grads, state, params, lr) -> (params, state)
+    name: str
+
+
+def make_optimizer(name: str) -> Optimizer:
+    if name == "adamw":
+        return Optimizer(adamw_init, adamw_update, "adamw")
+    if name == "adafactor":
+        return Optimizer(adafactor_init, adafactor_update, "adafactor")
+    raise ValueError(f"unknown optimizer {name!r}")

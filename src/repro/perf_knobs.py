@@ -1,0 +1,59 @@
+"""Performance-iteration knobs (EXPERIMENTS.md §Perf).
+
+Each knob selects between the paper-faithful/baseline realisation and a
+beyond-paper optimisation candidate. The roofline harness and perf scripts
+flip these per run so every hypothesis -> change -> measure cycle is a
+one-line diff; production defaults are set after the hillclimb.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+
+
+@dataclasses.dataclass
+class Knobs:
+    # Embedding table sharding: False = vocab-sharded ('model','data') —
+    # forces an involuntary resharding of the (B*S, D) gather output;
+    # True = feature-sharded (None,'model') — gather output lands directly
+    # in (dp, None, 'model') layout. (baseline: False; flipped by §Perf)
+    embed_feature_shard: bool = False
+    # Packed HiNM tile sharding for serving: "both" = T over
+    # ('model','data') (max param spread, activation gathers);
+    # "model" = T over 'model' + trailing dim FSDP over 'data';
+    # "model_only" = T over 'model', trailing dims replicated (required by
+    # the shard_map fast path — the local contraction needs full K).
+    packed_t_axes: str = "model_only"
+    # Explicit shard_map packed matmul (tile-local, zero-collective).
+    packed_shard_map: bool = True
+    # Decode attention: sequence-shard the KV cache over 'model' even when
+    # KV heads divide it (S-sharding scales to any head count).
+    decode_seq_shard: bool = True
+    # Sequence-parallel decode attention (shard_map): each model shard
+    # attends over its local cache slice; only O(B*H*hd) softmax stats are
+    # psum'd — replaces the per-layer full-cache all-gather.
+    seq_parallel_decode: bool = True
+    # Cross-entropy chunk length (sequence positions per logits chunk).
+    xent_chunk: int = 512
+    # Attention block sizes (train/prefill flash-style scan).
+    kv_block: int = 512
+    q_block: int = 512
+    # Causal block skipping (static per-q-chunk KV prefixes). Measured
+    # flop-neutral on cost probes (per-chunk checkpoint recompute offsets
+    # the halving) and +20 GB artifact memory on granite train -> refuted
+    # as a default; kept opt-in (§Perf iteration log).
+    causal_block_skip: bool = False
+
+
+KNOBS = Knobs()
+
+
+@contextlib.contextmanager
+def knobs(**overrides):
+    global KNOBS
+    prev = KNOBS
+    KNOBS = dataclasses.replace(KNOBS, **overrides)
+    try:
+        yield KNOBS
+    finally:
+        KNOBS = prev

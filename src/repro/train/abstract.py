@@ -1,0 +1,106 @@
+"""Abstract (ShapeDtypeStruct) views of HiNM-pruned models.
+
+The dry-run lowers full-scale models without allocating anything; gyro
+permutation is a numeric offline step, but the *shapes* of masks and packed
+weights are config-determined, so we can synthesise abstract mask / packed
+pytrees directly from each model's hinm_plan.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import HiNMConfig, PackedHiNM
+from repro.models import module as nn
+from repro.models import zoo
+
+
+def _planned_paths(cfg):
+    """Yield (container_key, stack_selector, spec) for every planned path."""
+    plan = zoo.hinm_plan(cfg)
+    if isinstance(plan, dict) and "enc" in plan:
+        for k in ("enc", "dec"):
+            for spec in plan[k]:
+                yield k, None, spec
+                for t in spec.tied:
+                    yield k, None, _tied_spec(spec, t)
+    elif isinstance(plan, dict):
+        for j, specs in plan.items():
+            for spec in specs:
+                yield "stacks", j, spec
+                for t in spec.tied:
+                    yield "stacks", j, _tied_spec(spec, t)
+    else:
+        for spec in plan:
+            yield "blocks", None, spec
+            for t in spec.tied:
+                yield "blocks", None, _tied_spec(spec, t)
+
+
+def _tied_spec(spec, path):
+    import dataclasses
+
+    return dataclasses.replace(spec, path=path, tied=(), consumers=())
+
+
+def _get_container(tree, key, sel):
+    node = tree[key]
+    return node[sel] if sel is not None else node
+
+
+def _set_container(tree, key, sel, value):
+    out = dict(tree)
+    if sel is not None:
+        lst = list(out[key])
+        lst[sel] = value
+        out[key] = lst
+    else:
+        out[key] = value
+    return out
+
+
+def packed_leaf_shapes(w_shape: tuple[int, ...], hcfg: HiNMConfig, dtype):
+    """(…, n_in, n_out) stored weight -> abstract PackedHiNM."""
+    n_in, n_out = w_shape[-2], w_shape[-1]
+    hcfg.validate_shape(n_out, n_in)
+    t = n_out // hcfg.v
+    k = hcfg.kept_columns(n_in)
+    kn = k // hcfg.m * hcfg.n
+    lead = tuple(w_shape[:-2])
+    return PackedHiNM(
+        vals=jax.ShapeDtypeStruct(lead + (t, hcfg.v, kn), dtype),
+        vec_idx=jax.ShapeDtypeStruct(lead + (t, k), jnp.int32),
+        nm_idx=jax.ShapeDtypeStruct(lead + (t, hcfg.v, kn), jnp.int8),
+        n_out=n_out,
+        n_in=n_in,
+        config=hcfg,
+    )
+
+
+def abstract_masks(params_shape, cfg):
+    """Mask pytree of ShapeDtypeStructs (bool) over planned projections;
+    None everywhere else. Mirrors prune_model's mask output structure."""
+    masks = jax.tree.map(lambda x: None, params_shape,
+                         is_leaf=lambda x: not isinstance(x, (dict, list, tuple)))
+    masks = dict(masks) if isinstance(masks, dict) else masks
+    for key, sel, spec in _planned_paths(cfg):
+        container = _get_container(params_shape, key, sel)
+        node = nn.get_path(container, spec.path)
+        mcontainer = _get_container(masks, key, sel)
+        mnode = {k: None for k in node}
+        mnode["w"] = jax.ShapeDtypeStruct(node["w"].shape, jnp.bool_)
+        mcontainer = nn.set_path(mcontainer, spec.path, mnode)
+        masks = _set_container(masks, key, sel, mcontainer)
+    return masks
+
+
+def abstract_packed(params_shape, cfg):
+    """Params pytree with planned weights replaced by abstract PackedHiNM."""
+    packed = params_shape
+    for key, sel, spec in _planned_paths(cfg):
+        container = _get_container(packed, key, sel)
+        node = dict(nn.get_path(container, spec.path))
+        node["w"] = packed_leaf_shapes(tuple(node["w"].shape), cfg.hinm, cfg.dtype)
+        container = nn.set_path(container, spec.path, node)
+        packed = _set_container(packed, key, sel, container)
+    return packed

@@ -1,0 +1,126 @@
+"""Gradual HiNM pruning schedule (paper §5.1.2).
+
+The paper's gradual recipe: ramp COLUMN-VECTOR sparsity first (cubic ramp,
+as in Zhu & Gupta 2018), and only once the target vector sparsity is
+reached, switch on the N:M stage. Permutations are refreshed from current
+saliency at a configurable cadence (each refresh runs the full gyro search
+and physically re-permutes the params; between refreshes only the masks
+are recomputed for the fixed layout, which is cheap and jit-friendly).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import sparsity
+from repro.core.types import HiNMConfig
+from repro.models import module as nn
+from repro.models import zoo
+from repro.train import pruning
+
+
+@dataclasses.dataclass
+class GradualSchedule:
+    target: HiNMConfig
+    start_step: int = 0
+    vector_end_step: int = 100     # vector ramp completes here
+    nm_step: int = 150             # N:M stage switches on here
+    update_every: int = 10         # mask recompute cadence
+    refresh_perm_every: int = 0    # 0 = permute once at nm_step
+
+    def vector_sparsity(self, step: int) -> float:
+        t = np.clip((step - self.start_step)
+                    / max(self.vector_end_step - self.start_step, 1), 0.0, 1.0)
+        return float(self.target.vector_sparsity * (1 - (1 - t) ** 3))
+
+    def nm_active(self, step: int) -> bool:
+        return step >= self.nm_step
+
+    def config_at(self, step: int) -> HiNMConfig:
+        return HiNMConfig(
+            v=self.target.v, n=self.target.n, m=self.target.m,
+            vector_sparsity=self.vector_sparsity(step),
+        )
+
+
+def _mask_for_weight(w, hcfg: HiNMConfig, nm_on: bool):
+    """Keep-mask for one stored (n_in, n_out) weight, current layout."""
+    sal = jnp.abs(w.astype(jnp.float32)).T          # (n_out, n_in)
+    if hcfg.vector_sparsity <= 0.0 and not nm_on:
+        return jnp.ones_like(w, dtype=bool)
+    if not nm_on:
+        mask = sparsity.vector_mask(sal, hcfg)
+    else:
+        mask = sparsity.hinm_mask(sal, hcfg)
+    return mask.T
+
+
+def recompute_masks(params, cfg, hcfg: HiNMConfig, nm_on: bool):
+    """Recompute masks for the *current* layout (no permutation search).
+
+    Walks the model plan; handles stacked layers and expert stacks by
+    vmapping the single-matrix mask function.
+    """
+    from repro.train.abstract import _planned_paths, _get_container, _set_container
+
+    masks = jax.tree.map(lambda x: None, params,
+                         is_leaf=lambda x: not isinstance(x, (dict, list, tuple)))
+    masks = dict(masks)
+    for key, sel, spec in _planned_paths(cfg):
+        container = _get_container(params, key, sel)
+        node = nn.get_path(container, spec.path)
+        w = node["w"]
+        fn = lambda wi: _mask_for_weight(wi, hcfg, nm_on)
+        for _ in range(w.ndim - 2):
+            fn = jax.vmap(fn)
+        mask = fn(w)
+        mcontainer = _get_container(masks, key, sel)
+        mcontainer = nn.set_path(mcontainer, spec.path,
+                                 {k: (mask if k == "w" else None) for k in node})
+        masks = _set_container(masks, key, sel, mcontainer)
+    return masks
+
+
+def make_mask_schedule(cfg, sched: GradualSchedule, method: str = "gyro"):
+    """Returns a callback for train.loop.run(mask_schedule=...).
+
+    At each `update_every` step the masks are recomputed from the live
+    weights at the scheduled sparsity; at `nm_step` (and every
+    `refresh_perm_every` if nonzero) the full gyro permutation re-runs and
+    the params are physically re-permuted in the loop state.
+    """
+    state_cache = {"last": -1}
+
+    def schedule(step: int, loop_state):
+        due = (step % sched.update_every == 0) or step == sched.nm_step
+        if not due or step == state_cache["last"]:
+            return None
+        refresh = (step == sched.nm_step) or (
+            sched.refresh_perm_every
+            and sched.nm_active(step)
+            and step % sched.refresh_perm_every == 0
+        )
+        # after the N:M switch the mask layout is frozen (a plain recompute
+        # would fall back to the identity layout and discard the gyro
+        # permutation); only explicit perm refreshes update it
+        if sched.nm_active(step) and not refresh and step > sched.nm_step:
+            return None
+        state_cache["last"] = step
+        hcfg = sched.config_at(step)
+        nm_on = sched.nm_active(step)
+        if refresh and method != "noperm":
+            # virtual mode: masks in the original layout, params untouched —
+            # optimizer moments stay aligned across the refresh
+            _, masks, _, _ = pruning.prune_model(
+                loop_state.params, cfg, method=method,
+                rng=np.random.default_rng(step), permute_params=False,
+            )
+            return masks
+        if hcfg.vector_sparsity <= 0.0 and not nm_on:
+            return None
+        return recompute_masks(loop_state.params, cfg, hcfg, nm_on)
+
+    return schedule

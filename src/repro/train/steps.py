@@ -1,0 +1,181 @@
+"""jit-compiled train / serve step builders with explicit shardings.
+
+`make_train_step(cfg, mesh, ...)` returns (step_fn, shardings) where
+step_fn(params, opt_state, masks, batch, step) -> (params, opt_state, metrics).
+The cross-entropy is computed in sequence chunks so the (B, S, vocab)
+logits tensor never materialises (vocab stays TP-sharded inside each chunk).
+
+HiNM integration: masks (same pytree as params, None on unpruned leaves)
+are applied to the params before the forward pass AND re-applied to the
+updated params, implementing masked-dense sparse training; gradients flow
+only through surviving weights (straight-through on the mask support).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.distributed import sharding as shd
+from repro.models import zoo
+from repro.optim import clip_by_global_norm, make_optimizer
+from repro.optim.compression import ef_topk_compress
+from repro.train.pruning import apply_masks
+
+XENT_CHUNK = 512
+
+
+def chunked_xent(params, cfg, x: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean next-token cross-entropy, scanning over sequence chunks."""
+    from repro.models import probe_mode
+
+    b, s, d = x.shape
+    chunk = s if probe_mode.enabled() else min(XENT_CHUNK, s)
+    if s % chunk:
+        chunk = s
+    nc = s // chunk
+    xc = x.reshape(b, nc, chunk, d).swapaxes(0, 1)          # (nc, B, c, D)
+    lc = labels.reshape(b, nc, chunk).swapaxes(0, 1)
+
+    def body(carry, t):
+        xt, lt = t
+        logits = zoo.logits_fn(params, cfg, xt).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        # one-hot contraction keeps the vocab dim sharded (a take_along_axis
+        # here would force an all-gather of the full logits chunk)
+        onehot = jax.nn.one_hot(lt, logits.shape[-1], dtype=jnp.float32)
+        gold = jnp.einsum("bcv,bcv->bc", logits, onehot)
+        # small z-loss for stability at scale
+        loss = (logz - gold) + 1e-4 * logz**2
+        return carry + loss.sum(), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (xc, lc))
+    return total / (b * s)
+
+
+def make_train_step(
+    cfg,
+    mesh,
+    optimizer_name: str = "adamw",
+    lr_fn=None,
+    grad_clip: float = 1.0,
+    compress_kfrac: float = 0.0,
+    microbatches: int = 1,
+):
+    """Build the pjit'd train step + its shardings (abstract, no allocation).
+
+    `microbatches` > 1 runs gradient accumulation: the remat'd per-layer
+    activation stack shrinks by the same factor (the lever that fits the
+    large train_4k cells into HBM; grads are accumulated in f32)."""
+    opt = make_optimizer(optimizer_name)
+    lr_fn = lr_fn or (lambda step: 3e-4)
+
+    def loss_fn(params, masks, batch):
+        p = apply_masks(params, masks)
+        x = zoo.forward(p, cfg, batch["tokens"], embeds=batch.get("embeds"))
+        return chunked_xent(p, cfg, x, batch["labels"])
+
+    def grads_of(params, masks, batch):
+        if microbatches <= 1:
+            return jax.value_and_grad(loss_fn)(params, masks, batch)
+
+        def mb_slice(x):
+            return x.reshape((microbatches, x.shape[0] // microbatches) + x.shape[1:])
+
+        batch_mb = jax.tree.map(mb_slice, batch)
+        # accumulate in f32 when params are narrow; for very large models
+        # (adafactor configs) accumulate in param dtype to halve the buffer
+        acc_dt = (lambda p: p.dtype) if optimizer_name == "adafactor" else (
+            lambda p: jnp.float32
+        )
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, acc_dt(p)), params)
+
+        def accum(carry, mbatch):
+            g_acc, l_acc = carry
+            loss, grads = jax.value_and_grad(loss_fn)(params, masks, mbatch)
+            g_acc = jax.tree.map(
+                lambda a, g: a + (g / microbatches).astype(a.dtype), g_acc, grads
+            )
+            return (g_acc, l_acc + loss / microbatches), None
+
+        (grads, loss), _ = jax.lax.scan(accum, (zeros, jnp.zeros((), jnp.float32)), batch_mb)
+        return loss, grads
+
+    def step_fn(params, opt_state, masks, batch, step, comp_error=None):
+        loss, grads = grads_of(params, masks, batch)
+        if compress_kfrac > 0.0 and comp_error is not None:
+            grads, comp_error = ef_topk_compress(grads, comp_error, compress_kfrac)
+        grads, gnorm = clip_by_global_norm(grads, grad_clip)
+        new_params, new_opt = opt.update(grads, opt_state, params, lr_fn(step))
+        new_params = apply_masks(new_params, masks)
+        metrics = {"loss": loss, "grad_norm": gnorm, "lr": lr_fn(step)}
+        return new_params, new_opt, metrics, comp_error
+
+    return step_fn, opt
+
+
+def shard_train_step(step_fn, cfg, mesh, params_shape, opt_shape, masks_shape,
+                     batch_shape, donate: bool = True, with_compression: bool = False):
+    """Wrap step_fn in jax.jit with explicit in/out shardings for `mesh`."""
+    pspecs = shd.param_specs(params_shape, mesh, cfg)
+    ospecs = shd.opt_state_specs(opt_shape, pspecs)
+    mspecs = jax.tree.map(
+        lambda m, s: s if m is not None else None,
+        masks_shape, pspecs, is_leaf=lambda x: x is None,
+    )
+    bspecs = shd.batch_specs(batch_shape, mesh)
+    espec = pspecs if with_compression else None
+    in_specs = (pspecs, ospecs, mspecs, bspecs, P(), espec)
+    out_specs = (pspecs, ospecs, P(), espec)
+
+    def named(tree):
+        return jax.tree.map(
+            lambda s: NamedSharding(mesh, s) if s is not None else None,
+            tree,
+            is_leaf=lambda x: isinstance(x, P) or x is None,
+        )
+
+    jitted = jax.jit(
+        step_fn,
+        in_shardings=named(in_specs),
+        out_shardings=named(out_specs),
+        donate_argnums=(0, 1) if donate else (),
+    )
+    return jitted, in_specs, out_specs
+
+
+def make_serve_steps(cfg, mesh):
+    """Build (prefill_fn, decode_fn) with cache/batch shardings resolved."""
+
+    def prefill_fn(params, tokens, cache, embeds=None):
+        last_x, cache = zoo.prefill(params, cfg, tokens, cache, embeds=embeds)
+        logits = zoo.logits_fn(params, cfg, last_x)
+        return logits, cache
+
+    def decode_fn(params, tokens, cache):
+        return zoo.decode_step(params, cfg, tokens, cache)
+
+    return prefill_fn, decode_fn
+
+
+def shard_serve_step(decode_fn, cfg, mesh, params_shape, cache_shape, batch: int):
+    pspecs = shd.param_specs(params_shape, mesh, cfg)
+    cspecs = shd.cache_specs(cache_shape, mesh, cfg)
+    tok_shape = jax.ShapeDtypeStruct((batch, 1), jnp.int32)
+    tok_spec = shd.batch_specs({"t": tok_shape}, mesh)["t"]
+    dp = tuple(tok_spec)[0]  # None when the batch doesn't divide (B=1 decode)
+
+    def named(tree):
+        return jax.tree.map(lambda s: NamedSharding(mesh, s), tree,
+                            is_leaf=lambda x: isinstance(x, P))
+
+    jitted = jax.jit(
+        decode_fn,
+        in_shardings=(named(pspecs), named(tok_spec), named(cspecs)),
+        out_shardings=(named(P(dp, "model")), named(cspecs)),
+        donate_argnums=(2,),
+    )
+    return jitted, pspecs, cspecs

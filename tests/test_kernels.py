@@ -1,0 +1,106 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode), shape/dtype sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import packing
+from repro.core.types import HiNMConfig
+from repro.kernels import ops, ref
+from repro.kernels.hinm_spmm import hinm_spmm, pick_bblk
+from repro.kernels.nm_select import nm_select
+
+
+def make_packed(rng, n_out, n_in, v=8, sv=0.5, dtype=jnp.float32):
+    cfg = HiNMConfig(v=v, n=2, m=4, vector_sparsity=sv)
+    w = jnp.asarray(rng.normal(size=(n_out, n_in)).astype(np.float32)).astype(dtype)
+    return w, packing.pack(w, cfg)
+
+
+SHAPES = [
+    # (n_out, n_in, batch, V)
+    (16, 16, 4, 8),
+    (64, 48, 10, 8),
+    (32, 64, 33, 16),   # batch not divisible by block
+    (128, 96, 7, 32),
+    (64, 128, 129, 8),
+]
+
+
+@pytest.mark.parametrize("n_out,n_in,b,v", SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_hinm_spmm_sweep(rng, n_out, n_in, b, v, dtype):
+    w, p = make_packed(rng, n_out, n_in, v=v, dtype=dtype)
+    x = jnp.asarray(rng.normal(size=(b, n_in)).astype(np.float32)).astype(dtype)
+    y_ref = ref.hinm_spmm_oracle(x.astype(jnp.float32), packing.pack(w.astype(jnp.float32), p.config))
+    y_ker = hinm_spmm(
+        x.T, p.vals, p.nm_idx, p.vec_idx, nn=2, mm=4, interpret=True,
+        out_dtype=jnp.float32,
+    ).T
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(
+        np.asarray(y_ker), np.asarray(y_ref), rtol=tol, atol=tol * 10
+    )
+
+
+@pytest.mark.parametrize("sv", [0.25, 0.5, 0.75])
+def test_hinm_spmm_sparsity_levels(rng, sv):
+    w, p = make_packed(rng, 32, 32, v=8, sv=sv)
+    x = jnp.asarray(rng.normal(size=(5, 32)).astype(np.float32))
+    y_ref = ref.hinm_spmm_oracle(x, p)
+    y_ker = ops.hinm_matmul(x, p, backend="interpret")
+    np.testing.assert_allclose(np.asarray(y_ker), np.asarray(y_ref), rtol=1e-5, atol=1e-5)
+
+
+def test_hinm_spmm_xla_paths_agree(rng):
+    """Small-batch gather path == large-batch tile-chunked path == oracle."""
+    w, p = make_packed(rng, 32, 48, v=8)
+    for b in (8, 2048):
+        x = jnp.asarray(rng.normal(size=(b, 48)).astype(np.float32))
+        y0 = ref.hinm_spmm_oracle(x, p)
+        y1 = ref.hinm_spmm_xla(x, p)
+        np.testing.assert_allclose(np.asarray(y1), np.asarray(y0), rtol=2e-5, atol=2e-5)
+
+
+def test_hinm_matmul_leading_dims(rng):
+    w, p = make_packed(rng, 16, 16, v=8)
+    x = jnp.asarray(rng.normal(size=(2, 3, 16)).astype(np.float32))
+    y = ops.hinm_matmul(x, p, backend="interpret")
+    assert y.shape == (2, 3, 16)
+    y2 = ops.hinm_matmul(x.reshape(6, 16), p, backend="xla").reshape(2, 3, 16)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y2), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("shape", [(8, 16), (32, 64), (7, 12), (128, 512)])
+@pytest.mark.parametrize("nn,mm", [(2, 4), (1, 4), (1, 2)])
+def test_nm_select_sweep(rng, shape, nn, mm):
+    if shape[1] % mm:
+        pytest.skip("cols not divisible by M")
+    w = jnp.asarray(rng.normal(size=shape).astype(np.float32))
+    out_ref = ref.nm_select_ref(w, nn, mm)
+    out_ker = nm_select(w, nn=nn, mm=mm, interpret=True)
+    assert np.array_equal(np.asarray(out_ker), np.asarray(out_ref))
+
+
+def test_nm_select_ties_deterministic():
+    w = jnp.asarray([[1.0, 1.0, 1.0, 1.0]])
+    out = nm_select(w, interpret=True)
+    assert np.array_equal(np.asarray(out), [[1.0, 1.0, 0.0, 0.0]])
+
+
+def test_pick_bblk_respects_budget():
+    b = pick_bblk(n_in=32768, k=16384, b=1024)
+    ws = 32768 * b * 2 + 16384 * b * 4
+    assert ws <= 8 * 1024 * 1024 * 1.01
+    assert pick_bblk(128, 64, 4) >= 4
+
+
+def test_decompress_tiles_matches_unpack(rng):
+    w, p = make_packed(rng, 16, 16, v=8)
+    tiles = ref.decompress_tiles(p.vals, p.nm_idx, p.config.m, p.config.n)
+    dense = ref.scatter_dense(p)
+    t, v_, k = tiles.shape
+    gathered = jnp.take_along_axis(
+        dense.reshape(t, v_, -1), p.vec_idx[:, None, :], axis=2
+    )
+    np.testing.assert_allclose(np.asarray(tiles), np.asarray(gathered), rtol=1e-6)

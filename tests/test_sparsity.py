@@ -1,0 +1,108 @@
+"""Mask-construction invariants (unit + hypothesis property tests)."""
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import sparsity
+from repro.core.types import HiNMConfig
+
+
+def cfg_v8():
+    return HiNMConfig(v=8, n=2, m=4, vector_sparsity=0.5)
+
+
+def test_nm_mask_exact_n_per_group(rng):
+    x = jnp.asarray(rng.normal(size=(16, 32)).astype(np.float32))
+    m = sparsity.nm_mask(jnp.abs(x), 2, 4)
+    g = np.asarray(m).reshape(16, 8, 4)
+    assert (g.sum(-1) == 2).all()
+
+
+def test_nm_mask_keeps_largest(rng):
+    x = jnp.asarray(np.array([[4.0, 3.0, 2.0, 1.0], [1.0, 2.0, 3.0, 4.0]]))
+    m = np.asarray(sparsity.nm_mask(x, 2, 4))
+    assert m.tolist() == [[True, True, False, False], [False, False, True, True]]
+
+
+def test_vector_mask_column_counts(rng):
+    cfg = cfg_v8()
+    sal = jnp.asarray(rng.random((24, 20)).astype(np.float32))
+    m = np.asarray(sparsity.vector_mask(sal, cfg))
+    k = cfg.kept_columns(20)
+    # per tile: exactly K columns fully kept, the rest fully dropped
+    tiles = m.reshape(3, 8, 20)
+    for t in tiles:
+        col_any = t.any(axis=0)
+        col_all = t.all(axis=0)
+        assert (col_any == col_all).all()
+        assert col_any.sum() == k
+
+
+def test_hinm_mask_density(rng):
+    cfg = cfg_v8()
+    sal = jnp.asarray(rng.random((32, 32)).astype(np.float32))
+    m = np.asarray(sparsity.hinm_mask(sal, cfg))
+    assert abs(m.mean() - (1 - cfg.total_sparsity)) < 1e-6
+
+
+def test_hinm_mask_from_columns_respects_order(rng):
+    cfg = cfg_v8()
+    sal = jnp.asarray(rng.random((8, 16)).astype(np.float32))
+    ids = sparsity.kept_column_ids(sal, cfg)
+    m1 = sparsity.hinm_mask_from_columns(sal, ids, cfg)
+    # permuting columns within an M-group must not change the mask support
+    perm = np.asarray(ids).copy()
+    perm[:, [0, 1, 2, 3]] = perm[:, [3, 2, 1, 0]]
+    m2 = sparsity.hinm_mask_from_columns(sal, jnp.asarray(perm), cfg)
+    assert np.array_equal(np.asarray(m1), np.asarray(m2))
+
+
+def test_unstructured_mask_density(rng):
+    sal = jnp.asarray(rng.random((64, 64)).astype(np.float32))
+    m = np.asarray(sparsity.unstructured_mask(sal, 0.75))
+    assert abs(m.mean() - 0.25) < 0.01
+
+
+@hypothesis.settings(max_examples=25, deadline=None)
+@hypothesis.given(
+    rows=st.sampled_from([8, 16, 24]),
+    cols=st.sampled_from([8, 16, 32]),
+    seed=st.integers(0, 1000),
+    n=st.sampled_from([1, 2]),
+)
+def test_property_hinm_mask_invariants(rows, cols, seed, n):
+    """For any saliency: per-tile kept-column count is K; kept columns carry
+    exactly N survivors per M-group per row; dropped columns are all-zero."""
+    cfg = HiNMConfig(v=8, n=n, m=4, vector_sparsity=0.5)
+    sal = jnp.asarray(
+        np.random.default_rng(seed).random((rows, cols)).astype(np.float32)
+    )
+    m = np.asarray(sparsity.hinm_mask(sal, cfg))
+    k = cfg.kept_columns(cols)
+    tiles = m.reshape(rows // 8, 8, cols)
+    for t in tiles:
+        kept_cols = t.any(axis=0)
+        assert kept_cols.sum() <= k
+        # every row keeps exactly K*N/M elements
+        assert (t.sum(axis=1) == k * n // 4).all()
+
+
+@hypothesis.settings(max_examples=25, deadline=None)
+@hypothesis.given(seed=st.integers(0, 1000))
+def test_property_retained_le_total(seed):
+    cfg = cfg_v8()
+    sal = jnp.asarray(np.random.default_rng(seed).random((16, 16)).astype(np.float32))
+    r = float(sparsity.retained_saliency(sal, cfg))
+    assert 0.0 <= r <= float(sal.sum()) + 1e-5
+
+
+def test_config_validation():
+    with pytest.raises(ValueError):
+        HiNMConfig(v=7)
+    with pytest.raises(ValueError):
+        HiNMConfig(n=4, m=4)
+    with pytest.raises(ValueError):
+        HiNMConfig(vector_sparsity=1.0)
+    assert abs(HiNMConfig().total_sparsity - 0.75) < 1e-9
