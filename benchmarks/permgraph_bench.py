@@ -1,0 +1,63 @@
+"""PermGraph offline-search wall-clock: serial walker-equivalent vs
+thread-pool node dispatch vs warm saliency-hash cache.
+
+The old walker ran every layer's searches strictly serially; the PermGraph
+engine dispatches independent (container, layer, node) items over a thread
+pool and memoizes search results by saliency hash. This entry times a
+multi-layer `prune_model` three ways and reports the speedups.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.configs.base import ArchConfig
+from repro.core.types import HiNMConfig
+from repro.models import zoo
+from repro.perm import PermCache
+from repro.train import pruning
+
+
+def _cfg() -> ArchConfig:
+    # projections big enough that the jit'd cost evals (GIL-released XLA
+    # compute) dominate Python dispatch — the regime real models are in
+    return ArchConfig(
+        name="bench", family="dense", n_layers=2, d_model=256, n_heads=4,
+        n_kv_heads=2, d_ff=512, vocab=512, head_dim=64, max_seq=64,
+        dtype=jnp.float32, hinm=HiNMConfig(v=32, n=2, m=4, vector_sparsity=0.5),
+    )
+
+
+def _time_prune(params, cfg, **kw) -> float:
+    t0 = time.perf_counter()
+    pruning.prune_model(params, cfg, ocp_iters=3, icp_iters=3, **kw)
+    return time.perf_counter() - t0
+
+
+def run() -> None:
+    cfg = _cfg()
+    params = zoo.init(jax.random.PRNGKey(0), cfg)
+    # warm jit caches so the serial baseline isn't charged compile time
+    pruning.prune_model(params, cfg, ocp_iters=1, icp_iters=1, workers=1)
+
+    serial = _time_prune(params, cfg, workers=1)
+    workers = max(2, min(8, os.cpu_count() or 2))
+    parallel = _time_prune(params, cfg, workers=workers)
+
+    cache = PermCache()
+    _time_prune(params, cfg, workers=workers, cache=cache)      # fill
+    warm = _time_prune(params, cfg, workers=workers, cache=cache)
+
+    emit("permgraph_search_serial", serial * 1e6, "1 worker")
+    emit("permgraph_search_parallel", parallel * 1e6,
+         f"{workers} workers speedup={serial / parallel:.2f}x")
+    emit("permgraph_search_warm_cache", warm * 1e6,
+         f"speedup={serial / warm:.2f}x")
+
+
+if __name__ == "__main__":
+    run()

@@ -16,6 +16,7 @@ def main() -> None:
         compression_bench,
         fig3_fig4_oneshot,
         fig5_latency,
+        permgraph_bench,
         table1_deit,
         table2_gradual,
         table3_ablation,
@@ -28,6 +29,7 @@ def main() -> None:
         "table3": table3_ablation.run,
         "fig5": fig5_latency.run,
         "compression": compression_bench.run,
+        "permgraph": permgraph_bench.run,
     }
     pattern = sys.argv[1] if len(sys.argv) > 1 else ""
     print("name,us_per_call,derived")

@@ -15,6 +15,8 @@ import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax
+
+from repro import compat
 import jax.numpy as jnp
 import numpy as np
 
@@ -79,7 +81,7 @@ def main():
     import logging
 
     logging.basicConfig(level=logging.INFO, format="%(message)s")
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         state = loop.run(state, jitted, batches(), lcfg,
                          on_step=lambda s, m: losses.append(m.get("loss")),
                          mask_schedule=mask_cb)

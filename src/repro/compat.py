@@ -1,0 +1,76 @@
+"""Version shims for the pinned jax (0.4.37).
+
+The sharding API moved between 0.4.x and 0.5+: `jax.sharding.AxisType`,
+`jax.sharding.get_abstract_mesh`, `jax.set_mesh`, the `axis_types=` kwarg
+of `jax.make_mesh`, and the `(shape, names)` AbstractMesh constructor all
+post-date the pin. Everything here resolves to the modern API when it
+exists and to the legacy equivalent otherwise, so the rest of the codebase
+never branches on jax versions.
+"""
+from __future__ import annotations
+
+import jax
+
+_HAS_AXIS_TYPE = hasattr(jax.sharding, "AxisType")
+_HAS_GET_ABSTRACT_MESH = hasattr(jax.sharding, "get_abstract_mesh")
+_HAS_SET_MESH = hasattr(jax, "set_mesh")
+
+
+def make_mesh(axis_shapes, axis_names):
+    """jax.make_mesh with Auto axis types when the kwarg exists."""
+    if _HAS_AXIS_TYPE:
+        return jax.make_mesh(
+            axis_shapes, axis_names,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axis_names),
+        )
+    return jax.make_mesh(axis_shapes, axis_names)
+
+
+def abstract_mesh(axis_shapes, axis_names):
+    """AbstractMesh((16, 16), ("data", "model")) on every supported jax."""
+    from jax.sharding import AbstractMesh
+
+    try:
+        return AbstractMesh(tuple(axis_shapes), tuple(axis_names))
+    except TypeError:  # 0.4.x: single shape_tuple of (name, size) pairs
+        return AbstractMesh(tuple(zip(axis_names, axis_shapes)))
+
+
+def set_mesh(mesh):
+    """Context manager activating `mesh` for sharding-constraint resolution."""
+    if _HAS_SET_MESH:
+        return jax.set_mesh(mesh)
+    # Legacy global mesh context: Mesh is itself a context manager that
+    # installs the thread-local resource env with_sharding_constraint reads.
+    return mesh
+
+
+def shard_map(f, *, mesh, in_specs, out_specs):
+    """jax.shard_map with replication checking off, on every supported jax."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=False)
+
+
+def get_abstract_mesh():
+    """The mesh active for sharding constraints, or None outside a context.
+
+    On 0.4.x there is no abstract-mesh tracking; fall back to the physical
+    mesh of the legacy resource env, which exposes the same `.empty`,
+    `.axis_names`, and `.shape` surface the sharding helpers use.
+    """
+    if _HAS_GET_ABSTRACT_MESH:
+        return jax.sharding.get_abstract_mesh()
+    from jax._src import mesh as mesh_lib
+
+    env = getattr(mesh_lib, "thread_resources", None)
+    if env is None:
+        return None
+    physical = env.env.physical_mesh
+    if physical is None or physical.empty:
+        return None
+    return physical

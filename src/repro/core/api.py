@@ -7,6 +7,10 @@ into either (a) its own weight columns before its gyro search runs, or
 Residual-constrained rows (e.g. d_model projections) use identity OCP;
 head-structured rows (e.g. V projections under RoPE attention) restrict OCP
 to within-block permutations via `row_blocks`.
+
+Model-level coupling lives in `repro.perm` (the PermGraph engine); this
+module is the single-matrix entry point sharing the same search and
+realize phases.
 """
 from __future__ import annotations
 
@@ -14,12 +18,10 @@ import dataclasses
 from typing import Literal
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import baselines, packing, saliency as saliency_mod, sparsity
-from repro.core.gyro import gyro_permute
-from repro.core.types import GyroResult, HiNMConfig, PackedHiNM
+from repro.core import saliency as saliency_mod
+from repro.core.types import HiNMConfig, PackedHiNM
 
 Method = Literal["gyro", "noperm", "icp_only", "ocp_only", "v1", "v2"]
 
@@ -39,29 +41,6 @@ class PrunedLinear:
         return self.retained / max(self.total, 1e-30)
 
 
-def _run_method(
-    sal: np.ndarray,
-    cfg: HiNMConfig,
-    method: Method,
-    rng: np.random.Generator,
-    ocp_iters: int,
-    icp_iters: int,
-) -> GyroResult:
-    if method == "gyro":
-        return gyro_permute(sal, cfg, ocp_iters=ocp_iters, icp_iters=icp_iters, rng=rng)
-    if method == "noperm":
-        return gyro_permute(sal, cfg, rng=rng, run_ocp=False, run_icp=False)
-    if method == "icp_only":
-        return gyro_permute(sal, cfg, icp_iters=icp_iters, rng=rng, run_ocp=False)
-    if method == "ocp_only":
-        return gyro_permute(sal, cfg, ocp_iters=ocp_iters, rng=rng, run_icp=False)
-    if method == "v1":
-        return baselines.hinm_v1(sal, cfg, rng, icp_iters=icp_iters)
-    if method == "v2":
-        return baselines.hinm_v2(sal, cfg, rng, ocp_iters=ocp_iters)
-    raise ValueError(f"unknown method {method!r}")
-
-
 def prune_matrix(
     w: jax.Array,
     cfg: HiNMConfig,
@@ -72,13 +51,18 @@ def prune_matrix(
     row_blocks: int = 1,
     ocp_iters: int = 24,
     icp_iters: int = 16,
+    cache=None,
 ) -> PrunedLinear:
     """Prune one projection to HiNM sparsity with the chosen permutation.
 
     `row_blocks` restricts OCP to permutations within `n_out / row_blocks`
     sized row blocks (block-diagonal permutation) — used for head-structured
-    outputs where cross-head reordering would change semantics.
+    outputs where cross-head reordering would change semantics. `cache` is
+    an optional `repro.perm.PermCache`.
     """
+    from repro.perm import realize as perm_realize
+    from repro.perm.search import search_projection
+
     rng = rng or np.random.default_rng(0)
     n_out, n_in = w.shape
     cfg.validate_shape(n_out, n_in)
@@ -91,29 +75,23 @@ def prune_matrix(
     sal = np.asarray(
         saliency_mod.saliency_for(w, saliency_kind, fisher), dtype=np.float32
     )
+    out_perm, col_order = search_projection(
+        sal, sal, cfg, method=method, can_permute_rows=True,
+        row_blocks=row_blocks, rng=rng, ocp_iters=ocp_iters,
+        icp_iters=icp_iters, cache=cache,
+    )
 
-    perms, col_orders, retained = [], [], 0.0
-    for b in range(row_blocks):
-        blk = sal[b * bs : (b + 1) * bs]
-        res = _run_method(blk, cfg, method, rng, ocp_iters, icp_iters)
-        perms.append(res.out_perm + b * bs)
-        col_orders.append(res.col_order)
-        retained += res.retained
-    out_perm = np.concatenate(perms)
-    col_order = jnp.asarray(np.concatenate(col_orders, axis=0))
-
-    w_p = jnp.take(jnp.asarray(w), jnp.asarray(out_perm), axis=0)
-    sal_p = jnp.asarray(sal[out_perm])
-    packed = packing.pack(w_p, cfg, col_ids=col_order, sal=sal_p)
-    mask_p = sparsity.hinm_mask_from_columns(sal_p, col_order, cfg)
-    inv = np.argsort(out_perm)
-    mask = jnp.take(mask_p, jnp.asarray(inv), axis=0)
+    # realize against the SEARCH saliency (fisher-informed when requested),
+    # not the magnitude default of the model path
+    r = perm_realize.realize_matrix(w, out_perm, col_order, cfg, sal=sal)
+    mask = perm_realize.mask_to_original_rows(r.mask_p, out_perm, axis=0)
+    total = float(sal.sum())
     return PrunedLinear(
-        packed=packed,
+        packed=r.packed,
         mask=mask,
         out_perm=out_perm,
-        retained=float(retained if row_blocks > 1 else jnp.sum(sal_p * mask_p)),
-        total=float(sal.sum()),
+        retained=r.retained * total,
+        total=total,
     )
 
 

@@ -20,6 +20,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
+
 
 def pipeline_apply(
     stage_fn: Callable,        # (stage_params, x_mb) -> x_mb
@@ -61,10 +63,9 @@ def pipeline_apply(
         # only the last stage banked anything; psum replicates the result
         return jax.lax.psum(outbuf, axis)
 
-    return jax.shard_map(
+    return compat.shard_map(
         body,
         mesh=mesh,
         in_specs=(P(axis), P()),
         out_specs=P(),
-        check_vma=False,
     )(stage_params, x)

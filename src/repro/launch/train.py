@@ -14,6 +14,8 @@ import argparse
 import logging
 
 import jax
+
+from repro import compat
 import jax.numpy as jnp
 import numpy as np
 
@@ -81,7 +83,7 @@ def main() -> None:
         checkpoint_every=max(args.steps // 4, 25),
         checkpoint_dir=args.checkpoint_dir,
     )
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         final = loop.run(state, jitted, batch_iter(), lcfg)
     print(f"done at step {final.step}")
 

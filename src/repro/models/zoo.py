@@ -5,7 +5,8 @@
   logits_fn(params, x)                    -> vocab projection
   make_cache(cfg, batch, max_seq)         -> decode cache pytree
   prefill / decode_step                   -> serving
-  hinm_plan(cfg)                          -> prune specs (see pruning walker)
+  hinm_plan(cfg)                          -> prune specs (see repro.perm)
+  perm_graph(cfg)                         -> compiled ModelPermGraph
 """
 from __future__ import annotations
 
@@ -51,3 +52,10 @@ def decode_step(params, cfg, tokens, cache):
 
 def hinm_plan(cfg):
     return model_for(cfg).hinm_plan(cfg)
+
+
+def perm_graph(cfg):
+    """Compile this model's hinm_plan into a validated ModelPermGraph."""
+    from repro.perm.graph import compile_model_graph
+
+    return compile_model_graph(cfg)

@@ -1,0 +1,28 @@
+"""PermGraph — declarative permutation-propagation for HiNM pruning.
+
+A model's `hinm_plan` compiles into an explicit graph of prunable nodes and
+typed coupling edges; pruning then runs as three separated phases (search,
+propagate, realize) instead of one monolithic walker. See README.md in this
+package for the architecture.
+"""
+from repro.perm.cache import PermCache
+from repro.perm.engine import ModelPermEngine
+from repro.perm.graph import (
+    EdgeKind,
+    LayerPermGraph,
+    ModelPermGraph,
+    PermEdge,
+    PermNode,
+    compile_model_graph,
+)
+
+__all__ = [
+    "EdgeKind",
+    "LayerPermGraph",
+    "ModelPermEngine",
+    "ModelPermGraph",
+    "PermCache",
+    "PermEdge",
+    "PermNode",
+    "compile_model_graph",
+]

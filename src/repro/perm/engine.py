@@ -1,0 +1,428 @@
+"""Search/propagate/realize orchestration over a ModelPermGraph.
+
+Work items are (container, layer index, node): every stacked layer of every
+container contributes one search per node (MoE expert stacks loop experts
+inside one item). Items are independent unless a coupling edge links their
+nodes within the same layer, so the engine runs a wavefront: all
+dependency-free items dispatch to a thread pool (each search is CPU-bound
+numpy/Hungarian with jit'd cost evals that release the GIL), and a
+completed producer immediately unlocks its consumers after its perm is
+folded on the main thread.
+
+Determinism: every item gets its own RNG derived from the base generator in
+canonical item order, so results are independent of worker count and
+completion order. One caveat: with a shared PermCache AND workers > 1,
+items whose saliency matrices are byte-identical race to fill the same
+cache slot, and which (equally valid) result wins depends on completion
+order. `workers=1` (or REPRO_PERM_WORKERS=1) forces the fully serial,
+fully deterministic path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from concurrent.futures import FIRST_COMPLETED, ThreadPoolExecutor, wait
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import module as nn
+from repro.perm import propagate, realize
+from repro.perm.cache import PermCache
+from repro.perm.graph import (
+    Container,
+    EdgeKind,
+    ModelPermGraph,
+    PermNode,
+    compile_model_graph,
+    get_container,
+    set_container,
+)
+from repro.perm.search import search_projection
+
+
+@dataclasses.dataclass
+class PruneReport:
+    per_layer: list[tuple[str, float]] = dataclasses.field(default_factory=list)
+    searches_run: int = 0
+    cache_hits: int = 0
+
+    @property
+    def mean_retained(self) -> float:
+        if not self.per_layer:
+            return 1.0
+        return float(np.mean([r for _, r in self.per_layer]))
+
+
+def default_workers() -> int:
+    env = os.environ.get("REPRO_PERM_WORKERS")
+    if env:
+        try:
+            return max(1, int(env))
+        except ValueError:
+            raise ValueError(
+                f"REPRO_PERM_WORKERS must be an integer, got {env!r}"
+            ) from None
+    return max(1, min(8, os.cpu_count() or 1))
+
+
+def _saliency(wt: jnp.ndarray, fisher_t, saliency_kind: str) -> np.ndarray:
+    if saliency_kind == "second_order" and fisher_t is not None:
+        return np.asarray((wt.astype(jnp.float32) ** 2) * fisher_t, np.float32)
+    return np.asarray(jnp.abs(wt), np.float32)
+
+
+def _spawn_rngs(rng: np.random.Generator, n: int) -> list[np.random.Generator]:
+    """Deterministic child generators; independent of completion order."""
+    seeds = rng.integers(0, 2**63 - 1, size=n, dtype=np.uint64)
+    return [np.random.default_rng(int(s)) for s in seeds]
+
+
+@dataclasses.dataclass
+class _LayerState:
+    layer: dict                    # current (progressively folded) params
+    fisher: dict | None
+    tag: str
+    results: dict[str, tuple]      # path -> (out_perm, col_order)
+
+
+@dataclasses.dataclass(frozen=True)
+class _Item:
+    ci: int                        # container index
+    li: int                        # layer index within the container stack
+    path: str
+
+
+class ModelPermEngine:
+    """Runs the three phases for a whole model's params pytree."""
+
+    def __init__(
+        self,
+        cfg,
+        *,
+        method: str = "gyro",
+        rng: np.random.Generator | None = None,
+        fisher=None,
+        saliency_kind: str = "magnitude",
+        ocp_iters: int = 8,
+        icp_iters: int = 8,
+        cache: PermCache | None = None,
+        workers: int | None = None,
+        graph: ModelPermGraph | None = None,
+    ):
+        if method not in ("gyro", "noperm", "icp_only", "ocp_only", "v1", "v2"):
+            raise ValueError(f"unknown method {method!r}")
+        self.cfg = cfg
+        self.hcfg = cfg.hinm
+        self.method = method
+        self.rng = rng or np.random.default_rng(0)
+        self.fisher = fisher
+        self.saliency_kind = saliency_kind
+        self.ocp_iters = ocp_iters
+        self.icp_iters = icp_iters
+        self.cache = cache
+        self.workers = default_workers() if workers is None else max(1, workers)
+        self.graph = graph or compile_model_graph(cfg)
+        self.report = PruneReport()
+
+    # -- phase 1+2: search with inline propagation ---------------------------
+
+    def _search_one(self, node: PermNode, w, tied_ws, fisher_leaf,
+                    rng: np.random.Generator, virtual: bool):
+        """One work item: (possibly expert-stacked) projection search."""
+        if node.is_tied_partner and not virtual:
+            # rows already follow the tie source; identity OCP, own ICP
+            can_rows, row_blocks = False, 1
+        else:
+            can_rows, row_blocks = node.can_permute_rows, node.row_blocks
+
+        def one(wi, fi, tws):
+            wt = jnp.asarray(wi).T
+            sal = _saliency(wt, fi, self.saliency_kind)
+            sal_rows = sal
+            for tw in tws:
+                sal_rows = np.concatenate(
+                    [sal_rows, _saliency(jnp.asarray(tw).T, None, "magnitude")],
+                    axis=1,
+                )
+            return search_projection(
+                sal, sal_rows, self.hcfg, method=self.method,
+                can_permute_rows=can_rows, row_blocks=row_blocks, rng=rng,
+                ocp_iters=self.ocp_iters, icp_iters=self.icp_iters,
+                cache=self.cache,
+            )
+
+        if w.ndim == 3:  # expert stack
+            fts = [None if fisher_leaf is None else jnp.asarray(fisher_leaf[e]).T
+                   for e in range(w.shape[0])]
+            outs = [one(w[e], fts[e], [tw[e] for tw in tied_ws])
+                    for e in range(w.shape[0])]
+            return np.stack([o[0] for o in outs]), np.stack([o[1] for o in outs])
+        ft = None if fisher_leaf is None else jnp.asarray(fisher_leaf).T
+        return one(w, ft, tied_ws)
+
+    def _snapshot(self, state: _LayerState, cgraph, path: str):
+        """Collect the (already folded) inputs of one search item."""
+        node = cgraph.nodes[path]
+        w = nn.get_path(state.layer, path)["w"]
+        tied_ws = [nn.get_path(state.layer, e.dst)["w"]
+                   for e in cgraph.out_edges(path) if e.kind == EdgeKind.TIED]
+        fisher_leaf = None
+        if state.fisher is not None and self.saliency_kind == "second_order":
+            fisher_leaf = nn.get_path(state.fisher, path)["w"]
+        return node, w, tied_ws, fisher_leaf
+
+    def _validate(self, node: PermNode, cgraph, perm, what: str):
+        propagate.check_bijection(perm, what)
+        for c in cgraph.constraints(node.path):
+            if c.kind == EdgeKind.RESIDUAL:
+                propagate.check_identity(perm, what)
+            elif c.kind == EdgeKind.BLOCK_DIAGONAL and not node.is_tied_partner:
+                propagate.check_block_diagonal(perm, node.row_blocks, what)
+
+    def _fold(self, state: _LayerState, cgraph, path: str, perm):
+        """Propagate a completed search along the node's out-edges."""
+        layer = state.layer
+        if propagate.is_identity(perm):
+            return
+        node_dict = dict(nn.get_path(layer, path))
+        node_dict["w"] = propagate.permute_out(node_dict["w"], perm)
+        if node_dict.get("b") is not None:
+            node_dict["b"] = propagate.permute_bias(node_dict["b"], perm)
+        layer = nn.set_path(layer, path, node_dict)
+        for e in cgraph.out_edges(path):
+            dn = dict(nn.get_path(layer, e.dst))
+            if e.kind == EdgeKind.TIED:
+                dn["w"] = propagate.permute_out(dn["w"], perm)
+                if dn.get("b") is not None:
+                    dn["b"] = propagate.permute_bias(dn["b"], perm)
+            elif e.kind == EdgeKind.GQA_EXPAND:
+                cperm = propagate.gqa_expand_perm(
+                    perm, self.cfg.n_kv_heads, self.cfg.n_heads, self.cfg.head_dim
+                )
+                dn["w"] = propagate.permute_in(dn["w"], cperm)
+            else:  # producer-rows → consumer-cols
+                dn["w"] = propagate.permute_in(dn["w"], perm)
+            layer = nn.set_path(layer, e.dst, dn)
+        state.layer = layer
+
+    def _run_items(self, states: dict[tuple[int, int], _LayerState],
+                   containers: list[Container]):
+        """Wavefront-schedule every (container, layer, node) search item."""
+        items: list[_Item] = []
+        deps: dict[_Item, set[_Item]] = {}
+        dependents: dict[_Item, list[_Item]] = {}
+        for (ci, li), state in states.items():
+            cgraph = containers[ci].graph
+            node_deps = cgraph.deps()
+            for path in cgraph.topo_order():
+                it = _Item(ci, li, path)
+                items.append(it)
+                dset = {_Item(ci, li, s) for s in node_deps[path]}
+                deps[it] = dset
+                for d in dset:
+                    dependents.setdefault(d, []).append(it)
+        rngs = dict(zip(items, _spawn_rngs(self.rng, len(items))))
+        misses0 = self.cache.misses if self.cache else 0
+        hits0 = self.cache.hits if self.cache else 0
+
+        def task_args(it: _Item):
+            state = states[(it.ci, it.li)]
+            cgraph = containers[it.ci].graph
+            node, w, tied_ws, fl = self._snapshot(state, cgraph, it.path)
+            return state, cgraph, node, w, tied_ws, fl
+
+        def complete(it: _Item, perm, col_order):
+            state = states[(it.ci, it.li)]
+            cgraph = containers[it.ci].graph
+            node = cgraph.nodes[it.path]
+            self._validate(node, cgraph, perm,
+                           f"{state.tag}[{it.li}]/{it.path}")
+            self._fold(state, cgraph, it.path, perm)
+            state.results[it.path] = (perm, col_order)
+
+        if self.workers <= 1:
+            for it in items:
+                state, cgraph, node, w, tied_ws, fl = task_args(it)
+                perm, col = self._search_one(node, w, tied_ws, fl, rngs[it],
+                                             virtual=False)
+                complete(it, perm, col)
+        else:
+            remaining = {it: set(d) for it, d in deps.items()}
+            futures = {}
+            with ThreadPoolExecutor(max_workers=self.workers) as ex:
+                def submit(it: _Item):
+                    _, _, node, w, tied_ws, fl = task_args(it)
+                    futures[ex.submit(self._search_one, node, w, tied_ws, fl,
+                                      rngs[it], False)] = it
+
+                for it in items:
+                    if not remaining[it]:
+                        submit(it)
+                while futures:
+                    done, _ = wait(futures, return_when=FIRST_COMPLETED)
+                    for f in done:
+                        it = futures.pop(f)
+                        perm, col = f.result()
+                        complete(it, perm, col)
+                        for dep in dependents.get(it, ()):
+                            remaining[dep].discard(it)
+                            if not remaining[dep]:
+                                submit(dep)
+
+        if self.cache:
+            self.report.cache_hits += self.cache.hits - hits0
+            self.report.searches_run += self.cache.misses - misses0
+        else:
+            self.report.searches_run += len(items)
+
+    # -- phase 3: realize ----------------------------------------------------
+
+    def _realize_layer(self, state: _LayerState, cgraph):
+        """Pack + mask every searched node of one folded layer."""
+        layer = state.layer
+        masks: dict[str, jnp.ndarray] = {}
+        packs: dict[str, object] = {}
+        identity = None
+        for path in cgraph.order:
+            perm, col_order = state.results[path]
+            w = nn.get_path(layer, path)["w"]
+            if w.ndim == 3:
+                outs = [realize.realize_stored(w[e], np.arange(w.shape[2]),
+                                               col_order[e], self.hcfg)
+                        for e in range(w.shape[0])]
+                new_w = jnp.stack([o[0] for o in outs])
+                mask = jnp.stack([o[1] for o in outs])
+                packed = jax.tree.map(lambda *xs: jnp.stack(xs),
+                                      *[o[2] for o in outs])
+                retained = float(np.mean([o[3] for o in outs]))
+            else:
+                identity = np.arange(w.shape[1])
+                new_w, mask, packed, retained = realize.realize_stored(
+                    w, identity, col_order, self.hcfg
+                )
+            layer = nn.set_path(layer, path,
+                                {**nn.get_path(layer, path), "w": new_w})
+            masks[path] = mask
+            packs[path] = packed
+            self.report.per_layer.append(
+                (f"{state.tag}/{path}", retained)
+            )
+        # assemble mask / packed pytrees mirroring the (permuted) layer
+        mask_tree = jax.tree.map(lambda x: None, layer,
+                                 is_leaf=lambda x: not isinstance(x, dict))
+        packed_tree = layer
+        for path, m in masks.items():
+            node = nn.get_path(layer, path)
+            mask_tree = nn.set_path(
+                mask_tree, path, {k: (m if k == "w" else None) for k in node}
+            )
+        for path, p in packs.items():
+            node = dict(nn.get_path(layer, path))
+            node["w"] = p
+            packed_tree = nn.set_path(packed_tree, path, node)
+        return layer, mask_tree, packed_tree
+
+    # -- public entry points -------------------------------------------------
+
+    def run_stacks(self, stacked_containers: dict[int, tuple]):
+        """Physical pruning over {container_index: (layer_stack, fisher_stack)}.
+
+        Returns {container_index: (params_stack, mask_stack, packed_stack)}.
+        """
+        states: dict[tuple[int, int], _LayerState] = {}
+        counts: dict[int, int] = {}
+        for ci, (stack, fstack) in stacked_containers.items():
+            tag = self.graph.containers[ci].tag
+            n = jax.tree.leaves(stack)[0].shape[0]
+            counts[ci] = n
+            for i in range(n):
+                states[(ci, i)] = _LayerState(
+                    layer=jax.tree.map(lambda a: a[i], stack),
+                    fisher=None if fstack is None
+                    else jax.tree.map(lambda a: a[i], fstack),
+                    tag=f"{tag}[{i}]",
+                    results={},
+                )
+        self._run_items(states, self.graph.containers)
+        self.states = states  # searched perms, introspectable post-run
+
+        out = {}
+        for ci, n in counts.items():
+            cgraph = self.graph.containers[ci].graph
+            per_layer = [self._realize_layer(states[(ci, i)], cgraph)
+                         for i in range(n)]
+            out[ci] = _restack(per_layer)
+        return out
+
+    def run_virtual(self, params):
+        """Mask-only pruning: searches in the ORIGINAL layout, masks mapped
+        back through the inverse row perm; params untouched, no packing."""
+        instances = list(self.graph.instances())
+        rngs = _spawn_rngs(self.rng, len(instances))
+        misses0 = self.cache.misses if self.cache else 0
+        hits0 = self.cache.hits if self.cache else 0
+
+        def one_instance(args):
+            (key, sel, node), rng = args
+            container = get_container(params, key, sel)
+            w = nn.get_path(container, node.path)["w"]
+
+            def one(wi):
+                perm, col_order = self._search_one(
+                    node, wi, [], None, rng, virtual=True
+                )
+                r = realize.realize_matrix(jnp.asarray(wi).T, perm, col_order,
+                                           self.hcfg, pack=False)
+                mask = realize.mask_to_original_rows(r.mask_p, perm, axis=0)
+                return mask.T, r.retained
+
+            lead = w.ndim - 2
+            if lead == 0:
+                return one(w)
+            flat = w.reshape((-1,) + w.shape[-2:])
+            outs = [one(flat[i]) for i in range(flat.shape[0])]
+            mask = jnp.stack([o[0] for o in outs]).reshape(w.shape)
+            return mask, float(np.mean([o[1] for o in outs]))
+
+        work = list(zip(instances, rngs))
+        if self.workers <= 1 or len(work) <= 1:
+            results = [one_instance(a) for a in work]
+        else:
+            with ThreadPoolExecutor(max_workers=self.workers) as ex:
+                results = list(ex.map(one_instance, work))
+
+        masks = jax.tree.map(lambda x: None, params,
+                             is_leaf=lambda x: not isinstance(x, (dict, list, tuple)))
+        masks = dict(masks)
+        for ((key, sel, node), _), (mask, retained) in zip(work, results):
+            container = get_container(params, key, sel)
+            pnode = nn.get_path(container, node.path)
+            mcontainer = get_container(masks, key, sel)
+            mcontainer = nn.set_path(
+                mcontainer, node.path,
+                {k: (mask if k == "w" else None) for k in pnode},
+            )
+            masks = set_container(masks, key, sel, mcontainer)
+            self.report.per_layer.append((f"{key}/{node.path}", retained))
+        if self.cache:
+            self.report.cache_hits += self.cache.hits - hits0
+            self.report.searches_run += self.cache.misses - misses0
+        else:
+            self.report.searches_run += len(work)
+        return masks
+
+
+def _restack(per_layer: list[tuple]):
+    """Restack per-layer (params, masks, packed) trees along a new lead axis."""
+    restacked = []
+    for j in range(len(per_layer[0])):
+        restacked.append(
+            jax.tree.map(
+                lambda *xs: None if xs[0] is None else jnp.stack(xs),
+                *[o[j] for o in per_layer],
+                is_leaf=lambda x: x is None,
+            )
+        )
+    return tuple(restacked)

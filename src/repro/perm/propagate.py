@@ -1,0 +1,87 @@
+"""Phase 2 — fold searched permutations along graph edges.
+
+All helpers operate on STORED orientation (n_in, n_out) weights — HiNM rows
+are stored columns. `perm` may carry a leading expert axis (E, n_out) for
+MoE expert stacks; weight leaves then carry a matching (E, n_in, n_out).
+
+Folding rules by edge kind:
+  self / tied         : permute the stored n_out axis (+ bias)
+  producer → consumer : permute the consumer's stored n_in axis
+  gqa-expand          : expand the within-kv-head perm to query heads
+                        first, then permute the consumer's n_in axis
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def gqa_expand_perm(perm_v: np.ndarray, n_kv: int, n_heads: int, hd: int) -> np.ndarray:
+    """Expand a (KV*hd) within-kv-head row perm to the (H*hd) wo-column perm."""
+    g = n_heads // n_kv
+    out = np.empty(n_heads * hd, dtype=np.int64)
+    for h in range(n_heads):
+        kv = h // g
+        local = perm_v[kv * hd : (kv + 1) * hd] - kv * hd
+        out[h * hd : (h + 1) * hd] = h * hd + local
+    return out
+
+
+def permute_out(w, perm):
+    """Permute the stored n_out axis (axis -1) — producer row perm."""
+    if w.ndim == 3:
+        return jnp.stack([jnp.take(w[e], jnp.asarray(perm[e]), axis=1)
+                          for e in range(w.shape[0])])
+    return jnp.take(w, jnp.asarray(perm), axis=1)
+
+
+def permute_bias(b, perm):
+    if b.ndim == 2:
+        return jnp.stack([jnp.take(b[e], jnp.asarray(perm[e]))
+                          for e in range(b.shape[0])])
+    return jnp.take(b, jnp.asarray(perm))
+
+
+def permute_in(w, perm):
+    """Permute the stored n_in axis — consumer column perm."""
+    if w.ndim == 3:
+        p = perm if perm.ndim == 2 else np.broadcast_to(perm, (w.shape[0],) + perm.shape)
+        return jnp.stack([jnp.take(w[e], jnp.asarray(p[e]), axis=0)
+                          for e in range(w.shape[0])])
+    return jnp.take(w, jnp.asarray(perm), axis=0)
+
+
+def is_identity(perm) -> bool:
+    if perm.ndim == 2:
+        return all(np.array_equal(p, np.arange(p.shape[0])) for p in perm)
+    return np.array_equal(perm, np.arange(perm.shape[0]))
+
+
+# ---------------------------------------------------------------------------
+# consistency validation — the invariants the walker only held implicitly
+# ---------------------------------------------------------------------------
+
+
+def check_bijection(perm: np.ndarray, what: str) -> None:
+    flat = perm.reshape(-1, perm.shape[-1]) if perm.ndim == 2 else perm[None]
+    for p in flat:
+        if not np.array_equal(np.sort(p), np.arange(p.shape[0])):
+            raise ValueError(f"{what}: folded perm is not a bijection")
+
+
+def check_identity(perm: np.ndarray, what: str) -> None:
+    if not is_identity(perm):
+        raise ValueError(f"{what}: residual-identity constraint violated")
+
+
+def check_block_diagonal(perm: np.ndarray, row_blocks: int, what: str) -> None:
+    flat = perm.reshape(-1, perm.shape[-1]) if perm.ndim == 2 else perm[None]
+    bs = flat.shape[-1] // row_blocks
+    for p in flat:
+        src_blocks = p // bs
+        dst_blocks = np.arange(p.shape[0]) // bs
+        if not np.array_equal(src_blocks, dst_blocks):
+            raise ValueError(
+                f"{what}: block-diagonal constraint violated "
+                f"(a row crossed one of the {row_blocks} blocks)"
+            )

@@ -1,0 +1,67 @@
+"""Phase 3 — pack + mask + report from search results.
+
+One implementation shared by `prune_model`, `prune_matrix`, and the
+virtual (mask-only) path. All functions here take HiNM orientation
+(n_out, n_in); `realize_stored` adapts the stored (n_in, n_out) layout the
+model trees use.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import packing, sparsity
+from repro.core.types import HiNMConfig, PackedHiNM
+
+
+@dataclasses.dataclass
+class Realized:
+    """Packed/masked projection. Arrays are HiNM orientation (n_out, n_in);
+    `w_p` and `mask_p` are aligned to the PERMUTED row order."""
+
+    w_p: jnp.ndarray
+    mask_p: jnp.ndarray
+    packed: PackedHiNM
+    retained: float       # fraction of magnitude saliency kept
+
+
+def realize_matrix(w, out_perm, col_order, hcfg: HiNMConfig,
+                   pack: bool = True, sal=None) -> Realized:
+    """Pack one (n_out, n_in) weight given search results.
+
+    Packing and the mask both select N:M survivors from the same saliency
+    (`sal` in ORIGINAL row order, defaulting to the permuted weight's
+    magnitude), so their supports are identical.
+    """
+    w_p = jnp.take(jnp.asarray(w), jnp.asarray(out_perm), axis=0)
+    if sal is None:
+        sal_p = jnp.abs(w_p.astype(jnp.float32))
+    else:
+        sal_p = jnp.take(jnp.asarray(sal, dtype=jnp.float32),
+                         jnp.asarray(out_perm), axis=0)
+    col = jnp.asarray(col_order)
+    packed = packing.pack(w_p, hcfg, col_ids=col, sal=sal_p) if pack else None
+    mask_p = sparsity.hinm_mask_from_columns(sal_p, col, hcfg)
+    retained = float(jnp.sum(sal_p * mask_p) / jnp.maximum(sal_p.sum(), 1e-30))
+    return Realized(w_p=w_p, mask_p=mask_p, packed=packed, retained=retained)
+
+
+def realize_stored(w_stored, out_perm, col_order, hcfg: HiNMConfig,
+                   pack: bool = True):
+    """Stored-orientation wrapper: (n_in, n_out) in, stored-orientation out.
+
+    Returns (w_permuted, mask, packed, retained) with w/mask transposed
+    back to storage layout.
+    """
+    r = realize_matrix(jnp.asarray(w_stored).T, out_perm, col_order, hcfg,
+                       pack=pack)
+    return r.w_p.T, r.mask_p.T, r.packed, r.retained
+
+
+def mask_to_original_rows(mask_p, out_perm, axis: int = 0):
+    """Map a permuted-row mask back to the original row order (virtual
+    pruning: params untouched, tiles become non-contiguous row sets)."""
+    inv = np.argsort(out_perm)
+    return jnp.take(mask_p, jnp.asarray(inv), axis=axis)

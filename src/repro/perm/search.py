@@ -1,0 +1,97 @@
+"""Phase 1 — permutation search for one projection (HiNM orientation).
+
+One implementation shared by `train.pruning`, `core.api.prune_matrix`, and
+the virtual (mask-only) path; previously these carried two diverging
+copies. Methods:
+
+  gyro      : annealed-sampling OCP + Hungarian ICP (the paper's algorithm)
+  ocp_only / icp_only / noperm : ablations of the two phases
+  v1        : OVW-style one-shot k-means OCP + our ICP   (baseline HiNM-V1)
+  v2        : our OCP + Apex-style greedy swap ICP       (baseline HiNM-V2)
+
+OCP runs on `sal_rows` (the search saliency, optionally extended with tied
+partners' columns so the shared row perm is chosen jointly), per contiguous
+row block when the node is block-diagonal constrained. ICP then runs on the
+row-permuted `sal`.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import baselines, gyro, sparsity
+from repro.core.types import HiNMConfig
+from repro.perm.cache import PermCache, search_key
+
+
+def search_projection(
+    sal: np.ndarray,
+    sal_rows: np.ndarray,
+    hcfg: HiNMConfig,
+    *,
+    method: str = "gyro",
+    can_permute_rows: bool = True,
+    row_blocks: int = 1,
+    rng: np.random.Generator | None = None,
+    ocp_iters: int = 8,
+    icp_iters: int = 8,
+    cache: PermCache | None = None,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Search on (n_out, n_in) saliency. Returns (out_perm, col_order).
+
+    `col_order` is (T, K): absolute kept-column ids per tile in ICP order —
+    exactly the vec_idx the packed format stores.
+    """
+    rng = rng or np.random.default_rng(0)
+    n_out = sal.shape[0]
+    if method not in ("gyro", "noperm", "icp_only", "ocp_only", "v1", "v2"):
+        raise ValueError(f"unknown method {method!r}")
+
+    key = None
+    if cache is not None:
+        key = search_key(sal, sal_rows, hcfg, method=method,
+                         can_permute_rows=can_permute_rows,
+                         row_blocks=row_blocks, ocp_iters=ocp_iters,
+                         icp_iters=icp_iters)
+        hit = cache.get(key)
+        if hit is not None:
+            return hit
+
+    run_ocp = can_permute_rows and method in ("gyro", "ocp_only", "v1", "v2")
+    run_icp = method in ("gyro", "icp_only", "v1", "v2")
+
+    if run_ocp:
+        padded = np.pad(sal_rows, ((0, 0), (0, (-sal_rows.shape[1]) % hcfg.m)))
+        bs = n_out // row_blocks
+        perms = []
+        for b in range(row_blocks):
+            blk = padded[b * bs : (b + 1) * bs]
+            if method == "v1":
+                p = baselines.ovw_ocp(blk, hcfg, rng)
+            else:
+                p, _ = gyro.ocp(blk, hcfg, iters=ocp_iters, rng=rng)
+            perms.append(p + b * bs)
+        out_perm = np.concatenate(perms)
+    else:
+        out_perm = np.arange(n_out)
+
+    sal_p = sal[out_perm]
+    if run_icp and method == "v2":
+        col_ids = np.asarray(sparsity.kept_column_ids(jnp.asarray(sal_p), hcfg))
+        t = col_ids.shape[0]
+        gathered = np.take_along_axis(
+            sal_p.reshape(t, hcfg.v, -1), col_ids[:, None, :], axis=2
+        )
+        col_order = np.empty_like(col_ids)
+        for ti in range(t):
+            o = baselines.apex_icp_tile(gathered[ti], hcfg, rng)
+            col_order[ti] = col_ids[ti][o]
+    else:
+        res = gyro.gyro_permute(sal_p, hcfg, icp_iters=icp_iters, rng=rng,
+                                run_ocp=False, run_icp=run_icp)
+        col_order = res.col_order
+
+    col_order = np.asarray(col_order, dtype=np.int32)
+    if cache is not None:
+        cache.put(key, out_perm, col_order)
+    return out_perm, col_order

@@ -41,14 +41,6 @@ class ServeStats:
         return self.packed_param_bytes / max(self.dense_param_bytes, 1)
 
 
-def _param_bytes(params) -> tuple[int, int]:
-    packed = 0
-    dense = 0
-    for leaf in jax.tree.leaves(params):
-        packed += leaf.size * leaf.dtype.itemsize
-    return packed, dense
-
-
 class ServeEngine:
     def __init__(self, cfg, params, max_seq: int = 512, temperature: float = 0.0):
         self.cfg = cfg

@@ -13,50 +13,17 @@ import jax.numpy as jnp
 from repro.core.types import HiNMConfig, PackedHiNM
 from repro.models import module as nn
 from repro.models import zoo
+from repro.perm.graph import get_container as _get_container
+from repro.perm.graph import set_container as _set_container
 
 
 def _planned_paths(cfg):
-    """Yield (container_key, stack_selector, spec) for every planned path."""
-    plan = zoo.hinm_plan(cfg)
-    if isinstance(plan, dict) and "enc" in plan:
-        for k in ("enc", "dec"):
-            for spec in plan[k]:
-                yield k, None, spec
-                for t in spec.tied:
-                    yield k, None, _tied_spec(spec, t)
-    elif isinstance(plan, dict):
-        for j, specs in plan.items():
-            for spec in specs:
-                yield "stacks", j, spec
-                for t in spec.tied:
-                    yield "stacks", j, _tied_spec(spec, t)
-    else:
-        for spec in plan:
-            yield "blocks", None, spec
-            for t in spec.tied:
-                yield "blocks", None, _tied_spec(spec, t)
+    """Yield (container_key, stack_selector, node) for every planned path.
 
-
-def _tied_spec(spec, path):
-    import dataclasses
-
-    return dataclasses.replace(spec, path=path, tied=(), consumers=())
-
-
-def _get_container(tree, key, sel):
-    node = tree[key]
-    return node[sel] if sel is not None else node
-
-
-def _set_container(tree, key, sel, value):
-    out = dict(tree)
-    if sel is not None:
-        lst = list(out[key])
-        lst[sel] = value
-        out[key] = lst
-    else:
-        out[key] = value
-    return out
+    Nodes come from the compiled PermGraph (tied partners included as
+    first-class nodes), in plan order.
+    """
+    yield from zoo.perm_graph(cfg).instances()
 
 
 def packed_leaf_shapes(w_shape: tuple[int, ...], hcfg: HiNMConfig, dtype):

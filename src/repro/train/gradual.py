@@ -90,9 +90,15 @@ def make_mask_schedule(cfg, sched: GradualSchedule, method: str = "gyro"):
     At each `update_every` step the masks are recomputed from the live
     weights at the scheduled sparsity; at `nm_step` (and every
     `refresh_perm_every` if nonzero) the full gyro permutation re-runs and
-    the params are physically re-permuted in the loop state.
+    the params are physically re-permuted in the loop state. Refreshes
+    share a saliency-hash PermCache, so a refresh over weights whose
+    saliency hasn't changed (resumed runs, frozen layers, repeated
+    schedule hits) skips the redundant gyro searches.
     """
+    from repro.perm import PermCache
+
     state_cache = {"last": -1}
+    perm_cache = PermCache()
 
     def schedule(step: int, loop_state):
         due = (step % sched.update_every == 0) or step == sched.nm_step
@@ -117,6 +123,7 @@ def make_mask_schedule(cfg, sched: GradualSchedule, method: str = "gyro"):
             _, masks, _, _ = pruning.prune_model(
                 loop_state.params, cfg, method=method,
                 rng=np.random.default_rng(step), permute_params=False,
+                cache=perm_cache,
             )
             return masks
         if hcfg.vector_sparsity <= 0.0 and not nm_on:

@@ -1,282 +1,29 @@
-"""Model-level HiNM pruning walker.
+"""Model-level HiNM pruning on the PermGraph engine.
 
-Applies each model's `hinm_plan` to its params:
-  - runs gyro-permutation (or a baseline method) per prunable projection,
-  - PHYSICALLY applies row permutations to producer weights/biases and the
-    matching column permutations to consumers (so the pruned model computes
-    the same function — the paper's offline pre-ordering),
-  - returns (permuted params, keep-mask pytree, packed pytree, report).
+The model's `hinm_plan` compiles into a permutation-propagation graph
+(`repro.perm`): prunable projections are nodes, the coupling rules that
+used to be hardcoded walker special cases (GQA expansion, MoE expert
+stacks, tied SwiGLU partners, enc/dec stacks) are typed edges. Pruning runs
+in three phases — search (gyro per node, thread-pool dispatched over
+independent nodes across all layers), propagate (fold every out-perm along
+its edges, with bijection/identity/block validation), realize (pack + mask
++ report, shared with `core.api.prune_matrix`).
 
-Plan ordering invariant: producers appear before their consumers within a
-layer's spec list, so every projection is packed from its final (fully
-permuted) values. Tied partners (SwiGLU up-proj) share the producer's row
-perm and are pruned immediately after it with identity OCP.
-
-Handles scan-stacked layer params (leading L axis), per-pattern-position
-stacks (hybrid/ssm), enc/dec stacks, MoE expert stacks (leading E axis)
-and GQA consumer expansion ("path:gqa").
-
-Weights are stored (n_in, n_out); HiNM rows = stored columns, so the walker
+Weights are stored (n_in, n_out); HiNM rows = stored columns, so the engine
 transposes in and out of the core API. Returned masks align with the
 RETURNED (permuted) params, not the originals.
 """
 from __future__ import annotations
 
-import dataclasses
-
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import packing, sparsity
-from repro.core.gyro import gyro_permute
-from repro.core.types import HiNMConfig
-from repro.models import module as nn
-from repro.models import zoo
+from repro.perm import PermCache, ModelPermEngine
+from repro.perm.engine import PruneReport
+from repro.perm.graph import get_container
+from repro.perm.propagate import gqa_expand_perm as _gqa_expand_perm  # noqa: F401 (public via tests)
 
-
-@dataclasses.dataclass
-class PruneReport:
-    per_layer: list[tuple[str, float]] = dataclasses.field(default_factory=list)
-
-    @property
-    def mean_retained(self) -> float:
-        if not self.per_layer:
-            return 1.0
-        return float(np.mean([r for _, r in self.per_layer]))
-
-
-def _gqa_expand_perm(perm_v: np.ndarray, n_kv: int, n_heads: int, hd: int) -> np.ndarray:
-    """Expand a (KV*hd) within-kv-head row perm to the (H*hd) wo-column perm."""
-    g = n_heads // n_kv
-    out = np.empty(n_heads * hd, dtype=np.int64)
-    for h in range(n_heads):
-        kv = h // g
-        local = perm_v[kv * hd : (kv + 1) * hd] - kv * hd
-        out[h * hd : (h + 1) * hd] = h * hd + local
-    return out
-
-
-def _search(
-    sal: np.ndarray,
-    sal_rows: np.ndarray,
-    hcfg: HiNMConfig,
-    can_permute_rows: bool,
-    row_blocks: int,
-    method: str,
-    rng: np.random.Generator,
-    ocp_iters: int,
-    icp_iters: int,
-):
-    """Permutation search on (n_out, n_in) saliency. Returns (perm, col_order)."""
-    n_out = sal.shape[0]
-    run_ocp = can_permute_rows and method in ("gyro", "ocp_only", "v1", "v2")
-    run_icp = method in ("gyro", "icp_only", "v1", "v2")
-
-    if run_ocp:
-        padded = np.pad(sal_rows, ((0, 0), (0, (-sal_rows.shape[1]) % hcfg.m)))
-        if row_blocks > 1:
-            bs = n_out // row_blocks
-            perms = []
-            for b in range(row_blocks):
-                res = gyro_permute(padded[b * bs : (b + 1) * bs], hcfg,
-                                   ocp_iters=ocp_iters, rng=rng, run_icp=False)
-                perms.append(res.out_perm + b * bs)
-            out_perm = np.concatenate(perms)
-        else:
-            res = gyro_permute(padded, hcfg, ocp_iters=ocp_iters, rng=rng, run_icp=False)
-            out_perm = res.out_perm
-    else:
-        out_perm = np.arange(n_out)
-
-    res2 = gyro_permute(sal[out_perm], hcfg, icp_iters=icp_iters, rng=rng,
-                        run_ocp=False, run_icp=run_icp)
-    return out_perm, res2.col_order
-
-
-def _saliency(w_t: jnp.ndarray, fisher_t, saliency_kind: str) -> np.ndarray:
-    if saliency_kind == "second_order" and fisher_t is not None:
-        return np.asarray((w_t.astype(jnp.float32) ** 2) * fisher_t, np.float32)
-    return np.asarray(jnp.abs(w_t), np.float32)
-
-
-def _pack_and_mask(w, col_order, out_perm, hcfg):
-    """Pack an (n_in, n_out) stored weight given search results.
-
-    Returns (w_permuted, mask aligned to w_permuted, packed)."""
-    wt = jnp.asarray(w).T
-    w_p = wt[jnp.asarray(out_perm)]
-    sal_p = jnp.abs(w_p.astype(jnp.float32))
-    col = jnp.asarray(col_order)
-    packed = packing.pack(w_p, hcfg, col_ids=col, sal=sal_p)
-    mask_p = sparsity.hinm_mask_from_columns(sal_p, col, hcfg)
-    # nm selection inside pack uses the same saliency -> identical support
-    retained = float(jnp.sum(sal_p * mask_p) / jnp.maximum(sal_p.sum(), 1e-30))
-    return w_p.T, mask_p.T, packed, retained
-
-
-def _prune_layer_dict(
-    layer: dict,
-    specs: list,
-    cfg,
-    method: str,
-    rng: np.random.Generator,
-    fisher_layer: dict | None,
-    saliency_kind: str,
-    ocp_iters: int,
-    icp_iters: int,
-    report: PruneReport,
-    tag: str,
-):
-    """Prune one (unstacked) layer dict. Returns (new_layer, masks, packed)."""
-    hcfg: HiNMConfig = cfg.hinm
-    masks: dict[str, jnp.ndarray] = {}   # path -> mask (stored orientation)
-    packs: dict[str, object] = {}        # path -> PackedHiNM (or expert list)
-
-    def fisher_t(path, e=None):
-        if fisher_layer is None or saliency_kind != "second_order":
-            return None
-        f = nn.get_path(fisher_layer, path)["w"]
-        f = f if e is None else f[e]
-        return jnp.asarray(f).T
-
-    def prune_path(path, can_rows, row_blocks, tied_paths=(), forced_perm=None):
-        """Search + pack one path (handles MoE expert stacking)."""
-        node = nn.get_path(layer, path)
-        w = node["w"]
-
-        def one(wi, fi, tws, fperm):
-            wt = jnp.asarray(wi).T
-            sal = _saliency(wt, fi, saliency_kind)
-            sal_rows = sal
-            for tw in tws:
-                sal_rows = np.concatenate(
-                    [sal_rows, _saliency(jnp.asarray(tw).T, None, "magnitude")], axis=1
-                )
-            if fperm is not None:
-                perm = fperm
-                _, col_order = _search(sal[perm], sal, hcfg, False, 1, method, rng, 0, icp_iters)
-            else:
-                perm, col_order = _search(
-                    sal, sal_rows, hcfg, can_rows, row_blocks, method, rng,
-                    ocp_iters, icp_iters,
-                )
-            return (perm,) + _pack_and_mask(wi, col_order, perm, hcfg)
-
-        if w.ndim == 3:  # expert stack
-            tied_ws = [nn.get_path(layer, t)["w"] for t in tied_paths]
-            outs = [
-                one(w[e], fisher_t(path, e), [tw[e] for tw in tied_ws],
-                    None if forced_perm is None else forced_perm[e])
-                for e in range(w.shape[0])
-            ]
-            perm = np.stack([o[0] for o in outs])
-            new_w = jnp.stack([o[1] for o in outs])
-            mask = jnp.stack([o[2] for o in outs])
-            packed = jax.tree.map(lambda *xs: jnp.stack(xs), *[o[3] for o in outs])
-            retained = float(np.mean([o[4] for o in outs]))
-        else:
-            tied_ws = [nn.get_path(layer, t)["w"] for t in tied_paths]
-            perm, new_w, mask, packed, retained = one(
-                w, fisher_t(path), tied_ws, forced_perm
-            )
-        report.per_layer.append((f"{tag}/{path}", retained))
-        return perm, new_w, mask, packed
-
-    def permute_cols(w, perm):
-        """Permute stored n_out axis (axis -1) — producer row perm."""
-        if w.ndim == 3:
-            return jnp.stack([jnp.take(w[e], jnp.asarray(perm[e]), axis=1)
-                              for e in range(w.shape[0])])
-        return jnp.take(w, jnp.asarray(perm), axis=1)
-
-    def permute_bias(b, perm):
-        if b.ndim == 2:
-            return jnp.stack([jnp.take(b[e], jnp.asarray(perm[e]))
-                              for e in range(b.shape[0])])
-        return jnp.take(b, jnp.asarray(perm))
-
-    def permute_rows(w, perm):
-        """Permute stored n_in axis — consumer column perm."""
-        if w.ndim == 3:
-            p = perm if perm.ndim == 2 else np.broadcast_to(perm, (w.shape[0],) + perm.shape)
-            return jnp.stack([jnp.take(w[e], jnp.asarray(p[e]), axis=0)
-                              for e in range(w.shape[0])])
-        return jnp.take(w, jnp.asarray(perm), axis=0)
-
-    def is_identity(perm):
-        if perm.ndim == 2:
-            return all(np.array_equal(p, np.arange(p.shape[0])) for p in perm)
-        return np.array_equal(perm, np.arange(perm.shape[0]))
-
-    for spec in specs:
-        perm, new_w, mask, packed = prune_path(
-            spec.path, spec.can_permute_rows, spec.row_blocks, spec.tied
-        )
-        node = dict(nn.get_path(layer, spec.path))
-        node["w"] = new_w
-        if "b" in node and node["b"] is not None and not is_identity(perm):
-            node["b"] = permute_bias(node["b"], perm)
-        layer = nn.set_path(layer, spec.path, node)
-        masks[spec.path] = mask
-        packs[spec.path] = packed
-
-        if not is_identity(perm):
-            # tied partners share the row perm; consumers fold it into cols
-            for t in spec.tied:
-                tn = dict(nn.get_path(layer, t))
-                tn["w"] = permute_cols(tn["w"], perm)
-                if "b" in tn and tn["b"] is not None:
-                    tn["b"] = permute_bias(tn["b"], perm)
-                layer = nn.set_path(layer, t, tn)
-            for cons in spec.consumers:
-                cpath, _, mode = cons.partition(":")
-                if mode == "gqa":
-                    cperm = _gqa_expand_perm(perm, cfg.n_kv_heads, cfg.n_heads, cfg.head_dim)
-                else:
-                    cperm = perm
-                cn = dict(nn.get_path(layer, cpath))
-                cn["w"] = permute_rows(cn["w"], cperm)
-                layer = nn.set_path(layer, cpath, cn)
-
-        # tied partners get their own ICP/pack now (identity OCP, rows fixed)
-        for t in spec.tied:
-            _, tw, tmask, tpacked = prune_path(t, False, 1, (), forced_perm=None)
-            tn = dict(nn.get_path(layer, t))
-            tn["w"] = tw
-            layer = nn.set_path(layer, t, tn)
-            masks[t] = tmask
-            packs[t] = tpacked
-
-    # assemble mask / packed pytrees mirroring the (permuted) layer
-    mask_tree = jax.tree.map(lambda x: None, layer,
-                             is_leaf=lambda x: not isinstance(x, dict))
-    packed_tree = layer
-    for path, m in masks.items():
-        node = nn.get_path(layer, path)
-        mask_tree = nn.set_path(
-            mask_tree, path, {k: (m if k == "w" else None) for k in node}
-        )
-    for path, p in packs.items():
-        node = dict(nn.get_path(layer, path))
-        node["w"] = p
-        packed_tree = nn.set_path(packed_tree, path, node)
-    return layer, mask_tree, packed_tree
-
-
-def _map_stacked(layer_stack, fn, n: int):
-    """Apply fn to each unstacked layer of a stacked tree; restack results."""
-    outs = [fn(jax.tree.map(lambda a: a[i], layer_stack), i) for i in range(n)]
-    restacked = []
-    for j in range(len(outs[0])):
-        restacked.append(
-            jax.tree.map(
-                lambda *xs: None if xs[0] is None else jnp.stack(xs),
-                *[o[j] for o in outs],
-                is_leaf=lambda x: x is None,
-            )
-        )
-    return restacked
+__all__ = ["PruneReport", "prune_model", "apply_masks", "_gqa_expand_perm"]
 
 
 def prune_model(
@@ -289,6 +36,8 @@ def prune_model(
     ocp_iters: int = 8,
     icp_iters: int = 8,
     permute_params: bool = True,
+    cache: PermCache | None = None,
+    workers: int | None = None,
 ):
     """Prune every planned projection. Returns (params', masks, packed, report).
 
@@ -297,25 +46,27 @@ def prune_model(
     non-contiguous row sets — irrelevant for masked-dense training, and it
     keeps optimizer moments aligned when refreshing masks mid-training).
     Packing for serving requires the physical layout (`True`, default).
+
+    `cache` (a PermCache) skips searches whose saliency matrices hash to a
+    previously solved instance — repeated gradual-pruning refreshes hit it.
+    `workers` caps the search thread pool (default REPRO_PERM_WORKERS or
+    cpu count; 1 = serial).
     """
-    rng = rng or np.random.default_rng(0)
-    plan = zoo.hinm_plan(cfg)
-    report = PruneReport()
+    engine = ModelPermEngine(
+        cfg, method=method, rng=rng or np.random.default_rng(0),
+        fisher=fisher, saliency_kind=saliency_kind,
+        ocp_iters=ocp_iters, icp_iters=icp_iters,
+        cache=cache, workers=workers,
+    )
     if not permute_params:
-        return _prune_virtual(params, cfg, method, rng, fisher, saliency_kind,
-                              ocp_iters, icp_iters, report)
+        masks = engine.run_virtual(params)
+        return params, masks, None, engine.report
 
-    def prune_stack(stack, specs, fstack, tag):
-        n = jax.tree.leaves(stack)[0].shape[0]
-
-        def fn(layer, i):
-            fl = None if fstack is None else jax.tree.map(lambda a: a[i], fstack)
-            return _prune_layer_dict(
-                layer, specs, cfg, method, rng, fl, saliency_kind,
-                ocp_iters, icp_iters, report, f"{tag}[{i}]",
-            )
-
-        return _map_stacked(stack, fn, n)
+    stacked = {}
+    for ci, c in enumerate(engine.graph.containers):
+        fstack = None if fisher is None else get_container(fisher, c.key, c.sel)
+        stacked[ci] = (get_container(params, c.key, c.sel), fstack)
+    results = engine.run_stacks(stacked)
 
     def none_like(tree):
         return jax.tree.map(lambda x: None, tree,
@@ -324,77 +75,24 @@ def prune_model(
     new_params = dict(params)
     masks = dict(none_like(params))
     packed = dict(params)
-    if isinstance(plan, dict) and "enc" in plan:
-        fe = None if fisher is None else fisher["enc"]
-        fd = None if fisher is None else fisher["dec"]
-        enc_p, enc_m, enc_k = prune_stack(params["enc"], plan["enc"], fe, "enc")
-        dec_p, dec_m, dec_k = prune_stack(params["dec"], plan["dec"], fd, "dec")
-        new_params.update(enc=enc_p, dec=dec_p)
-        masks.update(enc=enc_m, dec=dec_m)
-        packed.update(enc=enc_k, dec=dec_k)
-    elif isinstance(plan, dict):  # per-pattern-position stacks
-        ps, ms, ks = list(params["stacks"]), [], []
-        for j, specs in plan.items():
-            fj = None if fisher is None else fisher["stacks"][j]
-            p, m, k = prune_stack(params["stacks"][j], specs, fj, f"stack{j}")
-            ps[j] = p
-            ms.append(m)
-            ks.append(k)
-        new_params["stacks"] = ps
-        masks["stacks"] = ms
-        packed["stacks"] = ks
-    else:
-        fb = None if fisher is None else fisher["blocks"]
-        blk_p, blk_m, blk_k = prune_stack(params["blocks"], plan, fb, "blocks")
-        new_params["blocks"] = blk_p
-        masks["blocks"] = blk_m
-        packed["blocks"] = blk_k
-    # non-pruned top-level entries of packed keep the permuted params
-    for key in new_params:
-        if key not in ("blocks", "stacks", "enc", "dec"):
-            packed[key] = new_params[key]
-    return new_params, masks, packed, report
-
-
-def _prune_virtual(params, cfg, method, rng, fisher, saliency_kind,
-                   ocp_iters, icp_iters, report):
-    """Mask-only pruning: gyro search per projection, mask mapped back to
-    the original row order; params untouched, no packing."""
-    from repro.train.abstract import _get_container, _planned_paths, _set_container
-
-    hcfg = cfg.hinm
-    masks = jax.tree.map(lambda x: None, params,
-                         is_leaf=lambda x: not isinstance(x, (dict, list, tuple)))
-    masks = dict(masks)
-    for key, sel, spec in _planned_paths(cfg):
-        container = _get_container(params, key, sel)
-        node = nn.get_path(container, spec.path)
-        w = node["w"]
-
-        def one(wi):
-            wt = jnp.asarray(wi).T
-            sal = _saliency(wt, None, "magnitude")
-            perm, col_order = _search(sal, sal, hcfg, spec.can_permute_rows,
-                                      spec.row_blocks, method, rng,
-                                      ocp_iters, icp_iters)
-            _, mask_p, _, retained = _pack_and_mask(wi, col_order, perm, hcfg)
-            inv = np.argsort(perm)
-            return jnp.take(mask_p, jnp.asarray(inv), axis=1), retained
-
-        lead = w.ndim - 2
-        if lead == 0:
-            mask, retained = one(w)
+    stacks_p = stacks_m = stacks_k = None
+    for ci, c in enumerate(engine.graph.containers):
+        p, m, k = results[ci]
+        if c.sel is not None:  # per-pattern-position stacks
+            if stacks_p is None:
+                stacks_p = list(params[c.key])
+                stacks_m, stacks_k = [None] * len(stacks_p), [None] * len(stacks_p)
+            stacks_p[c.sel], stacks_m[c.sel], stacks_k[c.sel] = p, m, k
+            new_params[c.key], masks[c.key], packed[c.key] = (
+                stacks_p, stacks_m, stacks_k)
         else:
-            flat = w.reshape((-1,) + w.shape[-2:])
-            outs = [one(flat[i]) for i in range(flat.shape[0])]
-            mask = jnp.stack([o[0] for o in outs]).reshape(w.shape)
-            retained = float(np.mean([o[1] for o in outs]))
-        report.per_layer.append((f"{key}/{spec.path}", retained))
-        mcontainer = _get_container(masks, key, sel)
-        mcontainer = nn.set_path(mcontainer, spec.path,
-                                 {k: (mask if k == "w" else None) for k in node})
-        masks = _set_container(masks, key, sel, mcontainer)
-    return params, masks, None, report
+            new_params[c.key], masks[c.key], packed[c.key] = p, m, k
+    # non-pruned top-level entries of packed keep the (permuted) params
+    pruned_keys = {c.key for c in engine.graph.containers}
+    for key in new_params:
+        if key not in pruned_keys:
+            packed[key] = new_params[key]
+    return new_params, masks, packed, engine.report
 
 
 def apply_masks(params, masks):

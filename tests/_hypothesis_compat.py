@@ -1,0 +1,65 @@
+"""Optional-hypothesis shim for property tests.
+
+`hypothesis` is a dev-only dependency; a missing install must not kill
+test collection. When it is absent, `given` degrades to a deterministic
+parametrize over a small fixed grid drawn from the declared strategies, so
+the properties still get (reduced) coverage.
+"""
+from __future__ import annotations
+
+import itertools
+
+import pytest
+
+try:
+    import hypothesis
+    import hypothesis.strategies as st
+
+    HAVE_HYPOTHESIS = True
+
+    def given(**strategies):
+        return hypothesis.given(**strategies)
+
+    def settings(**kw):
+        return hypothesis.settings(**kw)
+
+    def sampled_from(xs):
+        return st.sampled_from(xs)
+
+    def integers(lo, hi):
+        return st.integers(lo, hi)
+
+except ImportError:  # deterministic fallback
+    HAVE_HYPOTHESIS = False
+
+    class _Sampled:
+        def __init__(self, xs):
+            self.values = list(xs)
+
+    def sampled_from(xs):
+        return _Sampled(xs)
+
+    def integers(lo, hi):
+        # ends plus a fixed interior point: cheap boundary coverage
+        vals = sorted({lo, (lo + hi) // 2, hi})
+        return _Sampled(vals)
+
+    def settings(**kw):
+        def deco(fn):
+            return fn
+
+        return deco
+
+    def given(**strategies):
+        names = list(strategies)
+        grids = [strategies[n].values for n in names]
+        cases = list(itertools.product(*grids))
+
+        if len(names) == 1:  # pytest expects scalars, not 1-tuples
+            cases = [c[0] for c in cases]
+
+        def deco(fn):
+            argnames = ",".join(names)
+            return pytest.mark.parametrize(argnames, cases)(fn)
+
+        return deco

@@ -12,6 +12,7 @@ import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.configs.base import ARCH_IDS, load_arch
 from repro.distributed import sharding as shd
 from repro.launch.mesh import make_production_mesh
@@ -25,10 +26,8 @@ REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 @pytest.fixture(scope="module")
 def meshes():
     # AbstractMesh: spec resolution without needing 512 real devices
-    from jax.sharding import AbstractMesh
-
-    return [AbstractMesh((16, 16), ("data", "model")),
-            AbstractMesh((2, 16, 16), ("pod", "data", "model"))]
+    return [compat.abstract_mesh((16, 16), ("data", "model")),
+            compat.abstract_mesh((2, 16, 16), ("pod", "data", "model"))]
 
 
 @pytest.mark.parametrize("arch", ARCH_IDS)
@@ -71,8 +70,8 @@ SUBPROCESS_PROG = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp, numpy as np
-mesh = jax.make_mesh((4, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro import compat
+mesh = compat.make_mesh((4, 2), ("data", "model"))
 from repro.configs.base import load_arch
 from repro.models import zoo
 from repro.optim import make_optimizer
@@ -82,7 +81,7 @@ from repro.data.pipeline import SyntheticLMData
 cfg = load_arch("qwen2_0_5b").reduced(n_layers=2, d_model=64, n_heads=4,
                                       n_kv_heads=2, d_ff=128, vocab=256,
                                       head_dim=16)
-with jax.set_mesh(mesh):
+with compat.set_mesh(mesh):
     params = zoo.init(jax.random.PRNGKey(0), cfg)
     opt = make_optimizer("adamw")
     opt_state = opt.init(params)
@@ -119,9 +118,7 @@ def test_pjit_train_step_executes_on_8_devices():
 
 
 def test_batch_and_cache_specs():
-    from jax.sharding import AbstractMesh
-
-    mesh = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+    mesh = compat.abstract_mesh((2, 16, 16), ("pod", "data", "model"))
     cfg = load_arch("qwen2_5_14b")
     batch = {"tokens": jax.ShapeDtypeStruct((256, 128), jnp.int32),
              "odd": jax.ShapeDtypeStruct((3, 4), jnp.float32)}

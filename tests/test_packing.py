@@ -1,11 +1,11 @@
 """Packed HiNM format: exact round-trips and format invariants."""
-import hypothesis
-import hypothesis.strategies as st
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import packing, sparsity
 from repro.core.types import HiNMConfig
+
+from _hypothesis_compat import given, integers, sampled_from, settings
 
 
 def test_pack_unpack_equals_masked_dense(rng):
@@ -39,11 +39,11 @@ def test_packed_bytes_ratio():
     assert 0.25 < ratio < 0.45
 
 
-@hypothesis.settings(max_examples=20, deadline=None)
-@hypothesis.given(
-    seed=st.integers(0, 10_000),
-    v=st.sampled_from([8, 16]),
-    sv=st.sampled_from([0.25, 0.5]),
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=integers(0, 10_000),
+    v=sampled_from([8, 16]),
+    sv=sampled_from([0.25, 0.5]),
 )
 def test_property_roundtrip(seed, v, sv):
     cfg = HiNMConfig(v=v, n=2, m=4, vector_sparsity=sv)

@@ -1,0 +1,235 @@
+"""PermGraph subsystem: plan compilation, edge folding, cache, parallelism."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ArchConfig
+from repro.core.types import HiNMConfig
+from repro.models.module import PruneSpec
+from repro.perm import ModelPermEngine, PermCache, compile_model_graph
+from repro.perm.graph import (
+    Container,
+    EdgeKind,
+    ModelPermGraph,
+    compile_layer_graph,
+)
+from repro.perm.propagate import gqa_expand_perm
+from repro.train import pruning
+
+HCFG = HiNMConfig(v=8, n=2, m=4, vector_sparsity=0.5)
+
+CFG = ArchConfig(
+    name="dense", family="dense", n_layers=2, d_model=64, n_heads=4,
+    n_kv_heads=2, d_ff=128, vocab=256, head_dim=16, max_seq=64,
+    dtype=jnp.float32, hinm=HCFG,
+)
+
+
+# ---------------------------------------------------------------------------
+# graph compilation + validation
+# ---------------------------------------------------------------------------
+
+
+def test_compile_dense_plan_edges():
+    g = compile_model_graph(CFG).containers[0].graph
+    kinds = {(e.src, e.dst): e.kind for e in g.edges}
+    assert kinds[("attn/wv", "attn/wo")] == EdgeKind.GQA_EXPAND
+    assert kinds[("mlp/wg", "mlp/wu")] == EdgeKind.TIED
+    assert kinds[("mlp/wg", "mlp/wd")] == EdgeKind.PRODUCER
+    assert g.nodes["mlp/wu"].tied_to == "mlp/wg"
+    # tied partners inherit the producer's virtual search freedom
+    assert g.nodes["mlp/wu"].can_permute_rows
+    # residual-constrained nodes carry an identity-constraint edge
+    assert any(e.kind == EdgeKind.RESIDUAL for e in g.constraints("attn/wq"))
+    assert any(e.kind == EdgeKind.BLOCK_DIAGONAL
+               for e in g.constraints("attn/wv"))
+    # producers sort before their consumers
+    order = g.topo_order()
+    assert order.index("attn/wv") < order.index("attn/wo")
+    assert order.index("mlp/wg") < order.index("mlp/wd")
+
+
+def test_compile_all_zoo_families():
+    for fam, extra in [
+        ("dense", {}),
+        ("moe", dict(n_experts=2, top_k=1)),
+        ("encdec", dict(n_kv_heads=4, n_enc_layers=2)),
+    ]:
+        cfg = dataclasses.replace(CFG, name=fam, family=fam, **extra)
+        mg = compile_model_graph(cfg)
+        for c in mg.containers:
+            c.graph.validate()
+        assert len(list(mg.instances())) > 0
+
+
+def test_validation_rejects_unplanned_consumer():
+    with pytest.raises(ValueError, match="not a planned node"):
+        compile_layer_graph([PruneSpec("a", consumers=("missing",))])
+
+
+def test_validation_rejects_cycle():
+    with pytest.raises(ValueError, match="cycle"):
+        compile_layer_graph([
+            PruneSpec("a", consumers=("b",)),
+            PruneSpec("b", consumers=("a",)),
+        ])
+
+
+def test_validation_rejects_duplicate_and_double_fold():
+    with pytest.raises(ValueError, match="duplicate"):
+        compile_layer_graph([PruneSpec("a"), PruneSpec("a")])
+    with pytest.raises(ValueError, match="multiple producers"):
+        compile_layer_graph([
+            PruneSpec("a", consumers=("c",)),
+            PruneSpec("b", consumers=("c",)),
+            PruneSpec("c"),
+        ])
+
+
+# ---------------------------------------------------------------------------
+# gqa-expand round-trip
+# ---------------------------------------------------------------------------
+
+
+def _within_kv_perm(rng, n_kv, hd):
+    return np.concatenate([kv * hd + rng.permutation(hd) for kv in range(n_kv)])
+
+
+def test_gqa_expand_perm_roundtrip_preserves_attention():
+    """Permuting V rows within kv heads + folding the expanded perm into
+    wo's input columns leaves the attention output bit-compatible."""
+    rng = np.random.default_rng(0)
+    b, s, d = 2, 5, 32
+    n_heads, n_kv, hd = 4, 2, 8
+    g = n_heads // n_kv
+    x = rng.normal(size=(b, s, d)).astype(np.float32)
+    wv = rng.normal(size=(d, n_kv * hd)).astype(np.float32)
+    wo = rng.normal(size=(n_heads * hd, d)).astype(np.float32)
+    attn = rng.random((b, n_heads, s, s)).astype(np.float32)
+    attn /= attn.sum(-1, keepdims=True)  # row-stochastic stand-in for softmax
+
+    def forward(wv_, wo_):
+        v = (x @ wv_).reshape(b, s, n_kv, hd)
+        outs = []
+        for h in range(n_heads):
+            vh = v[:, :, h // g]                       # (B, S, hd)
+            outs.append(np.einsum("bqk,bkd->bqd", attn[:, h], vh))
+        return np.concatenate(outs, axis=-1) @ wo_
+
+    y0 = forward(wv, wo)
+    perm_v = _within_kv_perm(rng, n_kv, hd)
+    expanded = gqa_expand_perm(perm_v, n_kv, n_heads, hd)
+    assert sorted(expanded.tolist()) == list(range(n_heads * hd))
+    y1 = forward(wv[:, perm_v], wo[expanded, :])
+    np.testing.assert_allclose(y1, y0, rtol=1e-5, atol=1e-5)
+
+
+def test_gqa_expand_perm_rejects_nothing_but_is_blockwise():
+    perm_v = _within_kv_perm(np.random.default_rng(1), 2, 8)
+    out = gqa_expand_perm(perm_v, 2, 4, 8)
+    # every query head's slice stays inside its own head block
+    for h in range(4):
+        blk = out[h * 8:(h + 1) * 8]
+        assert (blk // 8 == h).all()
+
+
+# ---------------------------------------------------------------------------
+# propagation consistency (engine level)
+# ---------------------------------------------------------------------------
+
+
+def _swiglu_layer(rng, d, f):
+    return {
+        "mlp": {
+            "wg": {"w": jnp.asarray(rng.normal(size=(d, f)).astype(np.float32))},
+            "wu": {"w": jnp.asarray(rng.normal(size=(d, f)).astype(np.float32))},
+            "wd": {"w": jnp.asarray(rng.normal(size=(f, d)).astype(np.float32))},
+        }
+    }
+
+
+def test_propagation_folds_compose_to_identity():
+    """Searched perms folded along tied + producer edges keep the dense
+    SwiGLU forward identical, and every stored perm is consistent with the
+    realized weights."""
+    rng = np.random.default_rng(0)
+    d, f = 32, 64
+    layer = _swiglu_layer(rng, d, f)
+    stack = jax.tree.map(lambda a: a[None], layer)  # 1-layer stack
+    specs = [
+        PruneSpec("mlp/wg", tied=("mlp/wu",), consumers=("mlp/wd",)),
+        PruneSpec("mlp/wd", can_permute_rows=False),
+    ]
+    graph = ModelPermGraph([Container("blocks", None, "blocks",
+                                      compile_layer_graph(specs))])
+    engine = ModelPermEngine(CFG, ocp_iters=3, icp_iters=2,
+                             rng=np.random.default_rng(0), workers=1,
+                             graph=graph)
+    (newp, masks, packed), = engine.run_stacks({0: (stack, None)}).values()
+
+    results = engine.states[(0, 0)].results
+    perm_g, _ = results["mlp/wg"]
+    assert sorted(perm_g.tolist()) == list(range(f))
+    # wd got identity OCP (residual-constrained)
+    perm_d, _ = results["mlp/wd"]
+    assert np.array_equal(perm_d, np.arange(d))
+    # tied partner's rows follow the producer: new_wu == old_wu[:, perm_g]
+    old_wu = np.asarray(layer["mlp"]["wu"]["w"])
+    np.testing.assert_array_equal(
+        np.asarray(newp["mlp"]["wu"]["w"][0]), old_wu[:, perm_g]
+    )
+
+    def swiglu(p, x):
+        h = jax.nn.silu(x @ p["mlp"]["wg"]["w"]) * (x @ p["mlp"]["wu"]["w"])
+        return h @ p["mlp"]["wd"]["w"]
+
+    x = jnp.asarray(rng.normal(size=(4, d)).astype(np.float32))
+    y0 = swiglu(layer, x)
+    y1 = swiglu(jax.tree.map(lambda a: a[0], newp), x)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y0),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# cache + parallel dispatch
+# ---------------------------------------------------------------------------
+
+
+def _params():
+    from repro.models import zoo
+
+    return zoo.init(jax.random.PRNGKey(0), CFG)
+
+
+def test_perm_cache_skips_repeat_searches():
+    params = _params()
+    cache = PermCache()
+    _, m1, _, rep1 = pruning.prune_model(
+        params, CFG, ocp_iters=2, icp_iters=2, permute_params=False,
+        cache=cache, workers=1,
+    )
+    assert rep1.searches_run > 0 and rep1.cache_hits == 0
+    _, m2, _, rep2 = pruning.prune_model(
+        params, CFG, ocp_iters=2, icp_iters=2, permute_params=False,
+        cache=cache, workers=1, rng=np.random.default_rng(123),
+    )
+    assert rep2.searches_run == 0
+    assert rep2.cache_hits == rep1.searches_run
+    for a, b in zip(jax.tree.leaves(m1), jax.tree.leaves(m2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_parallel_dispatch_matches_serial():
+    params = _params()
+    outs = []
+    for workers in (1, 4):
+        newp, masks, packed, rep = pruning.prune_model(
+            params, CFG, ocp_iters=2, icp_iters=2,
+            rng=np.random.default_rng(7), workers=workers,
+        )
+        outs.append((newp, masks, packed))
+    for a, b in zip(jax.tree.leaves(outs[0]), jax.tree.leaves(outs[1])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

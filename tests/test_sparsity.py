@@ -1,12 +1,12 @@
 """Mask-construction invariants (unit + hypothesis property tests)."""
-import hypothesis
-import hypothesis.strategies as st
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.core import sparsity
 from repro.core.types import HiNMConfig
+
+from _hypothesis_compat import given, integers, sampled_from, settings
 
 
 def cfg_v8():
@@ -65,12 +65,12 @@ def test_unstructured_mask_density(rng):
     assert abs(m.mean() - 0.25) < 0.01
 
 
-@hypothesis.settings(max_examples=25, deadline=None)
-@hypothesis.given(
-    rows=st.sampled_from([8, 16, 24]),
-    cols=st.sampled_from([8, 16, 32]),
-    seed=st.integers(0, 1000),
-    n=st.sampled_from([1, 2]),
+@settings(max_examples=25, deadline=None)
+@given(
+    rows=sampled_from([8, 16, 24]),
+    cols=sampled_from([8, 16, 32]),
+    seed=integers(0, 1000),
+    n=sampled_from([1, 2]),
 )
 def test_property_hinm_mask_invariants(rows, cols, seed, n):
     """For any saliency: per-tile kept-column count is K; kept columns carry
@@ -89,8 +89,8 @@ def test_property_hinm_mask_invariants(rows, cols, seed, n):
         assert (t.sum(axis=1) == k * n // 4).all()
 
 
-@hypothesis.settings(max_examples=25, deadline=None)
-@hypothesis.given(seed=st.integers(0, 1000))
+@settings(max_examples=25, deadline=None)
+@given(seed=integers(0, 1000))
 def test_property_retained_le_total(seed):
     cfg = cfg_v8()
     sal = jnp.asarray(np.random.default_rng(seed).random((16, 16)).astype(np.float32))
