@@ -17,6 +17,7 @@ def main() -> None:
         fig3_fig4_oneshot,
         fig5_latency,
         permgraph_bench,
+        serve_bench,
         table1_deit,
         table2_gradual,
         table3_ablation,
@@ -30,6 +31,7 @@ def main() -> None:
         "fig5": fig5_latency.run,
         "compression": compression_bench.run,
         "permgraph": permgraph_bench.run,
+        "serve": serve_bench.run,
     }
     pattern = sys.argv[1] if len(sys.argv) > 1 else ""
     print("name,us_per_call,derived")

@@ -1,12 +1,14 @@
-"""Serve a HiNM-pruned model with batched requests.
+"""Serve a HiNM-pruned model under a staggered-arrival workload.
 
-  PYTHONPATH=src python examples/serve_hinm.py --batch 8 --new-tokens 24
+  PYTHONPATH=src python examples/serve_hinm.py --requests 10 --slots 4
 
-Prunes a small LM one-shot with gyro-permutation, packs it, and runs
-batched prefill+decode, reporting tokens/s and the weight-bandwidth
-reduction the packed format delivers (the quantity the TPU kernel turns
-into decode speedup). `--compare-dense` also serves the masked-dense model
-and verifies token-identical outputs.
+Prunes a small LM one-shot with gyro-permutation, packs it, and drives the
+continuous-batching scheduler with requests that arrive over time with
+mixed lengths and sampling params. Reports per-request TTFT / tokens/s /
+weight-bytes-per-token plus aggregate throughput, and compares against
+the naive static-batching policy on the same workload.
+`--compare-dense` also serves the masked-dense model and verifies
+token-identical greedy outputs under batching.
 """
 import argparse
 import os
@@ -18,17 +20,36 @@ import jax
 import numpy as np
 
 
+def build_workload(cfg, n_requests, prompt_len, rng):
+    from repro.serve import Request, SamplingParams
+
+    reqs = []
+    for i in range(n_requests):
+        params = SamplingParams(
+            max_new_tokens=24 if i % 3 == 0 else 8,
+            temperature=0.8 if i % 4 == 3 else 0.0,   # mix greedy + sampled
+            top_k=16 if i % 4 == 3 else 0,
+        )
+        reqs.append(Request(
+            rid=i,
+            prompt=rng.integers(0, cfg.vocab, (prompt_len,)).astype(np.int32),
+            params=params,
+            arrival=i,  # one new request per scheduler step
+        ))
+    return reqs
+
+
 def main():
     from repro.configs.base import load_arch
-    from repro.data.pipeline import SyntheticLMData
     from repro.models import zoo
-    from repro.serve import ServeEngine
+    from repro.serve import Scheduler
     from repro.train import pruning
 
     ap = argparse.ArgumentParser()
-    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--requests", type=int, default=10)
+    ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--new-tokens", type=int, default=24)
+    ap.add_argument("--decode-chunk", type=int, default=4)
     ap.add_argument("--compare-dense", action="store_true")
     args = ap.parse_args()
 
@@ -42,25 +63,52 @@ def main():
     print(f"mean retained saliency: {report.mean_retained:.4f} "
           f"at {cfg.hinm.total_sparsity:.0%} sparsity")
 
-    data = SyntheticLMData(cfg.vocab, args.prompt_len, args.batch, seed=0)
-    prompts = np.asarray(data.batch(0)["tokens"], np.int32)
+    max_seq = args.prompt_len + 32
+    rng = np.random.default_rng(0)
+    workload = build_workload(cfg, args.requests, args.prompt_len, rng)
 
-    eng = ServeEngine(cfg, packed, max_seq=args.prompt_len + args.new_tokens + 8)
-    out, stats = eng.generate(prompts, max_new_tokens=args.new_tokens)
-    print(f"prefill: {stats.prefill_seconds*1e3:.1f} ms for "
-          f"{args.batch}x{args.prompt_len} tokens")
-    print(f"decode : {stats.decode_tokens_per_second:.1f} tok/s "
-          f"({stats.tokens_generated} tokens)")
-    print(f"weight bytes: packed/dense = {stats.weight_bytes_ratio:.3f} "
-          f"(~{1/stats.weight_bytes_ratio:.1f}x less HBM traffic per token)")
+    sched = Scheduler(cfg, packed, max_slots=args.slots, max_seq=max_seq,
+                      decode_chunk=args.decode_chunk)
+    done = sched.run(workload)
+    st = sched.stats
+    pb = st.packed_param_bytes
+
+    print(f"\n{'rid':>3} {'new':>4} {'temp':>5} {'ttft_ms':>8} {'tok/s':>7} "
+          f"{'kB/tok':>7}  reason")
+    for r in sorted(done, key=lambda r: r.rid):
+        print(f"{r.rid:>3} {r.n_generated:>4} {r.params.temperature:>5.2f} "
+              f"{r.ttft * 1e3:>8.1f} {r.tokens_per_second:>7.1f} "
+              f"{r.weight_bytes_per_token(pb) / 1e3:>7.1f}  {r.finish_reason}")
+
+    print(f"\ncontinuous: {st.tokens_generated} tokens, "
+          f"{st.decode_tokens_per_second:.1f} tok/s decode, "
+          f"{st.decode_steps} batched steps, "
+          f"{st.finished_at_eos} finished at EOS")
+    print(f"weight bytes: packed/dense = {st.weight_bytes_ratio:.3f} "
+          f"(~{1 / st.weight_bytes_ratio:.1f}x less HBM traffic per read)")
+
+    static = Scheduler(cfg, packed, max_slots=args.slots, max_seq=max_seq,
+                       decode_chunk=args.decode_chunk, policy="static")
+    static.run(build_workload(cfg, args.requests, args.prompt_len,
+                              np.random.default_rng(0)))
+    print(f"static baseline: {static.stats.decode_steps} batched steps "
+          f"(continuous saved "
+          f"{static.stats.decode_steps - st.decode_steps} full-batch steps)")
 
     if args.compare_dense:
         masked = pruning.apply_masks(newp, masks)
-        eng_d = ServeEngine(cfg, masked, max_seq=args.prompt_len + args.new_tokens + 8)
-        out_d, stats_d = eng_d.generate(prompts, max_new_tokens=args.new_tokens)
-        same = np.array_equal(out, out_d)
-        print(f"packed vs masked-dense outputs identical: {same}")
+        greedy = [r for r in workload if r.params.temperature <= 0.0]
+        dense = Scheduler(cfg, masked, max_slots=args.slots, max_seq=max_seq,
+                          decode_chunk=args.decode_chunk)
+        dense_reqs = build_workload(cfg, args.requests, args.prompt_len,
+                                    np.random.default_rng(0))
+        dense.run(dense_reqs)
+        by_rid = {r.rid: r for r in dense_reqs}
+        same = all(r.tokens == by_rid[r.rid].tokens for r in greedy)
+        print(f"packed vs masked-dense greedy outputs identical: {same}")
         assert same
+
+    jax.block_until_ready(sched.kv.cache)
 
 
 if __name__ == "__main__":

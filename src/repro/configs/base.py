@@ -47,6 +47,10 @@ class ArchConfig:
     norm: str = "rmsnorm"        # rmsnorm | layernorm
     act: str = "swiglu"          # swiglu | gelu
     tie_embeddings: bool = False
+    # tokenizer end-of-sequence id; -1 = none (generation runs to
+    # max_new_tokens). Serving ignores ids outside [0, vocab) — e.g. the
+    # full-tokenizer id on a vocab-reduced smoke config.
+    eos_id: int = -1
     # --- MoE ---
     n_experts: int = 0
     top_k: int = 0

@@ -11,6 +11,7 @@ CONFIG = ArchConfig(
     n_kv_heads=32,
     d_ff=13440,
     vocab=92416,
+    eos_id=2,  # </s> (codeqwen sentencepiece)
     head_dim=128,
     qkv_bias=True,
     rope_theta=1_000_000.0,

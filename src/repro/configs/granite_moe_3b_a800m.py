@@ -14,6 +14,7 @@ CONFIG = ArchConfig(
     n_kv_heads=8,
     d_ff=512,
     vocab=49155,
+    eos_id=0,  # <|end_of_text|>
     head_dim=64,
     n_experts=40,
     top_k=8,

@@ -12,6 +12,7 @@ CONFIG = ArchConfig(
     n_kv_heads=8,
     d_ff=32768,
     vocab=131072,
+    eos_id=2,  # <|eos|>
     head_dim=128,
     n_experts=8,
     top_k=2,

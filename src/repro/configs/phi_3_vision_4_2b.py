@@ -12,6 +12,7 @@ CONFIG = ArchConfig(
     n_kv_heads=32,
     d_ff=8192,
     vocab=32064,
+    eos_id=2,  # </s> (llama sentencepiece)
     head_dim=96,
     frontend="patch",
     frontend_tokens=576,

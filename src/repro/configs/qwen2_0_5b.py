@@ -11,6 +11,7 @@ CONFIG = ArchConfig(
     n_kv_heads=2,
     d_ff=4864,
     vocab=151936,
+    eos_id=151643,  # <|endoftext|>
     head_dim=64,
     qkv_bias=True,
     rope_theta=1_000_000.0,

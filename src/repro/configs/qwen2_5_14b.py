@@ -11,6 +11,7 @@ CONFIG = ArchConfig(
     n_kv_heads=8,
     d_ff=13824,
     vocab=152064,
+    eos_id=151643,  # <|endoftext|>
     head_dim=128,
     qkv_bias=True,
     rope_theta=1_000_000.0,

@@ -13,6 +13,7 @@ CONFIG = ArchConfig(
     n_kv_heads=1,
     d_ff=12288,
     vocab=256000,
+    eos_id=1,  # <eos> (gemma sentencepiece)
     head_dim=256,
     block_pattern=("rec", "rec", "attn"),
     window=2048,

@@ -14,6 +14,7 @@ CONFIG = ArchConfig(
     n_kv_heads=16,
     d_ff=4096,
     vocab=256206,
+    eos_id=3,  # </s> (nllb fairseq)
     head_dim=64,
     frontend="frames",
     act="gelu",

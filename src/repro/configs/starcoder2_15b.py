@@ -11,6 +11,7 @@ CONFIG = ArchConfig(
     n_kv_heads=4,
     d_ff=24576,
     vocab=49152,
+    eos_id=0,  # <|endoftext|>
     head_dim=128,
     qkv_bias=True,
     rope_theta=100_000.0,

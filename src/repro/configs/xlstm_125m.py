@@ -13,6 +13,7 @@ CONFIG = ArchConfig(
     n_kv_heads=4,
     d_ff=0,
     vocab=50304,
+    eos_id=0,  # <|endoftext|> (gpt-neox style)
     head_dim=192,
     block_pattern=("mlstm", "slstm"),
     norm="layernorm",

@@ -292,7 +292,14 @@ def cache_specs(cache, mesh: Mesh, cfg=None):
                 sp[2] = "model"
             specs.append(P(*sp))
         elif name in ("pos", "kpos"):
-            specs.append(P(*([None] * nd)))
+            # per-slot position tracking: (L, B) / (L, B, S) — follow the
+            # k/v batch sharding so slot writes stay local to the dp shard
+            sp = [None] * nd
+            if nd >= 2 and _fits(leaf.shape[1], mesh, dp):
+                sp[1] = dp
+            specs.append(P(*sp))
+        elif name == "enc_len" and nd == 1:  # (B,) — follow enc_out's batch
+            specs.append(P(dp if _fits(leaf.shape[0], mesh, dp) else None))
         elif name == "enc_out" and nd == 3:  # (B, T, D)
             sp = [None] * 3
             if _fits(leaf.shape[0], mesh, dp):

@@ -53,8 +53,13 @@ def init(key, cfg):
     }
 
 
-def _cross_attention(params, x, enc_out, cfg):
-    """Standard cross-attention: queries from x, keys/values from enc_out."""
+def _cross_attention(params, x, enc_out, cfg, enc_len=None):
+    """Standard cross-attention: queries from x, keys/values from enc_out.
+
+    `enc_len` (B,) masks padded encoder rows when `enc_out` comes from the
+    fixed-width decode cache (serve slot pool): valid rows get key position
+    0 and queries sit at 0, so the causal mask reduces to a bidirectional
+    attend-over-valid."""
     b, s, _ = x.shape
     t = enc_out.shape[1]
     h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
@@ -62,8 +67,13 @@ def _cross_attention(params, x, enc_out, cfg):
     k = nn.linear(params["wk"], enc_out).reshape(b, t, kvh, hd)
     v = nn.linear(params["wv"], enc_out).reshape(b, t, kvh, hd)
     qp = jnp.zeros((b, s), jnp.int32)
-    kp = jnp.zeros((b, t), jnp.int32)
-    out = L._attn_chunked(q, k, v, qp, kp, causal=False, window=0)
+    if enc_len is None:
+        kp = jnp.zeros((b, t), jnp.int32)
+        out = L._attn_chunked(q, k, v, qp, kp, causal=False, window=0)
+    else:
+        kp = jnp.where(jnp.arange(t, dtype=jnp.int32)[None, :] < enc_len[:, None],
+                       0, 2**30)
+        out = L._attn_chunked(q, k, v, qp, kp, causal=True, window=0)
     return nn.linear(params["wo"], out.reshape(b, s, h * hd))
 
 
@@ -89,13 +99,15 @@ def encode(params, cfg, frames: jax.Array, remat: bool = True):
     return L.norm(params["ln_enc"], x, cfg)
 
 
-def _dec_stack(params, cfg, x, positions, enc_out, caches=None, remat: bool = True):
+def _dec_stack(params, cfg, x, positions, enc_out, caches=None, remat: bool = True,
+               enc_len=None):
     def body(carry, layer):
         x = nn.constrain_batch(carry)
         lp, lc = layer if caches is not None else (layer, None)
         h, nc = L.attention(lp["attn"], L.norm(lp["ln1"], x, cfg), positions, cfg, lc)
         x = x + h
-        x = x + _cross_attention(lp["xattn"], L.norm(lp["ln_x"], x, cfg), enc_out, cfg)
+        x = x + _cross_attention(lp["xattn"], L.norm(lp["ln_x"], x, cfg), enc_out,
+                                 cfg, enc_len=enc_len)
         x = x + L.mlp(lp["mlp"], L.norm(lp["ln2"], x, cfg), cfg)
         return x, nc
 
@@ -130,31 +142,51 @@ def make_cache(cfg, batch: int, max_seq: int, dtype=None, t_enc: int | None = No
         "self": {
             "k": jnp.zeros((cfg.n_layers, batch, max_seq, cfg.n_kv_heads, cfg.head_dim), dtype),
             "v": jnp.zeros((cfg.n_layers, batch, max_seq, cfg.n_kv_heads, cfg.head_dim), dtype),
-            "pos": jnp.zeros((cfg.n_layers,), jnp.int32),
-            "kpos": jnp.full((cfg.n_layers, max_seq), 2**30, jnp.int32),
+            "pos": jnp.zeros((cfg.n_layers, batch), jnp.int32),
+            "kpos": jnp.full((cfg.n_layers, batch, max_seq), 2**30, jnp.int32),
         },
         "enc_out": jnp.zeros((batch, t_enc, cfg.d_model), dtype),
+        # valid rows of enc_out per slot (a request's encoder output may be
+        # shorter than the pool's fixed t_enc; the rest is masked)
+        "enc_len": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def cache_batch_axes(cfg, cache):
+    """Slot (batch) axis per cache leaf: decoder self-attn leaves are
+    (L, B, ...); the cached encoder output and its length are (B, ...)."""
+    return {
+        "self": jax.tree.map(lambda _: 1, cache["self"]),
+        "enc_out": 0,
+        "enc_len": 0,
     }
 
 
 def prefill(params, cfg, tokens, cache, embeds=None):
-    enc_out = encode(params, cfg, embeds) if embeds is not None else cache["enc_out"]
+    b = tokens.shape[0]
+    if embeds is not None:
+        enc_out = encode(params, cfg, embeds)
+        enc_len = jnp.full((b,), enc_out.shape[1], jnp.int32)
+    else:
+        enc_out, enc_len = cache["enc_out"], cache["enc_len"]
     x = nn.embed(params["embed"], tokens)
-    b, s, _ = x.shape
+    s = x.shape[1]
     positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
-    x, new_self = _dec_stack(params, cfg, x, positions, enc_out, caches=cache["self"])
-    new_cache = {"self": new_self, "enc_out": enc_out}
+    x, new_self = _dec_stack(params, cfg, x, positions, enc_out,
+                             caches=cache["self"], enc_len=enc_len)
+    new_cache = {"self": new_self, "enc_out": enc_out, "enc_len": enc_len}
     return L.norm(params["ln_f"], x, cfg)[:, -1], new_cache
 
 
 def decode_step(params, cfg, tokens, cache):
     x = nn.embed(params["embed"], tokens)
-    b = x.shape[0]
-    pos = cache["self"]["pos"][0]
-    positions = jnp.broadcast_to(pos.astype(jnp.int32), (b, 1))
-    x, new_self = _dec_stack(params, cfg, x, positions, cache["enc_out"], caches=cache["self"])
+    pos = cache["self"]["pos"][0]               # (B,) per-slot positions
+    positions = pos.astype(jnp.int32)[:, None]
+    x, new_self = _dec_stack(params, cfg, x, positions, cache["enc_out"],
+                             caches=cache["self"], enc_len=cache["enc_len"])
     x = L.norm(params["ln_f"], x, cfg)
-    return logits_fn(params, x[:, 0]), {"self": new_self, "enc_out": cache["enc_out"]}
+    return logits_fn(params, x[:, 0]), {"self": new_self, "enc_out": cache["enc_out"],
+                                        "enc_len": cache["enc_len"]}
 
 
 def hinm_plan(cfg):

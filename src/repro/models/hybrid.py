@@ -134,8 +134,8 @@ def make_cache(cfg, batch: int, max_seq: int, dtype=None):
             caches.append({
                 "k": jnp.zeros((n, batch, win, cfg.n_kv_heads, cfg.head_dim), dtype),
                 "v": jnp.zeros((n, batch, win, cfg.n_kv_heads, cfg.head_dim), dtype),
-                "pos": jnp.zeros((n,), jnp.int32),
-                "kpos": jnp.full((n, win), 2**30, jnp.int32),
+                "pos": jnp.zeros((n, batch), jnp.int32),
+                "kpos": jnp.full((n, batch, win), 2**30, jnp.int32),
             })
         else:
             caches.append({
@@ -143,6 +143,12 @@ def make_cache(cfg, batch: int, max_seq: int, dtype=None):
                 "conv": jnp.zeros((n, batch, rglru.CONV_K - 1, r), dtype),
             })
     return tuple(caches)
+
+
+def cache_batch_axes(cfg, cache):
+    """Slot (batch) axis per cache leaf: attn and recurrent stacks alike are
+    stacked (n_layers_in_stack, B, ...)."""
+    return jax.tree.map(lambda _: 1, cache)
 
 
 def prefill(params, cfg, tokens, cache, embeds=None):
@@ -155,12 +161,11 @@ def prefill(params, cfg, tokens, cache, embeds=None):
 
 def decode_step(params, cfg, tokens, cache):
     x = nn.embed(params["embed"], tokens)
-    b = x.shape[0]
     # decode position comes from the first attention stack's pos counter
     pattern = cfg.block_pattern or ("rec", "rec", "attn")
     attn_j = pattern.index("attn")
-    pos = cache[attn_j]["pos"][0]
-    positions = jnp.broadcast_to(pos.astype(jnp.int32), (b, 1))
+    pos = cache[attn_j]["pos"][0]               # (B,) per-slot positions
+    positions = pos.astype(jnp.int32)[:, None]
     x, new_cache = _run_stack(params, cfg, x, positions, caches=cache)
     x = L.norm(params["ln_f"], x, cfg)
     return logits_fn(params, x[:, 0]), new_cache

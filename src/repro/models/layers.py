@@ -57,6 +57,8 @@ def _seq_parallel_decode_attn(q, ck, cv, q_pos, kpos, window: int):
     nmodel = am.shape["model"]
     if sq != 1 or smax % nmodel or smax // nmodel < 1:
         return None
+    if kpos.ndim != 2:  # legacy shared-position caches are not supported
+        return None
     dp = tuple(a for a in ("pod", "data") if a in am.axis_names)
     ndp = 1
     for a in dp:
@@ -70,9 +72,9 @@ def _seq_parallel_decode_attn(q, ck, cv, q_pos, kpos, window: int):
         qf = (q_l.astype(jnp.float32) * hd ** -0.5).reshape(bl, kv, g, hd)
         kf = k_l.astype(jnp.float32)                      # (B, S_loc, KV, hd)
         s = jnp.einsum("bkgd,bckd->bkgc", qf, kf)         # (B, KV, G, S_loc)
-        msk = kpos_l[None, :] <= qpos_l[:, :1]            # (B, S_loc)
+        msk = kpos_l <= qpos_l[:, :1]                     # (B, S_loc) per slot
         if window:
-            msk &= kpos_l[None, :] > (qpos_l[:, :1] - window)
+            msk &= kpos_l > (qpos_l[:, :1] - window)
         s = jnp.where(msk[:, None, None, :], s, NEG_INF)
         m_l = jnp.max(s, axis=-1)
         m_g = jax.lax.pmax(m_l, "model")
@@ -88,7 +90,7 @@ def _seq_parallel_decode_attn(q, ck, cv, q_pos, kpos, window: int):
         body,
         mesh=am,
         in_specs=(P(row, None, None, None), P(row, "model", None, None),
-                  P(row, "model", None, None), P("model"), P(row, None)),
+                  P(row, "model", None, None), P(row, "model"), P(row, None)),
         out_specs=P(row, None, None, None),
         check_vma=False,
     )(q, ck, cv, kpos, q_pos)
@@ -229,7 +231,8 @@ def attention(
     x: jax.Array,                 # (B, S, D)
     positions: jax.Array,         # (B, S)
     cfg,
-    cache: dict | None = None,    # decode: {"k","v" (B,Smax,KV,hd), "pos" ()}
+    cache: dict | None = None,    # decode: {"k","v" (B,Smax,KV,hd),
+                                  #          "pos" (B,), "kpos" (B,Smax)}
     kv_block: int = 1024,
     bidirectional: bool = False,
 ) -> tuple[jax.Array, dict | None]:
@@ -252,7 +255,11 @@ def attention(
         # Cache slots are a ring buffer when a sliding window bounds the
         # live KV set (smax = window); per-slot absolute positions ("kpos")
         # drive the causal/window mask, so slot index never aliases time.
-        pos = cache["pos"]                                  # scalar int32
+        # `pos` and `kpos` carry a batch dimension — each batch lane is an
+        # independent request slot (continuous batching): lanes may sit at
+        # different decode positions, so every cache write is a per-lane
+        # dynamic_update_slice at that lane's own offset.
+        pos = cache["pos"]                                  # (B,) int32
         smax = cache["k"].shape[1]
         if s >= smax:
             # prefill longer than the (windowed) cache: attend over the fresh
@@ -260,17 +267,24 @@ def attention(
             # rolled so the ring invariant slot == pos % smax holds for the
             # decode steps that follow.
             out = _attn_chunked(q, k, v, positions, positions, True, cfg.window, kv_block)
-            shift = jax.lax.rem(positions[0, -smax].astype(jnp.int32), smax)
-            ck = jnp.roll(k[:, -smax:].astype(cache["k"].dtype), shift, axis=1)
-            cv = jnp.roll(v[:, -smax:].astype(cache["v"].dtype), shift, axis=1)
-            new_kpos = jnp.roll(positions[0, -smax:].astype(jnp.int32), shift)
+            shift = jax.lax.rem(positions[:, -smax].astype(jnp.int32), smax)
+            ck = jax.vmap(lambda kb, sh: jnp.roll(kb, sh, axis=0))(
+                k[:, -smax:].astype(cache["k"].dtype), shift)
+            cv = jax.vmap(lambda vb, sh: jnp.roll(vb, sh, axis=0))(
+                v[:, -smax:].astype(cache["v"].dtype), shift)
+            new_kpos = jax.vmap(jnp.roll)(
+                positions[:, -smax:].astype(jnp.int32), shift)
         else:
             slot = jax.lax.rem(pos, smax) if cfg.window else pos
-            ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
-            cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
-            new_kpos = jax.lax.dynamic_update_slice(
-                cache["kpos"], positions[0].astype(jnp.int32), (slot,)
-            )
+            ck = jax.vmap(
+                lambda cb, kb, st: jax.lax.dynamic_update_slice(cb, kb, (st, 0, 0))
+            )(cache["k"], k.astype(cache["k"].dtype), slot)
+            cv = jax.vmap(
+                lambda cb, vb, st: jax.lax.dynamic_update_slice(cb, vb, (st, 0, 0))
+            )(cache["v"], v.astype(cache["v"].dtype), slot)
+            new_kpos = jax.vmap(
+                lambda kp, pr, st: jax.lax.dynamic_update_slice(kp, pr, (st,))
+            )(cache["kpos"], positions.astype(jnp.int32), slot)
             from repro.perf_knobs import KNOBS
 
             out = None
@@ -278,8 +292,8 @@ def attention(
                 out = _seq_parallel_decode_attn(q, ck, cv, positions, new_kpos,
                                                 cfg.window)
             if out is None:
-                k_pos = jnp.broadcast_to(new_kpos, (b, smax))
-                out = _attn_chunked(q, ck, cv, positions, k_pos, True, cfg.window, kv_block)
+                out = _attn_chunked(q, ck, cv, positions, new_kpos, True,
+                                    cfg.window, kv_block)
         new_cache = {"k": ck, "v": cv, "pos": pos + s, "kpos": new_kpos}
     out = out.reshape(b, s, h * hd)
     return nn.linear(params["wo"], out), new_cache

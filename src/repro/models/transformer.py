@@ -104,14 +104,23 @@ def logits_fn(params, x):
 
 
 def make_cache(cfg, batch: int, max_seq: int, dtype=None):
+    """Decode cache with per-slot positions: every batch lane ("slot") tracks
+    its own `pos` / `kpos`, so lanes can host independent requests at
+    different decode depths (continuous batching)."""
     dtype = dtype or cfg.dtype
     kv = {
         "k": jnp.zeros((cfg.n_layers, batch, max_seq, cfg.n_kv_heads, cfg.head_dim), dtype),
         "v": jnp.zeros((cfg.n_layers, batch, max_seq, cfg.n_kv_heads, cfg.head_dim), dtype),
-        "pos": jnp.zeros((cfg.n_layers,), jnp.int32),
-        "kpos": jnp.full((cfg.n_layers, max_seq), 2**30, jnp.int32),
+        "pos": jnp.zeros((cfg.n_layers, batch), jnp.int32),
+        "kpos": jnp.full((cfg.n_layers, batch, max_seq), 2**30, jnp.int32),
     }
     return kv
+
+
+def cache_batch_axes(cfg, cache):
+    """Axis of the request-slot (batch) dimension for every cache leaf —
+    lets the serve slot pool insert/reset single slots generically."""
+    return jax.tree.map(lambda _: 1, cache)
 
 
 def prefill(params, cfg, tokens, cache, embeds=None):
@@ -127,9 +136,8 @@ def prefill(params, cfg, tokens, cache, embeds=None):
 def decode_step(params, cfg, tokens, cache):
     """One decode step. tokens (B, 1); returns (logits (B, vocab), cache)."""
     x = nn.embed(params["embed"], tokens)
-    b = x.shape[0]
-    pos = cache["pos"][0]
-    positions = jnp.broadcast_to(pos.astype(jnp.int32), (b, 1))
+    pos = cache["pos"][0]                       # (B,) per-slot positions
+    positions = pos.astype(jnp.int32)[:, None]
     x, new_cache = _scan_blocks(params, cfg, x, positions, caches=cache)
     x = L.norm(params["ln_f"], x, cfg)
     return logits_fn(params, x[:, 0]), new_cache

@@ -93,6 +93,11 @@ def make_cache(cfg, batch: int, max_seq: int, dtype=None):
     return tuple(caches)
 
 
+def cache_batch_axes(cfg, cache):
+    """Slot (batch) axis per cache leaf; recurrent state is (n_p, B, ...)."""
+    return jax.tree.map(lambda _: 1, cache)
+
+
 def prefill(params, cfg, tokens, cache, embeds=None):
     x = nn.embed(params["embed"], tokens)
     x, new_cache = _run(params, cfg, x, caches=cache)

@@ -4,6 +4,7 @@
   forward(params, cfg, batch...)          -> pre-logits (B, S, D)
   logits_fn(params, x)                    -> vocab projection
   make_cache(cfg, batch, max_seq)         -> decode cache pytree
+  cache_batch_axes(cfg, cache)            -> slot axis per cache leaf
   prefill / decode_step                   -> serving
   hinm_plan(cfg)                          -> prune specs (see repro.perm)
   perm_graph(cfg)                         -> compiled ModelPermGraph
@@ -40,6 +41,16 @@ def logits_fn(params, cfg, x):
 
 def make_cache(cfg, batch: int, max_seq: int, dtype=None, **kw):
     return model_for(cfg).make_cache(cfg, batch, max_seq, dtype=dtype, **kw)
+
+
+def cache_batch_axes(cfg, cache):
+    """Pytree (matching `cache`) of the request-slot axis per leaf.
+
+    The serve slot pool uses this to insert a freshly prefilled batch-1
+    cache into one slot of the pooled cache — and to reset a slot on
+    request completion — with a single `dynamic_update_slice_in_dim` per
+    leaf, without knowing family cache internals."""
+    return model_for(cfg).cache_batch_axes(cfg, cache)
 
 
 def prefill(params, cfg, tokens, cache, embeds=None):

@@ -1,3 +1,17 @@
+from repro.serve import sampler
 from repro.serve.engine import ServeEngine
+from repro.serve.kv import SlotKVCache
+from repro.serve.request import Request, RequestState, SamplingParams, ServeStats
+from repro.serve.scheduler import Scheduler, param_bytes
 
-__all__ = ["ServeEngine"]
+__all__ = [
+    "sampler",
+    "Request",
+    "RequestState",
+    "SamplingParams",
+    "Scheduler",
+    "ServeEngine",
+    "ServeStats",
+    "SlotKVCache",
+    "param_bytes",
+]

@@ -1,75 +1,48 @@
-"""Batched serving engine over HiNM-packed weights.
+"""Fixed-batch compat facade over the continuous-batching scheduler.
 
-Serving is where HiNM pays off on TPU (DESIGN.md §2): decode is
-weight-bandwidth-bound, and the packed format cuts weight traffic ~4x at
-75% sparsity while the vector level also halves matmul FLOPs. The engine:
-
-  - holds packed params (from train.pruning.prune_model) + a dense fallback,
-  - prefills a batch of prompts (right-aligned padding-free: prompts are
-    length-bucketed by the caller; here we pad to the bucket),
-  - decodes greedily / with temperature, batched, with one jit'd step,
-  - reports tokens/s and weight-bytes-touched per token (the quantity the
-    HiNM kernel optimises).
+`ServeEngine.generate` keeps the original synchronous API — one batch of
+equal-length prompts in, a (B, max_new_tokens) token matrix out — but now
+runs on `serve.Scheduler`: every prompt becomes a `Request`, the batch
+becomes a slot pool of width B, and decode runs device-resident in
+chunked `lax.scan` steps instead of a per-token host loop. New code
+should drive `Scheduler` directly (staggered arrivals, mixed sampling
+params, slot reuse); this wrapper exists so existing callers and the
+paper benchmarks keep working unchanged.
 """
 from __future__ import annotations
 
 import dataclasses
-import time
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core.types import PackedHiNM
-from repro.models import zoo
+from repro.serve.request import Request, SamplingParams, ServeStats
+from repro.serve.scheduler import Scheduler, param_bytes
 
-
-@dataclasses.dataclass
-class ServeStats:
-    prefill_seconds: float
-    decode_seconds: float
-    tokens_generated: int
-    packed_param_bytes: int
-    dense_param_bytes: int
-
-    @property
-    def decode_tokens_per_second(self) -> float:
-        return self.tokens_generated / max(self.decode_seconds, 1e-9)
-
-    @property
-    def weight_bytes_ratio(self) -> float:
-        return self.packed_param_bytes / max(self.dense_param_bytes, 1)
+__all__ = ["ServeEngine", "ServeStats"]
 
 
 class ServeEngine:
-    def __init__(self, cfg, params, max_seq: int = 512, temperature: float = 0.0):
+    def __init__(self, cfg, params, max_seq: int = 512, temperature: float = 0.0,
+                 top_k: int = 0, decode_chunk: int = 8):
         self.cfg = cfg
         self.params = params
         self.max_seq = max_seq
         self.temperature = temperature
-        self._decode = jax.jit(
-            lambda p, t, c: zoo.decode_step(p, cfg, t, c), donate_argnums=(2,)
-        )
-        self._prefill = jax.jit(
-            lambda p, t, c, e: (
-                lambda out: (zoo.logits_fn(p, cfg, out[0]), out[1])
-            )(zoo.prefill(p, cfg, t, c, embeds=e)),
-            static_argnames=(),
-        )
+        self.top_k = top_k
+        self.decode_chunk = decode_chunk
+        self._sched: Scheduler | None = None
 
     def packed_bytes(self) -> tuple[int, int]:
-        packed = dense = 0
-        for leaf in jax.tree.leaves(
-            self.params, is_leaf=lambda x: isinstance(x, PackedHiNM)
-        ):
-            if isinstance(leaf, PackedHiNM):
-                packed += leaf.packed_bytes()
-                dense += leaf.dense_bytes()
-            else:
-                b = leaf.size * jnp.dtype(leaf.dtype).itemsize
-                packed += b
-                dense += b
-        return packed, dense
+        return param_bytes(self.params)
+
+    def _scheduler(self, batch: int, rng_seed: int) -> Scheduler:
+        if self._sched is None or self._sched.max_slots != batch:
+            self._sched = Scheduler(
+                self.cfg, self.params, max_slots=batch, max_seq=self.max_seq,
+                decode_chunk=self.decode_chunk, rng_seed=rng_seed)
+        else:
+            self._sched.reset(rng_seed)
+        return self._sched
 
     def generate(
         self,
@@ -78,39 +51,22 @@ class ServeEngine:
         embeds: np.ndarray | None = None,
         rng_seed: int = 0,
     ) -> tuple[np.ndarray, ServeStats]:
-        b, s = prompts.shape
-        cache = zoo.make_cache(self.cfg, b, self.max_seq)
-        t0 = time.time()
-        logits, cache = self._prefill(self.params, jnp.asarray(prompts), cache,
-                                      None if embeds is None else jnp.asarray(embeds))
-        jax.block_until_ready(logits)
-        t1 = time.time()
-
-        key = jax.random.PRNGKey(rng_seed)
+        b = prompts.shape[0]
+        sched = self._scheduler(b, rng_seed)
+        reqs = [
+            Request(
+                rid=i,
+                prompt=np.asarray(prompts[i], np.int32),
+                params=SamplingParams(max_new_tokens=max_new_tokens,
+                                      temperature=self.temperature,
+                                      top_k=self.top_k),
+                embeds=None if embeds is None else np.asarray(embeds[i]),
+            )
+            for i in range(b)
+        ]
+        sched.run(reqs)
+        # EOS-terminated rows are zero-padded to the fixed output width
         out = np.zeros((b, max_new_tokens), dtype=np.int32)
-        tok = self._sample(logits, key)
-        out[:, 0] = np.asarray(tok)[:, 0]
-        for i in range(1, max_new_tokens):
-            logits, cache = self._decode(self.params, tok, cache)
-            key, sub = jax.random.split(key)
-            tok = self._sample(logits, sub)
-            out[:, i] = np.asarray(tok)[:, 0]
-        jax.block_until_ready(tok)
-        t2 = time.time()
-        pb, db = self.packed_bytes()
-        return out, ServeStats(
-            prefill_seconds=t1 - t0,
-            decode_seconds=t2 - t1,
-            tokens_generated=b * max_new_tokens,
-            packed_param_bytes=pb,
-            dense_param_bytes=db,
-        )
-
-    def _sample(self, logits, key):
-        logits = logits[:, : self.cfg.vocab]
-        if self.temperature <= 0.0:
-            return jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
-        probs = jax.nn.softmax(logits / self.temperature, axis=-1)
-        return jax.random.categorical(key, jnp.log(probs + 1e-9), axis=-1)[
-            :, None
-        ].astype(jnp.int32)
+        for r in reqs:
+            out[r.rid, : r.n_generated] = r.tokens
+        return out, dataclasses.replace(sched.stats)

@@ -1,0 +1,78 @@
+"""Slot-pooled KV cache for continuous batching.
+
+The pool is one family cache pytree (`zoo.make_cache`) of width
+`n_slots`: each batch lane is a slot hosting one in-flight request at its
+own decode position (the family caches carry per-slot `pos`/`kpos`).
+Slots are recycled through a free list; insertion and reset are each a
+single device dispatch of per-leaf `dynamic_update_slice_in_dim` writes
+(donated, so the pool updates in place instead of reallocating O(pool)
+memory per admission).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.models import zoo
+
+
+class SlotKVCache:
+    def __init__(self, cfg, n_slots: int, max_seq: int, dtype=None, **cache_kw):
+        self.cfg = cfg
+        self.n_slots = n_slots
+        self.max_seq = max_seq
+        self._cache_kw = dict(cache_kw, dtype=dtype)
+        self.cache = zoo.make_cache(cfg, n_slots, max_seq, **self._cache_kw)
+        self._templates: dict[int, object] = {}  # pristine batch-k caches
+        axes = zoo.cache_batch_axes(cfg, self.cache)
+
+        def write_row(pool, batched, slot, row):
+            # copy slot-row `row` of a batch-k cache into pool slot `slot`
+            def f(c, o, a):
+                one = jax.lax.dynamic_slice_in_dim(o, row, 1, axis=a)
+                return jax.lax.dynamic_update_slice_in_dim(
+                    c, one.astype(c.dtype), slot, axis=a)
+
+            return jax.tree.map(f, pool, batched, axes)
+
+        self._write_row = jax.jit(write_row, donate_argnums=(0,))
+        self._free = list(range(n_slots))
+        # host mirror of each slot's sequence length (prompt + generated so
+        # far) for admission guards and introspection
+        self.slot_len = np.zeros((n_slots,), np.int64)
+
+    def template(self, batch: int = 1):
+        """Pristine batch-`batch` cache: prefill input / slot-reset source."""
+        if batch not in self._templates:
+            self._templates[batch] = zoo.make_cache(
+                self.cfg, batch, self.max_seq, **self._cache_kw)
+        return self._templates[batch]
+
+    # -- slot lifecycle -----------------------------------------------------
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    def acquire(self) -> int:
+        if not self._free:
+            raise RuntimeError("no free slots")
+        return self._free.pop(0)
+
+    def insert(self, slot: int, cache, length: int, row: int = 0) -> None:
+        """Write row `row` of a prefilled batch-k cache into `slot`."""
+        self.cache = self._write_row(self.cache, cache, slot, row)
+        self.slot_len[slot] = length
+
+    def release(self, slot: int) -> None:
+        """Reset `slot` to pristine state (kpos -> +inf sentinel, pos -> 0,
+        recurrent state -> initial) and return it to the free list."""
+        self.cache = self._write_row(self.cache, self.template(), slot, 0)
+        self.slot_len[slot] = 0
+        self._free.append(slot)
+
+    def reset_all(self) -> None:
+        self.cache = zoo.make_cache(
+            self.cfg, self.n_slots, self.max_seq, **self._cache_kw)
+        self._free = list(range(self.n_slots))
+        self.slot_len[:] = 0

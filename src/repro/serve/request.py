@@ -1,0 +1,98 @@
+"""Request lifecycle model for the serving runtime.
+
+A `Request` moves through QUEUED -> PREFILLING -> DECODING -> FINISHED.
+The scheduler owns the transitions; this module only defines the data
+model and the per-request / aggregate statistics the runtime reports:
+TTFT (submit -> first token), decode tokens/s, and the per-token weight
+traffic share (the quantity the HiNM packed format optimises — it shrinks
+both with packing and with higher slot occupancy).
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+
+import numpy as np
+
+
+class RequestState(enum.Enum):
+    QUEUED = "queued"
+    PREFILLING = "prefilling"
+    DECODING = "decoding"
+    FINISHED = "finished"
+
+
+@dataclasses.dataclass
+class SamplingParams:
+    max_new_tokens: int = 32
+    temperature: float = 0.0     # <= 0 -> greedy
+    top_k: int = 0               # 0 -> full vocab
+    eos_id: int | None = None    # None -> cfg.eos_id (when in-vocab)
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                      # (S,) int32
+    params: SamplingParams = dataclasses.field(default_factory=SamplingParams)
+    embeds: np.ndarray | None = None        # (P, D) modality-frontend stub
+    arrival: int = 0                        # scheduler step it becomes visible
+
+    state: RequestState = RequestState.QUEUED
+    slot: int | None = None
+    tokens: list[int] = dataclasses.field(default_factory=list)
+    finish_reason: str | None = None        # "eos" | "length"
+
+    submit_time: float = 0.0
+    admit_time: float = 0.0
+    first_token_time: float = 0.0
+    finish_time: float = 0.0
+    # sum over this request's decode steps of 1/(active slots that step):
+    # its share of the whole-model weight reads the batch amortises
+    shared_decode_steps: float = 0.0
+
+    @property
+    def n_generated(self) -> int:
+        return len(self.tokens)
+
+    @property
+    def ttft(self) -> float:
+        return self.first_token_time - self.submit_time
+
+    @property
+    def tokens_per_second(self) -> float:
+        span = self.finish_time - self.first_token_time
+        return (self.n_generated - 1) / max(span, 1e-9)
+
+    def weight_bytes_per_token(self, packed_param_bytes: int) -> float:
+        """This request's share of packed-weight HBM reads per token."""
+        return packed_param_bytes * self.shared_decode_steps / max(self.n_generated, 1)
+
+
+@dataclasses.dataclass
+class ServeStats:
+    prefill_seconds: float
+    decode_seconds: float
+    tokens_generated: int
+    packed_param_bytes: int
+    dense_param_bytes: int
+    requests_finished: int = 0
+    finished_at_eos: int = 0
+    decode_steps: int = 0          # batched decode steps executed
+    # tokens emitted by decode chunks; excludes each request's first token,
+    # which is sampled from prefill logits and timed under prefill_seconds
+    decode_tokens: int = 0
+
+    @property
+    def decode_tokens_per_second(self) -> float:
+        return self.decode_tokens / max(self.decode_seconds, 1e-9)
+
+    @property
+    def weight_bytes_ratio(self) -> float:
+        return self.packed_param_bytes / max(self.dense_param_bytes, 1)
+
+    @property
+    def weight_bytes_per_token(self) -> float:
+        """Packed-weight bytes read per decode-emitted token: one full packed
+        read per decode step, amortised over the tokens the batch emitted."""
+        return self.packed_param_bytes * self.decode_steps / max(self.decode_tokens, 1)

@@ -1,0 +1,38 @@
+"""On-device token sampling for the serving runtime.
+
+Everything here is pure jnp and runs inside the jitted decode chunk —
+no per-token host round-trips. Sampling parameters are per-slot vectors
+so one fixed-width decode batch can mix greedy and stochastic requests.
+
+Temperature sampling feeds raw scaled logits to `jax.random.categorical`
+(which is softmax-invariant); the former `log(softmax(x) + 1e-9)`
+round-trip both wasted work and biased low-probability tokens (the +1e-9
+floor inflates the tail relative to the true distribution).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def greedy(logits: jax.Array) -> jax.Array:
+    """logits (B, V) -> argmax token ids (B,) int32."""
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def sample(key, logits: jax.Array, temperature: jax.Array, top_k: jax.Array) -> jax.Array:
+    """Per-slot sampling. logits (B, V) float32; temperature (B,) float32
+    (<= 0 -> greedy); top_k (B,) int32 (<= 0 -> full vocab).
+    Returns token ids (B,) int32."""
+    v = logits.shape[-1]
+    pick = greedy(logits)
+
+    # per-slot top-k: threshold at each row's k-th largest logit
+    k = jnp.clip(top_k, 0, v)
+    sorted_desc = jnp.flip(jnp.sort(logits, axis=-1), axis=-1)
+    kth = jnp.take_along_axis(sorted_desc, jnp.maximum(k - 1, 0)[:, None], axis=1)
+    masked = jnp.where((k[:, None] > 0) & (logits < kth), -jnp.inf, logits)
+
+    t = jnp.maximum(temperature, 1e-6)[:, None]
+    drawn = jax.random.categorical(key, masked / t, axis=-1).astype(jnp.int32)
+    return jnp.where(temperature > 0.0, drawn, pick)

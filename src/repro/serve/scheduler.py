@@ -1,0 +1,310 @@
+"""Continuous-batching scheduler with a device-resident decode loop.
+
+The decode batch is a fixed-width pool of request slots (`SlotKVCache`).
+Every scheduler step:
+
+  1. admission — queued requests are prefilled (batch-1, at exact prompt
+     length) and inserted into free slots; `policy="static"` instead gang-
+     admits only when the pool is idle (the naive baseline the benchmark
+     compares against);
+  2. decode — one jitted chunk of `decode_chunk` steps runs as a
+     `lax.scan` over `zoo.decode_step` + on-device sampling, with per-slot
+     EOS / length early-exit masking.  The only host transfer is the
+     (chunk, slots) emitted-token matrix once per chunk — not the
+     per-token `np.asarray` sync of the old engine;
+  3. harvest — emitted tokens are appended to their requests, finished
+     slots are reset and returned to the free list.
+
+Inactive lanes keep stepping inside a chunk (fixed-shape batch); their
+cache writes land under their own lane's `kpos` mask and are wiped by the
+slot reset on reuse, so they can never leak into a later request.
+"""
+from __future__ import annotations
+
+import collections
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.types import PackedHiNM
+from repro.models import zoo
+from repro.serve import sampler
+from repro.serve.kv import SlotKVCache
+from repro.serve.request import Request, RequestState, SamplingParams, ServeStats
+
+
+def param_bytes(params) -> tuple[int, int]:
+    """(packed, dense-equivalent) byte footprint of a param pytree."""
+    packed = dense = 0
+    for leaf in jax.tree.leaves(params, is_leaf=lambda x: isinstance(x, PackedHiNM)):
+        if isinstance(leaf, PackedHiNM):
+            packed += leaf.packed_bytes()
+            dense += leaf.dense_bytes()
+        else:
+            b = leaf.size * jnp.dtype(leaf.dtype).itemsize
+            packed += b
+            dense += b
+    return packed, dense
+
+
+class Scheduler:
+    def __init__(self, cfg, params, max_slots: int = 4, max_seq: int = 512,
+                 decode_chunk: int = 8, rng_seed: int = 0,
+                 policy: str = "continuous", cache_kw: dict | None = None):
+        if policy not in ("continuous", "static"):
+            raise ValueError(f"unknown admission policy {policy!r}")
+        self.cfg = cfg
+        self.params = params
+        self.max_slots = max_slots
+        self.max_seq = max_seq
+        self.decode_chunk = decode_chunk
+        self.policy = policy
+        self._vocab = cfg.vocab
+        eos = getattr(cfg, "eos_id", -1)
+        # out-of-vocab EOS (e.g. full-tokenizer ids on reduced test configs)
+        # disables EOS termination rather than matching a wrong token
+        self.default_eos = eos if 0 <= eos < cfg.vocab else -1
+
+        self.kv = SlotKVCache(cfg, max_slots, max_seq, **(cache_kw or {}))
+        # enc-dec pools cache the encoder output at fixed width t_enc
+        # (pass cache_kw={"t_enc": ...} to right-size it for the workload)
+        self._t_enc = (cache_kw or {}).get("t_enc") or max_seq
+        self._queue: collections.deque[Request] = collections.deque()
+        self._running: dict[int, Request] = {}
+        self._active_host = np.zeros((max_slots,), bool)
+        self._build()
+        self._reset_state(rng_seed)
+        pb, db = param_bytes(params)
+        self.stats = ServeStats(0.0, 0.0, 0, pb, db)
+
+    # -- jitted kernels -----------------------------------------------------
+
+    def _build(self) -> None:
+        cfg, vocab, chunk = self.cfg, self._vocab, self.decode_chunk
+
+        # `stochastic` is a static flag: all-greedy batches compile to a
+        # plain argmax and skip the per-step top-k sort / categorical draw
+        # (O(V log V) per lane — real money at full-tokenizer vocabs). The
+        # RNG key advances identically in both variants so the stream does
+        # not depend on which one is live.
+
+        def prefill_fn(params, tokens, cache, embeds, key, temp, topk,
+                       stochastic):
+            last, cache = zoo.prefill(params, cfg, tokens, cache, embeds=embeds)
+            logits = zoo.logits_fn(params, cfg, last)[:, :vocab].astype(jnp.float32)
+            first = (sampler.sample(key, logits, temp, topk) if stochastic
+                     else sampler.greedy(logits))
+            return first, cache
+
+        self._prefill = jax.jit(prefill_fn, static_argnames=("stochastic",))
+
+        def chunk_fn(params, cache, tok, active, rem, temp, topk, eos, key,
+                     stochastic):
+            def step(carry, _):
+                cache, tok, active, rem, key = carry
+                logits, cache = zoo.decode_step(params, cfg, tok, cache)
+                logits = logits[:, :vocab].astype(jnp.float32)
+                key, sub = jax.random.split(key)
+                nxt = (sampler.sample(sub, logits, temp, topk) if stochastic
+                       else sampler.greedy(logits))
+                emit = jnp.where(active, nxt, -1)
+                rem = rem - active.astype(jnp.int32)
+                hit_eos = active & (eos >= 0) & (nxt == eos)
+                active = active & ~hit_eos & (rem > 0)
+                tok = jnp.where(active, nxt, tok[:, 0])[:, None]
+                return (cache, tok, active, rem, key), emit
+
+            carry, emits = jax.lax.scan(
+                step, (cache, tok, active, rem, key), None, length=chunk)
+            return carry + (emits,)
+
+        self._chunk = jax.jit(chunk_fn, donate_argnums=(1, 2, 3, 4, 8),
+                              static_argnames=("stochastic",))
+
+        def set_slot(tok, active, rem, temp, topk, eos, slot, first, r, t, k, e):
+            return (tok.at[slot, 0].set(first), active.at[slot].set(True),
+                    rem.at[slot].set(r), temp.at[slot].set(t),
+                    topk.at[slot].set(k), eos.at[slot].set(e))
+
+        self._set_slot = jax.jit(set_slot, donate_argnums=(0, 1, 2, 3, 4, 5))
+
+    def _reset_state(self, rng_seed: int) -> None:
+        s = self.max_slots
+        self._tok = jnp.zeros((s, 1), jnp.int32)
+        self._active = jnp.zeros((s,), bool)
+        self._rem = jnp.zeros((s,), jnp.int32)
+        self._temp = jnp.zeros((s,), jnp.float32)
+        self._topk = jnp.zeros((s,), jnp.int32)
+        self._eos = jnp.full((s,), -1, jnp.int32)
+        self._key = jax.random.PRNGKey(rng_seed)
+        self._active_host[:] = False
+
+    def reset(self, rng_seed: int = 0) -> None:
+        """Drop all queued/running requests and restore pristine state."""
+        self._queue.clear()
+        self._running.clear()
+        self.kv.reset_all()
+        self._reset_state(rng_seed)
+        self.stats = ServeStats(
+            0.0, 0.0, 0, self.stats.packed_param_bytes, self.stats.dense_param_bytes)
+
+    # -- request lifecycle --------------------------------------------------
+
+    @property
+    def n_pending(self) -> int:
+        return len(self._queue) + len(self._running)
+
+    def _cache_rows(self, req: Request) -> int:
+        """Decoder-cache rows this request's prefill occupies. encdec embeds
+        feed the encoder (cached separately as enc_out); vlm embeds are
+        prepended to the decoder sequence."""
+        extra = 0
+        if req.embeds is not None and self.cfg.family != "encdec":
+            extra = req.embeds.shape[0]
+        return len(req.prompt) + extra
+
+    def submit(self, req: Request) -> None:
+        rows = self._cache_rows(req)
+        if rows + req.params.max_new_tokens > self.max_seq:
+            raise ValueError(
+                f"request {req.rid}: {rows} prompt rows + max_new_tokens "
+                f"{req.params.max_new_tokens} exceeds max_seq {self.max_seq}")
+        if (self.cfg.family == "encdec" and req.embeds is not None
+                and req.embeds.shape[0] > self._t_enc):
+            raise ValueError(
+                f"request {req.rid}: {req.embeds.shape[0]} encoder frames "
+                f"exceed the pool's t_enc {self._t_enc}")
+        req.state = RequestState.QUEUED
+        req.submit_time = time.perf_counter()
+        self._queue.append(req)
+
+    def _eff_eos(self, req: Request) -> int:
+        if req.params.eos_id is not None:
+            return req.params.eos_id if 0 <= req.params.eos_id < self._vocab else -1
+        return self.default_eos
+
+    def _finish(self, req: Request, finished: list[Request]) -> None:
+        req.state = RequestState.FINISHED
+        req.finish_time = time.perf_counter()
+        eos = self._eff_eos(req)
+        req.finish_reason = "eos" if (eos >= 0 and req.tokens and req.tokens[-1] == eos) else "length"
+        self.stats.requests_finished += 1
+        if req.finish_reason == "eos":
+            self.stats.finished_at_eos += 1
+        finished.append(req)
+
+    def _admit(self, finished: list[Request]) -> None:
+        if self.policy == "static" and self._running:
+            return  # gang admission: wait for the whole pool to drain
+        while self._queue and self.kv.n_free:
+            # group the queue head by (prompt length, embeds shape): one
+            # batched prefill per group instead of k batch-1 prefills — the
+            # fixed-batch compat path becomes a single (B, S) prefill again
+            def sig(r):
+                return (len(r.prompt),
+                        None if r.embeds is None else r.embeds.shape)
+
+            group = [self._queue.popleft()]
+            while (self._queue and len(group) < self.kv.n_free
+                   and sig(self._queue[0]) == sig(group[0])):
+                group.append(self._queue.popleft())
+            self._admit_group(group, finished)
+
+    def _admit_group(self, group: list[Request], finished: list[Request]) -> None:
+        k = len(group)
+        now = time.perf_counter()
+        for req in group:
+            req.state = RequestState.PREFILLING
+            req.admit_time = now
+        tokens = jnp.asarray(np.stack([r.prompt for r in group]), jnp.int32)
+        embeds = (None if group[0].embeds is None
+                  else jnp.asarray(np.stack([r.embeds for r in group])))
+        temps = np.asarray([r.params.temperature for r in group], np.float32)
+        topks = np.asarray([r.params.top_k for r in group], np.int32)
+        self._key, sub = jax.random.split(self._key)
+        t0 = time.perf_counter()
+        first, cache_k = self._prefill(
+            self.params, tokens, self.kv.template(k), embeds, sub,
+            jnp.asarray(temps), jnp.asarray(topks),
+            stochastic=bool((temps > 0).any()))
+        first_np = np.asarray(first)  # one sync per admitted group (= TTFT)
+        now = time.perf_counter()
+        self.stats.prefill_seconds += now - t0
+        for row, req in enumerate(group):
+            p = req.params
+            eos = self._eff_eos(req)
+            first_i = int(first_np[row])
+            req.tokens.append(first_i)
+            req.first_token_time = now
+            self.stats.tokens_generated += 1
+            slot = self.kv.acquire()
+            if (eos >= 0 and first_i == eos) or p.max_new_tokens <= 1:
+                self._finish(req, finished)
+                self.kv.release(slot)
+                continue
+            self.kv.insert(slot, cache_k, self._cache_rows(req), row=row)
+            (self._tok, self._active, self._rem, self._temp, self._topk,
+             self._eos) = self._set_slot(
+                self._tok, self._active, self._rem, self._temp, self._topk,
+                self._eos, slot, first_i, p.max_new_tokens - 1,
+                p.temperature, p.top_k, eos)
+            self._active_host[slot] = True
+            req.state = RequestState.DECODING
+            req.slot = slot
+            self._running[slot] = req
+
+    def _decode_and_harvest(self, finished: list[Request]) -> None:
+        if not self._active_host.any():
+            return
+        stochastic = any(r.params.temperature > 0 for r in self._running.values())
+        t0 = time.perf_counter()
+        (self.kv.cache, self._tok, self._active, self._rem, self._key,
+         emits) = self._chunk(
+            self.params, self.kv.cache, self._tok, self._active, self._rem,
+            self._temp, self._topk, self._eos, self._key, stochastic=stochastic)
+        emits = np.asarray(emits)                 # (chunk, slots) — one sync
+        active_np = np.asarray(self._active)
+        self.stats.decode_seconds += time.perf_counter() - t0
+        self.stats.decode_steps += self.decode_chunk
+
+        width = np.maximum((emits >= 0).sum(axis=1), 1)  # active lanes/step
+        for slot, req in list(self._running.items()):
+            col = emits[:, slot]
+            mine = col >= 0
+            new = col[mine].tolist()
+            req.tokens.extend(new)
+            req.shared_decode_steps += float((1.0 / width)[mine].sum())
+            self.stats.tokens_generated += len(new)
+            self.stats.decode_tokens += len(new)
+            self.kv.slot_len[slot] += len(new)
+            if not active_np[slot]:
+                self._finish(req, finished)
+                self.kv.release(slot)
+                self._running.pop(slot)
+                self._active_host[slot] = False
+
+    def step(self) -> list[Request]:
+        """One scheduler iteration: admit into free slots, run one decode
+        chunk, harvest. Returns requests that finished this step."""
+        finished: list[Request] = []
+        self._admit(finished)
+        self._decode_and_harvest(finished)
+        return finished
+
+    def run(self, requests: list[Request], max_steps: int = 1_000_000) -> list[Request]:
+        """Drive a workload to completion. `Request.arrival` is the
+        scheduler step at which a request reaches the queue (staggered
+        arrivals for open-loop workloads)."""
+        pending = sorted(requests, key=lambda r: (r.arrival, r.rid))
+        done: list[Request] = []
+        t = 0
+        while pending or self.n_pending:
+            while pending and pending[0].arrival <= t:
+                self.submit(pending.pop(0))
+            done.extend(self.step())
+            t += 1
+            if t > max_steps:
+                raise RuntimeError("scheduler did not converge")
+        return done

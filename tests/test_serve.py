@@ -1,4 +1,5 @@
-"""Serving engine over packed HiNM weights."""
+"""Serving runtime over packed HiNM weights: compat engine, continuous-
+batching scheduler invariants, slot pool reuse, EOS handling, sampler."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -6,8 +7,22 @@ import pytest
 
 from repro.configs.base import load_arch
 from repro.models import zoo
-from repro.serve import ServeEngine
+from repro.serve import (Request, RequestState, SamplingParams, Scheduler,
+                         ServeEngine, SlotKVCache, sampler)
 from repro.train import pruning
+
+
+def greedy_isolated(cfg, params, prompt, n, max_seq, eos=-1):
+    """Reference decode: raw batch-1 prefill + python token loop."""
+    cache = zoo.make_cache(cfg, 1, max_seq)
+    last, cache = zoo.prefill(params, cfg, jnp.asarray(prompt[None]), cache)
+    lg = zoo.logits_fn(params, cfg, last)[:, : cfg.vocab]
+    toks = [int(jnp.argmax(lg, -1)[0])]
+    while len(toks) < n and toks[-1] != eos:
+        lg, cache = zoo.decode_step(
+            params, cfg, jnp.asarray([[toks[-1]]], jnp.int32), cache)
+        toks.append(int(jnp.argmax(lg[:, : cfg.vocab], -1)[0]))
+    return toks
 
 
 @pytest.fixture(scope="module")
@@ -48,3 +63,159 @@ def test_packed_bytes_accounting(pruned_model):
     eng = ServeEngine(cfg, packed, max_seq=32)
     pb, db = eng.packed_bytes()
     assert pb < db  # compression visible at the whole-model level
+
+
+# ---------------------------------------------------------------------------
+# scheduling invariants
+# ---------------------------------------------------------------------------
+
+
+def test_staggered_admission_matches_isolated_greedy(pruned_model):
+    """Continuous batching must not change tokens: requests admitted into a
+    busy pool at staggered steps decode token-identically to isolated
+    batch-1 generation (packed HiNM path)."""
+    cfg, _, _, packed = pruned_model
+    rng = np.random.default_rng(7)
+    prompts = [rng.integers(0, cfg.vocab, (n,)).astype(np.int32)
+               for n in (8, 8, 8, 8, 8)]
+    sched = Scheduler(cfg, packed, max_slots=2, max_seq=64, decode_chunk=4)
+    reqs = [Request(rid=i, prompt=p, params=SamplingParams(max_new_tokens=7),
+                    arrival=i) for i, p in enumerate(prompts)]
+    done = sched.run(reqs)
+    assert sorted(r.rid for r in done) == list(range(5))
+    for r in reqs:
+        assert r.state is RequestState.FINISHED
+        assert r.finish_reason == "length"
+        assert r.ttft >= 0 and r.tokens_per_second > 0
+        iso = greedy_isolated(cfg, packed, r.prompt, 7, 64)
+        assert r.tokens == iso, f"request {r.rid} diverged under batching"
+    assert sched.stats.tokens_generated == 5 * 7
+    assert sched.stats.requests_finished == 5
+    assert sched.stats.weight_bytes_per_token > 0
+
+
+def test_slot_reuse_matches_fresh_cache(pruned_model):
+    """A slot recycled from a finished request must decode exactly like a
+    fresh cache: the reset kpos sentinel masks stale K/V to zero."""
+    cfg, _, _, packed = pruned_model
+    rng = np.random.default_rng(11)
+    p1 = rng.integers(0, cfg.vocab, (8,)).astype(np.int32)
+    p2 = rng.integers(0, cfg.vocab, (6,)).astype(np.int32)
+
+    sched = Scheduler(cfg, packed, max_slots=1, max_seq=64, decode_chunk=4)
+    r1 = Request(rid=0, prompt=p1, params=SamplingParams(max_new_tokens=6))
+    r2 = Request(rid=1, prompt=p2, params=SamplingParams(max_new_tokens=6),
+                 arrival=1)
+    sched.run([r1, r2])
+    assert r1.slot == r2.slot == 0  # r2 reused r1's slot
+    fresh = Scheduler(cfg, packed, max_slots=1, max_seq=64, decode_chunk=4)
+    rf = Request(rid=0, prompt=p2, params=SamplingParams(max_new_tokens=6))
+    fresh.run([rf])
+    assert r2.tokens == rf.tokens
+
+
+def test_eos_early_exit_and_stats(pruned_model):
+    """EOS terminates a slot early, is counted in ServeStats, and does not
+    perturb the tokens up to the stop point."""
+    cfg, _, _, packed = pruned_model
+    rng = np.random.default_rng(3)
+    prompt = rng.integers(0, cfg.vocab, (8,)).astype(np.int32)
+    free_run = greedy_isolated(cfg, packed, prompt, 8, 64)
+    eos = free_run[3]  # force a stop 4 tokens in
+
+    sched = Scheduler(cfg, packed, max_slots=2, max_seq=64, decode_chunk=4)
+    r_eos = Request(rid=0, prompt=prompt,
+                    params=SamplingParams(max_new_tokens=8, eos_id=eos))
+    r_full = Request(rid=1, prompt=prompt,
+                     params=SamplingParams(max_new_tokens=8))
+    sched.run([r_eos, r_full])
+    assert r_eos.tokens == free_run[: free_run.index(eos) + 1]
+    assert r_eos.finish_reason == "eos"
+    assert r_full.tokens == free_run
+    assert r_full.finish_reason == "length"
+    assert sched.stats.finished_at_eos == 1
+    assert sched.stats.requests_finished == 2
+
+
+def test_cfg_eos_id_flows_through_engine(pruned_model):
+    """cfg.eos_id (in-vocab) terminates engine generation; the output row is
+    zero-padded past the stop and the stat surfaces the count."""
+    cfg, _, _, packed = pruned_model
+    rng = np.random.default_rng(5)
+    prompts = rng.integers(0, cfg.vocab, (1, 8)).astype(np.int32)
+    free = greedy_isolated(cfg, packed, prompts[0], 8, 64)
+    eos = free[2]
+    stop = free.index(eos)  # the chosen id may first occur before index 2
+    cfg_eos = cfg.reduced(n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+                          d_ff=128, vocab=128, head_dim=16, eos_id=eos)
+    out, stats = ServeEngine(cfg_eos, packed, max_seq=64).generate(
+        prompts, max_new_tokens=8)
+    assert out[0, : stop + 1].tolist() == free[: stop + 1]
+    assert (out[0, stop + 1 :] == 0).all()
+    assert stats.finished_at_eos == 1
+    # out-of-vocab eos (the real tokenizer id on a reduced config) = disabled
+    assert Scheduler(cfg, packed, max_slots=1, max_seq=64).default_eos == -1
+
+
+def test_static_policy_gang_admission(pruned_model):
+    """The static baseline must not refill freed slots mid-stream."""
+    cfg, _, _, packed = pruned_model
+    rng = np.random.default_rng(13)
+    prompts = [rng.integers(0, cfg.vocab, (8,)).astype(np.int32) for _ in range(4)]
+    sched = Scheduler(cfg, packed, max_slots=2, max_seq=64, decode_chunk=2,
+                      policy="static")
+    short = SamplingParams(max_new_tokens=2)
+    long = SamplingParams(max_new_tokens=10)
+    reqs = [Request(rid=0, prompt=prompts[0], params=long),
+            Request(rid=1, prompt=prompts[1], params=short),
+            Request(rid=2, prompt=prompts[2], params=short),
+            Request(rid=3, prompt=prompts[3], params=short)]
+    sched.run(reqs)
+    # rid=1 finished early but rid=2/3 waited for the whole gang to drain
+    assert reqs[1].finish_time < reqs[2].admit_time
+    assert reqs[0].finish_time <= reqs[2].admit_time
+    for r in reqs:
+        assert r.n_generated == r.params.max_new_tokens
+
+
+def test_slot_pool_accounting(pruned_model):
+    cfg, _, _, packed = pruned_model
+    kv = SlotKVCache(cfg, 3, 32)
+    assert kv.n_free == 3
+    s = kv.acquire()
+    assert kv.n_free == 2
+    kv.release(s)
+    assert kv.n_free == 3
+    # reset restores the kpos sentinel so stale keys can never be attended
+    assert int(np.asarray(kv.cache["kpos"]).min()) == 2**30
+
+
+# ---------------------------------------------------------------------------
+# sampler
+# ---------------------------------------------------------------------------
+
+
+def test_sampler_greedy_topk_temperature():
+    key = jax.random.PRNGKey(0)
+    logits = jnp.asarray([[0.1, 3.0, 0.2, -1.0],
+                          [9.0, 0.0, 0.0, 0.0]], jnp.float32)
+    zero = jnp.zeros((2,))
+    # temperature <= 0 -> greedy, regardless of top_k
+    out = sampler.sample(key, logits, zero, jnp.asarray([0, 2], jnp.int32))
+    assert out.tolist() == [1, 0]
+    # top_k=1 sampling == greedy even at high temperature
+    out = sampler.sample(key, logits, jnp.full((2,), 5.0),
+                         jnp.ones((2,), jnp.int32))
+    assert out.tolist() == [1, 0]
+    # temperature sampling stays inside the top-k set, per slot
+    keys = jax.random.split(jax.random.PRNGKey(1), 64)
+    draws = np.asarray([sampler.sample(k, logits, jnp.full((2,), 1.0),
+                                       jnp.asarray([2, 3], jnp.int32))
+                        for k in keys])
+    assert set(draws[:, 0]) <= {1, 2}
+    assert set(draws[:, 1]) <= {0, 1, 2}
+    # low temperature concentrates on the mode
+    draws_cold = np.asarray([sampler.sample(k, logits, jnp.full((2,), 0.05),
+                                            zero.astype(jnp.int32))
+                             for k in keys])
+    assert (draws_cold[:, 0] == 1).mean() > 0.9
