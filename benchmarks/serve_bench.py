@@ -1,15 +1,20 @@
-"""Continuous batching vs static batching on a staggered-arrival workload.
+"""Serving benchmarks: batching policy, paged KV pool, bucketed prefill.
 
-Both policies run the SAME jitted decode machinery (serve.Scheduler with
-`policy="continuous"` vs `policy="static"`); the only difference is
-admission: continuous refills a slot the moment its request finishes,
-static gang-admits and lets short requests' slots idle until the longest
-request in the gang drains. The workload is skewed (one long request per
-static gang) so the structural utilization gap — not wall-clock noise —
-drives the speedup.
+Three comparisons on the same jitted decode machinery (serve.Scheduler):
 
-Writes `BENCH_serve.json` (CI uploads it as an artifact) and prints the
-usual ``name,us_per_call,derived`` CSV rows.
+  1. continuous vs static admission on a skewed staggered-arrival workload
+     (one long request per static gang) — the structural utilization gap,
+     not wall-clock noise, drives the speedup;
+  2. paged pool vs PR 2 stripe pool on the same workload — KV pool bytes
+     at the benchmark's occupancy (pages cover live tokens; stripes pin
+     slots x max_seq) and the throughput cost of the page gather;
+  3. exact vs bucketed admission prefill on a mixed-length workload
+     (8 distinct prompt lengths) — the compile-count column: distinct
+     prefill jits traced before vs after power-of-two bucketing.
+
+Writes `BENCH_serve.json` (CI uploads it as an artifact; the paged pool
+must come in at <= 0.5x the stripe pool bytes or the smoke run fails) and
+prints the usual ``name,us_per_call,derived`` CSV rows.
 """
 from __future__ import annotations
 
@@ -20,6 +25,8 @@ import jax
 import numpy as np
 
 from benchmarks.common import emit
+
+PAGE, N_PAGES = 16, 12  # pool provisioned for occupancy, not capacity
 
 
 def _workload(cfg, rng, n_requests: int, slots: int, prompt_len: int):
@@ -38,11 +45,12 @@ def _workload(cfg, rng, n_requests: int, slots: int, prompt_len: int):
     return reqs
 
 
-def _serve(cfg, packed, reqs, policy: str, slots: int, max_seq: int):
+def _serve(cfg, packed, reqs, policy: str, slots: int, max_seq: int,
+           **sched_kw):
     from repro.serve import Request, SamplingParams, Scheduler
 
     sched = Scheduler(cfg, packed, max_slots=slots, max_seq=max_seq,
-                      decode_chunk=4, policy=policy)
+                      decode_chunk=4, policy=policy, **sched_kw)
     # warm the jitted kernels outside the timed region: the decode chunk,
     # and the admission prefill/insert for every group width 1..slots the
     # admission policy can form (one XLA trace per batch shape). The timed
@@ -67,7 +75,30 @@ def _serve(cfg, packed, reqs, policy: str, slots: int, max_seq: int):
         "decode_tokens_per_second": st.decode_tokens_per_second,
         "weight_bytes_per_token": st.weight_bytes_per_token,
         "mean_ttft_seconds": float(np.mean([r.ttft for r in reqs])),
+        "kv_pool_bytes": sched.kv.pool_bytes(),
+        "kv_paged": sched.kv.paged,
     }
+
+
+def _compile_counts(cfg, packed, rng, slots: int, max_seq: int) -> dict:
+    """Distinct prefill jits for >= 8 distinct prompt lengths, exact vs
+    bucketed admission. Arrivals are spaced so every request finds a free
+    slot (groups of width 1): the count isolates the length axis."""
+    from repro.serve import Request, SamplingParams, Scheduler
+
+    lens = [5, 7, 9, 12, 16, 21, 30, 47]
+    out = {}
+    for mode, bucket in (("exact", False), ("bucketed", True)):
+        sched = Scheduler(cfg, packed, max_slots=slots, max_seq=max_seq,
+                          decode_chunk=4, page=PAGE, bucket=bucket)
+        reqs = [Request(rid=i,
+                        prompt=rng.integers(0, cfg.vocab, (n,)).astype(np.int32),
+                        params=SamplingParams(max_new_tokens=5), arrival=2 * i)
+                for i, n in enumerate(lens)]
+        sched.run(reqs)
+        out[mode] = sched.prefill_traces
+    out["distinct_lengths"] = len(lens)
+    return out
 
 
 def run(out_path: str = "BENCH_serve.json") -> dict:
@@ -85,7 +116,22 @@ def run(out_path: str = "BENCH_serve.json") -> dict:
     results = {}
     for policy in ("static", "continuous"):
         reqs = _workload(cfg, np.random.default_rng(0), n_requests, slots, prompt_len)
-        results[policy] = _serve(cfg, packed, reqs, policy, slots, max_seq)
+        results[policy] = _serve(cfg, packed, reqs, policy, slots, max_seq,
+                                 page=PAGE, n_pages=N_PAGES)
+
+    # paged vs stripe: same continuous workload, pool memory + throughput
+    reqs = _workload(cfg, np.random.default_rng(0), n_requests, slots, prompt_len)
+    stripe = _serve(cfg, packed, reqs, "continuous", slots, max_seq, page=None)
+    paged = results["continuous"]
+    kv_ratio = paged["kv_pool_bytes"] / max(stripe["kv_pool_bytes"], 1)
+    assert kv_ratio <= 0.5, (
+        f"paged pool {paged['kv_pool_bytes']}B exceeds 0.5x the stripe pool "
+        f"{stripe['kv_pool_bytes']}B at benchmark occupancy")
+
+    compiles = _compile_counts(cfg, packed, np.random.default_rng(1), 8, max_seq)
+    assert compiles["bucketed"] <= 4, (
+        f"{compiles['distinct_lengths']} prompt lengths compiled "
+        f"{compiles['bucketed']} bucketed prefill variants (> 4)")
 
     speedup = (results["continuous"]["tokens_per_second"]
                / max(results["static"]["tokens_per_second"], 1e-9))
@@ -100,6 +146,15 @@ def run(out_path: str = "BENCH_serve.json") -> dict:
         "continuous": results["continuous"],
         "throughput_speedup": speedup,
         "decode_step_ratio": step_ratio,
+        "stripe_continuous": stripe,
+        "kv_pool": {
+            "page": PAGE,
+            "n_pages": N_PAGES,
+            "paged_bytes": paged["kv_pool_bytes"],
+            "stripe_bytes": stripe["kv_pool_bytes"],
+            "ratio": kv_ratio,
+        },
+        "prefill_compiles": compiles,
     }
     with open(out_path, "w") as f:
         json.dump(report, f, indent=2)
@@ -110,6 +165,13 @@ def run(out_path: str = "BENCH_serve.json") -> dict:
              f"tok/s={r['tokens_per_second']:.1f} steps={r['decode_steps']}")
     emit("serve_speedup", 0.0,
          f"continuous/static={speedup:.2f}x step_ratio={step_ratio:.2f}x")
+    emit("serve_paged_pool", 0.0,
+         f"paged/stripe_bytes={kv_ratio:.3f} "
+         f"paged_tok/s={paged['tokens_per_second']:.1f} "
+         f"stripe_tok/s={stripe['tokens_per_second']:.1f}")
+    emit("serve_prefill_compiles", 0.0,
+         f"exact={compiles['exact']} bucketed={compiles['bucketed']} "
+         f"lengths={compiles['distinct_lengths']}")
     return report
 
 

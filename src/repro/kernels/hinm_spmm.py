@@ -17,10 +17,12 @@ TPU adaptation of the paper's SpMM (DESIGN.md §2, §5). Per grid cell
 Layouts: activations enter as xT (n_in, B) so the gather runs on the
 sublane axis; outputs leave as (n_out, B) with rows in packed (OCP) order.
 
-VMEM budget per cell (defaults V=32, Bblk=256, bf16):
-  xT block n_in*Bblk*2  (e.g. 5120*256*2 = 2.5 MiB)
-  gather   K*Bblk*4     (f32 working copy, 2.5 MiB at K=n/2)
-  weights  V*K*4 + decompress transient V*K*2  (~1 MiB)
+VMEM budget per cell (defaults V=32, Bblk=256, bf16; see `pick_bblk`):
+  xT block    n_in*Bblk*2   (e.g. 5120*256*2 = 2.5 MiB)
+  gather      K*Bblk*2      (jnp.take stays in the activation dtype)
+  weights     V*Kn*3 + K*4  (vals + int8 slot indices + vec_idx row)
+  decompress  V*Kn*M*2 one-hot transient + V*K*2 dense tile
+  accum       V*Bblk*4      (f32)
 comfortably inside 16 MiB VMEM with double buffering.
 """
 from __future__ import annotations
@@ -47,21 +49,44 @@ def _kernel(x_ref, vals_ref, nm_ref, idx_ref, out_ref, *, nn: int, mm: int):
     iota = jax.lax.broadcasted_iota(jnp.int32, (v, g, nn, mm), 3)
     w = (v4[..., None] * (iota == s4[..., None]).astype(vals.dtype)).sum(axis=2)
     w = w.reshape(v, g * mm)                          # (V, K) dense tile
+    # inputs stay in the storage dtype (bf16 feeds the MXU natively; an
+    # explicit f32 upcast would double the gather + tile VMEM footprint
+    # that pick_bblk budgets); accumulation is f32 via preferred_element_type
+    ct = jnp.promote_types(w.dtype, xg.dtype)
     acc = jax.lax.dot_general(
-        w.astype(jnp.float32),
-        xg.astype(jnp.float32),
+        w.astype(ct),
+        xg.astype(ct),
         dimension_numbers=(((1,), (0,)), ((), ())),
         preferred_element_type=jnp.float32,
     )
     out_ref[...] = acc.astype(out_ref.dtype)
 
 
-def pick_bblk(n_in: int, k: int, b: int, itemsize: int = 2) -> int:
-    """Largest batch block keeping the VMEM working set under budget."""
+def pick_bblk(n_in: int, k: int, b: int, itemsize: int = 2, *, v: int = 32,
+              nn: int = 2, mm: int = 4) -> int:
+    """Largest batch block keeping the VMEM working set under budget.
+
+    Working set per grid cell, with real itemsizes (the gather copy from
+    ``jnp.take`` stays in the activation dtype — it is NOT a 4-byte f32
+    copy — and the in-VMEM N:M decompress materialises a one-hot
+    ``(V, G, N, M)`` transient plus the dense ``(V, K)`` tile):
+
+      xT block      n_in * bblk * itemsize
+      gather copy   k * bblk * itemsize
+      weights       v*kn*(itemsize + 1) + k*4   (vals + int8 slots + vec_idx)
+      decompress    v*kn*mm*itemsize + v*k*itemsize
+      f32 accum     v * bblk * 4
+
+    Only the first two and the accumulator scale with bblk; the weight and
+    decompress terms are a fixed per-cell cost subtracted from the budget.
+    """
+    kn = k // mm * nn
+    fixed = (v * kn * (itemsize + 1) + k * 4
+             + v * kn * mm * itemsize + v * k * itemsize)
+    per_col = (n_in + k) * itemsize + v * 4
     bblk = DEFAULT_BBLK
     while bblk > 8:
-        ws = n_in * bblk * itemsize + k * bblk * 4 + 4 * k * 32
-        if ws <= VMEM_BUDGET_BYTES:
+        if fixed + per_col * bblk <= VMEM_BUDGET_BYTES:
             break
         bblk //= 2
     return max(8, min(bblk, max(8, b)))
@@ -89,7 +114,8 @@ def hinm_spmm(
     if kn != k // mm * nn:
         raise ValueError(f"Kn={kn} inconsistent with K={k}, {nn}:{mm}")
     out_dtype = out_dtype or x_t.dtype
-    bblk = bblk or pick_bblk(n_in, k, b, jnp.dtype(x_t.dtype).itemsize)
+    bblk = bblk or pick_bblk(n_in, k, b, jnp.dtype(x_t.dtype).itemsize,
+                             v=v, nn=nn, mm=mm)
     if b % bblk != 0:
         pad = bblk - b % bblk
         x_t = jnp.pad(x_t, ((0, 0), (0, pad)))

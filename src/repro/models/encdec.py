@@ -12,7 +12,12 @@ import jax.numpy as jnp
 
 from repro.models import layers as L
 from repro.models import module as nn
+from repro.models import paging
 from repro.models.module import PruneSpec
+
+# the decoder is pure attention (self + cross), so decoder-prompt rows can
+# be bucketed with sentinel-position masking; encoder frames stay exact
+BUCKETED_PREFILL = True
 
 
 def init_enc_layer(key, cfg):
@@ -135,16 +140,25 @@ def logits_fn(params, x):
     return nn.linear(params["lm_head"], x)
 
 
-def make_cache(cfg, batch: int, max_seq: int, dtype=None, t_enc: int | None = None):
+def make_cache(cfg, batch: int, max_seq: int, dtype=None, t_enc: int | None = None,
+               page=None, n_pages=None):
     dtype = dtype or cfg.dtype
     t_enc = t_enc or max_seq
-    return {
-        "self": {
+    if page is not None:
+        geom = page_geometry(cfg, max_seq, page)
+        self_c = paging.make_attn_pool(cfg.n_layers, n_pages, geom["page"],
+                                       cfg.n_kv_heads, cfg.head_dim, dtype)
+        self_c["pos"] = jnp.zeros((cfg.n_layers, batch), jnp.int32)
+        self_c.update(paging.make_tables(cfg.n_layers, batch, geom["n_bt"]))
+    else:
+        self_c = {
             "k": jnp.zeros((cfg.n_layers, batch, max_seq, cfg.n_kv_heads, cfg.head_dim), dtype),
             "v": jnp.zeros((cfg.n_layers, batch, max_seq, cfg.n_kv_heads, cfg.head_dim), dtype),
             "pos": jnp.zeros((cfg.n_layers, batch), jnp.int32),
             "kpos": jnp.full((cfg.n_layers, batch, max_seq), 2**30, jnp.int32),
-        },
+        }
+    return {
+        "self": self_c,
         "enc_out": jnp.zeros((batch, t_enc, cfg.d_model), dtype),
         # valid rows of enc_out per slot (a request's encoder output may be
         # shorter than the pool's fixed t_enc; the rest is masked)
@@ -152,17 +166,47 @@ def make_cache(cfg, batch: int, max_seq: int, dtype=None, t_enc: int | None = No
     }
 
 
+def page_geometry(cfg, max_seq: int, page: int) -> dict:
+    """Only decoder self-attn K/V is paged; the cached encoder output is a
+    fixed-width per-slot stripe (one write at admission, read-only after)."""
+    return paging.geometry(max_seq, page)
+
+
+def paged_insert(cfg, pool, stripe, slot, row, scatter_ids, bt_row, n_alloc):
+    return {
+        "self": paging.insert_attn(pool["self"], stripe["self"], row,
+                                   scatter_ids, bt_row, n_alloc, slot),
+        "enc_out": paging.copy_slot_row(pool["enc_out"], stripe["enc_out"],
+                                        slot, row, 0),
+        "enc_len": paging.copy_slot_row(pool["enc_len"], stripe["enc_len"],
+                                        slot, row, 0),
+    }
+
+
+def paged_release(cfg, pool, slot, page_ids):
+    return {
+        "self": paging.release_attn(pool["self"], page_ids, slot),
+        "enc_out": paging.reset_slot_row(pool["enc_out"], slot, 0),
+        "enc_len": paging.reset_slot_row(pool["enc_len"], slot, 0),
+    }
+
+
 def cache_batch_axes(cfg, cache):
     """Slot (batch) axis per cache leaf: decoder self-attn leaves are
-    (L, B, ...); the cached encoder output and its length are (B, ...)."""
+    (L, B, ...); the cached encoder output and its length are (B, ...).
+    Paged self-attn pool leaves map to None (no slot axis)."""
+    if paging.is_paged(cache["self"]):
+        self_axes = paging.paged_axes(cache["self"])
+    else:
+        self_axes = jax.tree.map(lambda _: 1, cache["self"])
     return {
-        "self": jax.tree.map(lambda _: 1, cache["self"]),
+        "self": self_axes,
         "enc_out": 0,
         "enc_len": 0,
     }
 
 
-def prefill(params, cfg, tokens, cache, embeds=None):
+def prefill(params, cfg, tokens, cache, embeds=None, n_rows=None):
     b = tokens.shape[0]
     if embeds is not None:
         enc_out = encode(params, cfg, embeds)
@@ -171,11 +215,25 @@ def prefill(params, cfg, tokens, cache, embeds=None):
         enc_out, enc_len = cache["enc_out"], cache["enc_len"]
     x = nn.embed(params["embed"], tokens)
     s = x.shape[1]
-    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    ar = jnp.arange(s, dtype=jnp.int32)
+    if n_rows is None:
+        positions = jnp.broadcast_to(ar, (b, s))
+    else:
+        # bucketed decoder prompt: padded rows carry the sentinel position,
+        # so their cached kpos masks them out of every future attend
+        positions = jnp.where(ar[None, :] < n_rows[:, None], ar[None, :],
+                              paging.KPOS_SENTINEL)
     x, new_self = _dec_stack(params, cfg, x, positions, enc_out,
                              caches=cache["self"], enc_len=enc_len)
+    x = L.norm(params["ln_f"], x, cfg)
+    if n_rows is None:
+        last = x[:, -1]
+    else:
+        last = jnp.take_along_axis(x, (n_rows - 1)[:, None, None], axis=1)[:, 0]
+        new_self = dict(new_self, pos=jnp.broadcast_to(
+            n_rows[None, :].astype(jnp.int32), new_self["pos"].shape))
     new_cache = {"self": new_self, "enc_out": enc_out, "enc_len": enc_len}
-    return L.norm(params["ln_f"], x, cfg)[:, -1], new_cache
+    return last, new_cache
 
 
 def decode_step(params, cfg, tokens, cache):

@@ -12,8 +12,13 @@ import jax.numpy as jnp
 
 from repro.models import layers as L
 from repro.models import module as nn
+from repro.models import paging
 from repro.models import rglru
 from repro.models.module import PruneSpec
+
+# recurrent blocks integrate padded rows into their state — prompt-length
+# bucketing would corrupt the rglru/conv carries, so admission stays exact
+BUCKETED_PREFILL = False
 
 
 def _layer_kinds(cfg) -> list[str]:
@@ -120,24 +125,36 @@ def logits_fn(params, x):
     return nn.linear(params["lm_head"], x)
 
 
-def make_cache(cfg, batch: int, max_seq: int, dtype=None):
+def make_cache(cfg, batch: int, max_seq: int, dtype=None, page=None,
+               n_pages=None):
     dtype = dtype or cfg.dtype
     kinds, counts, _ = _group(cfg)
     plen = len(counts)
     pattern = cfg.block_pattern or ("rec", "rec", "attn")
     r = cfg.rglru_dim or cfg.d_model
     win = min(cfg.window or max_seq, max_seq)
+    geom = page_geometry(cfg, max_seq, page) if page is not None else None
     caches = []
     for j in range(plen):
         n = counts[j]
         if pattern[j] == "attn":
-            caches.append({
-                "k": jnp.zeros((n, batch, win, cfg.n_kv_heads, cfg.head_dim), dtype),
-                "v": jnp.zeros((n, batch, win, cfg.n_kv_heads, cfg.head_dim), dtype),
-                "pos": jnp.zeros((n, batch), jnp.int32),
-                "kpos": jnp.full((n, batch, win), 2**30, jnp.int32),
-            })
+            if geom is not None:
+                # paged attn stack: all attn stacks share one block-table
+                # geometry (same window), so physical ids are pool-global
+                c = paging.make_attn_pool(n, n_pages, geom["page"],
+                                          cfg.n_kv_heads, cfg.head_dim, dtype)
+                c["pos"] = jnp.zeros((n, batch), jnp.int32)
+                c.update(paging.make_tables(n, batch, geom["n_bt"]))
+            else:
+                c = {
+                    "k": jnp.zeros((n, batch, win, cfg.n_kv_heads, cfg.head_dim), dtype),
+                    "v": jnp.zeros((n, batch, win, cfg.n_kv_heads, cfg.head_dim), dtype),
+                    "pos": jnp.zeros((n, batch), jnp.int32),
+                    "kpos": jnp.full((n, batch, win), 2**30, jnp.int32),
+                }
+            caches.append(c)
         else:
+            # recurrent state is O(1) per slot — stays slot-striped
             caches.append({
                 "h": jnp.zeros((n, batch, r), jnp.float32),
                 "conv": jnp.zeros((n, batch, rglru.CONV_K - 1, r), dtype),
@@ -145,13 +162,50 @@ def make_cache(cfg, batch: int, max_seq: int, dtype=None):
     return tuple(caches)
 
 
+def page_geometry(cfg, max_seq: int, page: int) -> dict:
+    """The live KV view per attn stack is the (windowed) ring, not max_seq:
+    pages cover `min(window, max_seq)` rows and the ring reuses them in
+    place once positions wrap."""
+    win = min(cfg.window or max_seq, max_seq)
+    return paging.geometry(win, page)
+
+
+def paged_insert(cfg, pool, stripe, slot, row, scatter_ids, bt_row, n_alloc):
+    out = []
+    for pc, sc in zip(pool, stripe):
+        if paging.is_paged(pc):
+            out.append(paging.insert_attn(pc, sc, row, scatter_ids, bt_row,
+                                          n_alloc, slot))
+        else:
+            out.append({k: paging.copy_slot_row(pc[k], sc[k], slot, row, 1)
+                        for k in pc})
+    return tuple(out)
+
+
+def paged_release(cfg, pool, slot, page_ids):
+    out = []
+    for pc in pool:
+        if paging.is_paged(pc):
+            out.append(paging.release_attn(pc, page_ids, slot))
+        else:
+            # pristine recurrent state is all-zeros (h/conv)
+            out.append({k: paging.reset_slot_row(pc[k], slot, 1) for k in pc})
+    return tuple(out)
+
+
 def cache_batch_axes(cfg, cache):
     """Slot (batch) axis per cache leaf: attn and recurrent stacks alike are
-    stacked (n_layers_in_stack, B, ...)."""
-    return jax.tree.map(lambda _: 1, cache)
+    stacked (n_layers_in_stack, B, ...); paged pool leaves map to None."""
+    return tuple(
+        paging.paged_axes(c) if paging.is_paged(c)
+        else jax.tree.map(lambda _: 1, c)
+        for c in cache)
 
 
-def prefill(params, cfg, tokens, cache, embeds=None):
+def prefill(params, cfg, tokens, cache, embeds=None, n_rows=None):
+    if n_rows is not None:
+        raise ValueError("hybrid prefill cannot be length-bucketed: recurrent"
+                         " blocks would integrate the padded rows")
     x = nn.embed(params["embed"], tokens)
     b, s, _ = x.shape
     positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))

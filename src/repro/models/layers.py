@@ -251,6 +251,41 @@ def attention(
             aligned=not bidirectional,
         )
         new_cache = None
+    elif "bt" in cache:
+        # Paged pool (serve slot pool): the slot's rows live in shared
+        # physical pages resolved through its block table `bt` — a runtime
+        # vec_idx for the cache. The new row is written straight to its
+        # physical page; the gather `pool[bt]` then yields a contiguous
+        # lane view for the same chunked attention as the stripe path.
+        # Writes whose logical page falls outside the slot's allocation
+        # (idle lanes keep stepping inside a decode chunk) are redirected
+        # to the scratch page, which no block table ever references.
+        from repro.models import paging
+
+        if s != 1:
+            raise ValueError("paged KV caches only support single-token decode"
+                             " (prefill runs on a stripe template)")
+        pos = cache["pos"]                                  # (B,) int32
+        bt, alloc = cache["bt"], cache["alloc"]
+        n_bt = bt.shape[1]
+        page = cache["k"].shape[1]                          # (n_pages, page, KV, hd)
+        view_len = n_bt * page
+        vpos = jax.lax.rem(pos, view_len) if cfg.window else pos
+        logical = jnp.clip(vpos // page, 0, n_bt - 1)
+        off = jax.lax.rem(vpos, page)
+        valid = (vpos // page) < alloc
+        phys = jnp.take_along_axis(bt, logical[:, None], axis=1)[:, 0]
+        phys_w = jnp.where(valid, phys, paging.SCRATCH_PAGE)
+        ck = cache["k"].at[phys_w, off].set(k[:, 0].astype(cache["k"].dtype))
+        cv = cache["v"].at[phys_w, off].set(v[:, 0].astype(cache["v"].dtype))
+        ckpos = cache["kpos"].at[phys_w, off].set(positions[:, 0].astype(jnp.int32))
+        k_view = jnp.take(ck, bt, axis=0).reshape(b, view_len, kvh, hd)
+        v_view = jnp.take(cv, bt, axis=0).reshape(b, view_len, kvh, hd)
+        kpos_view = jnp.take(ckpos, bt, axis=0).reshape(b, view_len)
+        out = _attn_chunked(q, k_view, v_view, positions, kpos_view, True,
+                            cfg.window, kv_block)
+        new_cache = {"k": ck, "v": cv, "kpos": ckpos, "pos": pos + 1,
+                     "bt": bt, "alloc": alloc}
     else:
         # Cache slots are a ring buffer when a sliding window bounds the
         # live KV set (smax = window); per-slot absolute positions ("kpos")

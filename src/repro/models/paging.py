@@ -1,0 +1,154 @@
+"""Shared helpers for the paged KV pool (serve slot pool, PR 3).
+
+A paged decode cache replaces each per-slot ``(B, S, ...)`` KV stripe
+with one shared physical page buffer per leaf, ``(n_pages, page, ...)``,
+plus a per-slot block table ``bt (B, n_bt)`` of physical page ids and a
+per-slot allocated-page count ``alloc (B,)``.  The block table is the
+runtime analogue of the HiNM kernel's ``vec_idx``: attention resolves a
+slot's logical rows through ``bt`` with a sublane gather (``pool[bt]``)
+into a contiguous lane view, exactly like ``kernels/hinm_spmm`` gathers
+kept input channels — a permuted table costs the same as an identity one.
+
+Two physical pages are reserved:
+
+  ``SCRATCH_PAGE`` (0)  — write sink.  Idle lanes keep stepping inside a
+      decode chunk (fixed-shape batch) and their row writes must land
+      somewhere; any write whose logical page is outside the slot's
+      allocation is redirected here.  No block table ever references it,
+      so scratch content is unreachable by attention.
+  ``SENTINEL_PAGE`` (1) — read-only masked page.  Every unassigned block
+      table entry points here; its ``kpos`` rows stay at ``KPOS_SENTINEL``
+      forever (writes can't reach it — they go to an allocated page or to
+      scratch), so gathered views mask the unallocated tail to an exact
+      zero contribution in the online softmax.
+
+Freed pages keep stale K/V but their ``kpos`` rows are reset to the
+sentinel on release, so a page recycled to a new slot can never leak rows
+into a view until the new owner writes them.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+KPOS_SENTINEL = 2**30
+SCRATCH_PAGE = 0
+SENTINEL_PAGE = 1
+N_RESERVED = 2
+
+
+def geometry(view_len: int, page: int) -> dict:
+    """Resolve page geometry for a logical view of ``view_len`` rows.
+
+    ``page`` is clamped to the view and halved until it divides it, so any
+    requested size yields a valid layout. Returns dict(view, page, n_bt).
+    """
+    page = max(1, min(page, view_len))
+    while view_len % page:
+        page //= 2
+    return {"view": view_len, "page": page, "n_bt": view_len // page}
+
+
+def make_attn_pool(n_stack: int, n_pages: int, page: int, n_kv_heads: int,
+                   head_dim: int, dtype) -> dict:
+    """Physical page buffers for one attention stack: k/v/kpos leaves with
+    the ``(B, S)`` stripe axes replaced by ``(n_pages, page)``."""
+    return {
+        "k": jnp.zeros((n_stack, n_pages, page, n_kv_heads, head_dim), dtype),
+        "v": jnp.zeros((n_stack, n_pages, page, n_kv_heads, head_dim), dtype),
+        "kpos": jnp.full((n_stack, n_pages, page), KPOS_SENTINEL, jnp.int32),
+    }
+
+
+def make_tables(n_stack: int, batch: int, n_bt: int) -> dict:
+    """Pristine per-slot block table + allocation count, replicated over the
+    stack axis so they scan alongside the per-layer pool leaves."""
+    return {
+        "bt": jnp.full((n_stack, batch, n_bt), SENTINEL_PAGE, jnp.int32),
+        "alloc": jnp.zeros((n_stack, batch), jnp.int32),
+    }
+
+
+def is_paged(cache) -> bool:
+    """True for a (per-layer slice of a) paged attention cache dict."""
+    return isinstance(cache, dict) and "bt" in cache
+
+
+# slot axis of the leaves that stay per-slot inside a paged attn cache;
+# pool leaves (k/v/kpos) carry no slot axis and map to None
+STRIPED_AXES = {"pos": 1, "bt": 1, "alloc": 1}
+
+
+def paged_axes(cache: dict) -> dict:
+    """Slot-axis map for one paged attn cache dict (see cache_batch_axes)."""
+    return {k: STRIPED_AXES.get(k) for k in cache}
+
+
+def scatter_rows(pool: jax.Array, stripe: jax.Array, row, scatter_ids) -> jax.Array:
+    """Copy slot-row ``row`` of a striped leaf into physical pages.
+
+    pool ``(n_stack, n_pages, page, ...)``; stripe ``(n_stack, B, S, ...)``
+    with ``S >= n_bt * page``; ``scatter_ids (n_bt,)`` int32 physical ids,
+    entries past the allocation pointing at SCRATCH_PAGE (duplicate scratch
+    writes race benignly — scratch is unreachable by reads).
+    """
+    page = pool.shape[2]
+    n_bt = scatter_ids.shape[0]
+    one = jax.lax.dynamic_slice_in_dim(stripe, row, 1, axis=1)[:, 0]
+    pieces = one[:, : n_bt * page].reshape(
+        (one.shape[0], n_bt, page) + one.shape[2:]).astype(pool.dtype)
+    return pool.at[:, scatter_ids].set(pieces)
+
+
+def insert_attn(pool: dict, stripe: dict, row, scatter_ids, bt_row, n_alloc,
+                slot) -> dict:
+    """Insert a prefilled stripe-cache row into a paged attention stack:
+    scatter k/v/kpos pieces to their physical pages, copy the per-slot
+    ``pos`` counter, and install the block table row."""
+    out = dict(pool)
+    for name in ("k", "v", "kpos"):
+        out[name] = scatter_rows(pool[name], stripe[name], row, scatter_ids)
+    one = jax.lax.dynamic_slice_in_dim(stripe["pos"], row, 1, axis=1)
+    out["pos"] = jax.lax.dynamic_update_slice_in_dim(
+        pool["pos"], one, slot, axis=1)
+    n_stack, _, n_bt = pool["bt"].shape
+    out["bt"] = jax.lax.dynamic_update_slice_in_dim(
+        pool["bt"], jnp.broadcast_to(bt_row, (n_stack, 1, n_bt)), slot, axis=1)
+    out["alloc"] = jax.lax.dynamic_update_slice_in_dim(
+        pool["alloc"], jnp.broadcast_to(n_alloc, (n_stack, 1)).astype(jnp.int32),
+        slot, axis=1)
+    return out
+
+
+def release_attn(pool: dict, page_ids, slot) -> dict:
+    """Release a slot from a paged attention stack: freed pages' kpos rows
+    return to the sentinel (stale K/V becomes unreachable the moment the
+    page is recycled), and the slot's table/counters go pristine.
+    ``page_ids (n_bt,)`` is padded with SCRATCH_PAGE (resetting scratch
+    kpos is harmless — it is never read)."""
+    out = dict(pool)
+    out["kpos"] = pool["kpos"].at[:, page_ids].set(KPOS_SENTINEL)
+    n_stack, _, n_bt = pool["bt"].shape
+    out["pos"] = jax.lax.dynamic_update_slice_in_dim(
+        pool["pos"], jnp.zeros((n_stack, 1), jnp.int32), slot, axis=1)
+    out["bt"] = jax.lax.dynamic_update_slice_in_dim(
+        pool["bt"], jnp.full((n_stack, 1, n_bt), SENTINEL_PAGE, jnp.int32),
+        slot, axis=1)
+    out["alloc"] = jax.lax.dynamic_update_slice_in_dim(
+        pool["alloc"], jnp.zeros((n_stack, 1), jnp.int32), slot, axis=1)
+    return out
+
+
+def copy_slot_row(dst: jax.Array, src: jax.Array, slot, row, axis: int) -> jax.Array:
+    """Copy slot-row ``row`` of striped leaf ``src`` into row ``slot`` of
+    ``dst`` along ``axis`` (the generic non-paged-leaf insert)."""
+    one = jax.lax.dynamic_slice_in_dim(src, row, 1, axis=axis)
+    return jax.lax.dynamic_update_slice_in_dim(
+        dst, one.astype(dst.dtype), slot, axis=axis)
+
+
+def reset_slot_row(leaf: jax.Array, slot, axis: int, fill=0) -> jax.Array:
+    """Reset one slot row of a striped (non-paged) leaf to ``fill``."""
+    shape = leaf.shape[:axis] + (1,) + leaf.shape[axis + 1:]
+    return jax.lax.dynamic_update_slice_in_dim(
+        leaf, jnp.full(shape, fill, leaf.dtype), slot, axis=axis)

@@ -14,7 +14,12 @@ import jax.numpy as jnp
 
 from repro.models import layers as L
 from repro.models import module as nn
+from repro.models import paging
 from repro.models.module import PruneSpec
+
+# pure-attention prefill: padded rows are exactly masked (sentinel kpos),
+# so prompts can be bucketed to power-of-two lengths (serve admission)
+BUCKETED_PREFILL = True
 
 
 def init_block(key, cfg):
@@ -103,11 +108,23 @@ def logits_fn(params, x):
     return nn.linear(params["lm_head"], x)
 
 
-def make_cache(cfg, batch: int, max_seq: int, dtype=None):
+def make_cache(cfg, batch: int, max_seq: int, dtype=None, page=None,
+               n_pages=None):
     """Decode cache with per-slot positions: every batch lane ("slot") tracks
     its own `pos` / `kpos`, so lanes can host independent requests at
-    different decode depths (continuous batching)."""
+    different decode depths (continuous batching).
+
+    With ``page``/``n_pages`` set, K/V/kpos become shared physical page
+    pools (``(L, n_pages, page, ...)``) addressed through a per-slot block
+    table instead of per-slot ``max_seq`` stripes (serve paged pool)."""
     dtype = dtype or cfg.dtype
+    if page is not None:
+        geom = page_geometry(cfg, max_seq, page)
+        kv = paging.make_attn_pool(cfg.n_layers, n_pages, geom["page"],
+                                   cfg.n_kv_heads, cfg.head_dim, dtype)
+        kv["pos"] = jnp.zeros((cfg.n_layers, batch), jnp.int32)
+        kv.update(paging.make_tables(cfg.n_layers, batch, geom["n_bt"]))
+        return kv
     kv = {
         "k": jnp.zeros((cfg.n_layers, batch, max_seq, cfg.n_kv_heads, cfg.head_dim), dtype),
         "v": jnp.zeros((cfg.n_layers, batch, max_seq, cfg.n_kv_heads, cfg.head_dim), dtype),
@@ -117,20 +134,55 @@ def make_cache(cfg, batch: int, max_seq: int, dtype=None):
     return kv
 
 
+def page_geometry(cfg, max_seq: int, page: int) -> dict:
+    """Paged-pool geometry: the full `max_seq` view is block-allocated."""
+    return paging.geometry(max_seq, page)
+
+
+def paged_insert(cfg, pool, stripe, slot, row, scatter_ids, bt_row, n_alloc):
+    """Insert row `row` of a prefilled stripe cache into paged-pool slot
+    `slot` whose pages are `scatter_ids`/`bt_row` (see serve.kv)."""
+    return paging.insert_attn(pool, stripe, row, scatter_ids, bt_row,
+                              n_alloc, slot)
+
+
+def paged_release(cfg, pool, slot, page_ids):
+    return paging.release_attn(pool, page_ids, slot)
+
+
 def cache_batch_axes(cfg, cache):
     """Axis of the request-slot (batch) dimension for every cache leaf —
-    lets the serve slot pool insert/reset single slots generically."""
+    lets the serve slot pool insert/reset single slots generically.
+    Paged-pool leaves carry no slot axis and map to None."""
+    if paging.is_paged(cache):
+        return paging.paged_axes(cache)
     return jax.tree.map(lambda _: 1, cache)
 
 
-def prefill(params, cfg, tokens, cache, embeds=None):
-    """Fill the KV cache; returns (last-token pre-logits (B, D), cache)."""
+def prefill(params, cfg, tokens, cache, embeds=None, n_rows=None):
+    """Fill the KV cache; returns (last-token pre-logits (B, D), cache).
+
+    `n_rows` (B,) enables bucketed prefill: rows past a lane's true length
+    are padding whose positions (and hence cached `kpos`) are the mask
+    sentinel — never attended by real rows, overwritten in place as decode
+    advances — so one jit serves every prompt length in the bucket."""
     x = embed_inputs(params, cfg, tokens, embeds)
     b, s, _ = x.shape
-    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    ar = jnp.arange(s, dtype=jnp.int32)
+    if n_rows is None:
+        positions = jnp.broadcast_to(ar, (b, s))
+    else:
+        positions = jnp.where(ar[None, :] < n_rows[:, None], ar[None, :],
+                              paging.KPOS_SENTINEL)
     x, new_cache = _scan_blocks(params, cfg, x, positions, caches=cache)
     x = L.norm(params["ln_f"], x, cfg)
-    return x[:, -1], new_cache
+    if n_rows is None:
+        return x[:, -1], new_cache
+    last = jnp.take_along_axis(x, (n_rows - 1)[:, None, None], axis=1)[:, 0]
+    # decode resumes at each lane's true length, not the padded bucket end
+    new_cache = dict(new_cache, pos=jnp.broadcast_to(
+        n_rows[None, :].astype(jnp.int32), new_cache["pos"].shape))
+    return last, new_cache
 
 
 def decode_step(params, cfg, tokens, cache):

@@ -11,6 +11,10 @@ from repro.models import xlstm as X
 from repro.models.module import PruneSpec
 
 
+# fully recurrent: no paged KV (state is O(1)) and no bucketed prefill
+BUCKETED_PREFILL = False
+
+
 def _pattern(cfg):
     return cfg.block_pattern or ("mlstm", "slstm")
 
@@ -98,7 +102,10 @@ def cache_batch_axes(cfg, cache):
     return jax.tree.map(lambda _: 1, cache)
 
 
-def prefill(params, cfg, tokens, cache, embeds=None):
+def prefill(params, cfg, tokens, cache, embeds=None, n_rows=None):
+    if n_rows is not None:
+        raise ValueError("xlstm prefill cannot be length-bucketed: recurrent"
+                         " state would integrate the padded rows")
     x = nn.embed(params["embed"], tokens)
     x, new_cache = _run(params, cfg, x, caches=cache)
     return L.norm(params["ln_f"], x, cfg)[:, -1], new_cache

@@ -53,8 +53,40 @@ def cache_batch_axes(cfg, cache):
     return model_for(cfg).cache_batch_axes(cfg, cache)
 
 
-def prefill(params, cfg, tokens, cache, embeds=None):
-    return model_for(cfg).prefill(params, cfg, tokens, cache, embeds=embeds)
+def prefill(params, cfg, tokens, cache, embeds=None, n_rows=None):
+    """Fill the decode cache. `n_rows` (B,) enables bucketed prefill on
+    pure-attention families (see `supports_bucketed_prefill`): rows past a
+    lane's true length are sentinel-masked padding."""
+    return model_for(cfg).prefill(params, cfg, tokens, cache, embeds=embeds,
+                                  n_rows=n_rows)
+
+
+def supports_bucketed_prefill(cfg) -> bool:
+    """Whether prompts can be padded to length buckets at prefill: true for
+    pure-attention stacks (masked pads are exact), false when recurrent
+    blocks would integrate the padding into their state."""
+    return getattr(model_for(cfg), "BUCKETED_PREFILL", False)
+
+
+def page_geometry(cfg, max_seq: int, page: int):
+    """dict(view, page, n_bt) for a paged decode cache, or None for
+    families whose decode state cannot be paged (pure recurrent)."""
+    fn = getattr(model_for(cfg), "page_geometry", None)
+    return None if fn is None else fn(cfg, max_seq, page)
+
+
+def paged_insert(cfg, pool, stripe, slot, row, scatter_ids, bt_row, n_alloc):
+    """Insert row `row` of a prefilled stripe cache into paged-pool slot
+    `slot`: scatter K/V/kpos pieces to physical pages `scatter_ids`,
+    install block-table row `bt_row`, copy the striped leaves."""
+    return model_for(cfg).paged_insert(cfg, pool, stripe, slot, row,
+                                       scatter_ids, bt_row, n_alloc)
+
+
+def paged_release(cfg, pool, slot, page_ids):
+    """Release a paged-pool slot: freed pages' kpos rows return to the
+    sentinel and the slot's striped leaves go pristine."""
+    return model_for(cfg).paged_release(cfg, pool, slot, page_ids)
 
 
 def decode_step(params, cfg, tokens, cache):

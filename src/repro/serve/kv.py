@@ -1,54 +1,139 @@
-"""Slot-pooled KV cache for continuous batching.
+"""Slot-pooled KV cache for continuous batching: paged pool + stripe mode.
 
-The pool is one family cache pytree (`zoo.make_cache`) of width
-`n_slots`: each batch lane is a slot hosting one in-flight request at its
-own decode position (the family caches carry per-slot `pos`/`kpos`).
-Slots are recycled through a free list; insertion and reset are each a
-single device dispatch of per-leaf `dynamic_update_slice_in_dim` writes
-(donated, so the pool updates in place instead of reallocating O(pool)
-memory per admission).
+Paged mode (default in the Scheduler for attention families): each cache
+leaf that used to hold one ``max_seq`` stripe per slot becomes one shared
+physical page buffer (``page`` rows per page) plus a per-slot block table
+— a runtime-permuted ``vec_idx`` for the cache, resolved by attention
+with the same indexed-gather discipline the HiNM kernel applies to sparse
+weight tiles.  Pages flow through a host-side free list: a slot only
+holds ``ceil(min(prompt+max_new, view)/page)`` pages instead of a full
+``max_seq`` stripe, so pool memory scales with live tokens, not
+``slots x max_seq``.  Two physical pages are reserved (see
+``models/paging.py``): a scratch write-sink and a read-only kpos-sentinel
+page that every unassigned block-table entry points at.  Releasing a slot
+resets its freed pages' ``kpos`` rows to the sentinel, so a page recycled
+to a new request can never leak rows into the old lane.
+
+Stripe mode (``page=None``) keeps the PR 2 layout: each batch lane pins a
+full ``max_seq`` stripe; insertion and reset are each a single device
+dispatch of per-leaf ``dynamic_update_slice_in_dim`` writes (donated).
+
+``slot_len`` mirrors each slot's **actual cache rows**: prompt rows
+written by prefill plus one row per decode-emitted token (a generated
+token's KV lands on the step that feeds it back, so the newest sampled
+token is not yet a cache row).  ``slot_capacity`` is the row reservation
+made at insert; the scheduler asserts ``slot_len <= slot_capacity`` at
+harvest so accounting drift fails loudly instead of silently corrupting
+a neighbor page.
 """
 from __future__ import annotations
 
+import collections
+
 import jax
+import jax.numpy as jnp
 import numpy as np
 
-from repro.models import zoo
+from repro.models import paging, zoo
 
 
 class SlotKVCache:
-    def __init__(self, cfg, n_slots: int, max_seq: int, dtype=None, **cache_kw):
+    def __init__(self, cfg, n_slots: int, max_seq: int, dtype=None,
+                 page: int | None = None, n_pages: int | None = None,
+                 **cache_kw):
         self.cfg = cfg
         self.n_slots = n_slots
         self.max_seq = max_seq
         self._cache_kw = dict(cache_kw, dtype=dtype)
-        self.cache = zoo.make_cache(cfg, n_slots, max_seq, **self._cache_kw)
+        geom = zoo.page_geometry(cfg, max_seq, page) if page else None
+        self.paged = geom is not None
         self._templates: dict[int, object] = {}  # pristine batch-k caches
-        axes = zoo.cache_batch_axes(cfg, self.cache)
 
-        def write_row(pool, batched, slot, row):
-            # copy slot-row `row` of a batch-k cache into pool slot `slot`
-            def f(c, o, a):
-                one = jax.lax.dynamic_slice_in_dim(o, row, 1, axis=a)
-                return jax.lax.dynamic_update_slice_in_dim(
-                    c, one.astype(c.dtype), slot, axis=a)
+        if self.paged:
+            self.page = geom["page"]
+            self.view_len = geom["view"]
+            self.n_bt = geom["n_bt"]
+            # `n_pages` = allocatable pages; None = full stripe capacity
+            alloc_pages = n_slots * self.n_bt if n_pages is None else n_pages
+            self.n_pages = paging.N_RESERVED + alloc_pages
+            self.cache = zoo.make_cache(
+                cfg, n_slots, max_seq, page=self.page, n_pages=self.n_pages,
+                **self._cache_kw)
+            self._free_pages = collections.deque(
+                range(paging.N_RESERVED, self.n_pages))
+            self._slot_pages: dict[int, list[int]] = {}
 
-            return jax.tree.map(f, pool, batched, axes)
+            def insert_fn(pool, stripe, slot, row, scatter_ids, bt_row, n_alloc):
+                return zoo.paged_insert(cfg, pool, stripe, slot, row,
+                                        scatter_ids, bt_row, n_alloc)
 
-        self._write_row = jax.jit(write_row, donate_argnums=(0,))
+            def release_fn(pool, slot, page_ids):
+                return zoo.paged_release(cfg, pool, slot, page_ids)
+
+            self._insert_paged = jax.jit(insert_fn, donate_argnums=(0,))
+            self._release_paged = jax.jit(release_fn, donate_argnums=(0,))
+        else:
+            self.cache = zoo.make_cache(cfg, n_slots, max_seq, **self._cache_kw)
+            axes = zoo.cache_batch_axes(cfg, self.cache)
+
+            def write_row(pool, batched, slot, row):
+                # copy slot-row `row` of a batch-k cache into pool slot `slot`
+                def f(c, o, a):
+                    one = jax.lax.dynamic_slice_in_dim(o, row, 1, axis=a)
+                    return jax.lax.dynamic_update_slice_in_dim(
+                        c, one.astype(c.dtype), slot, axis=a)
+
+                return jax.tree.map(f, pool, batched, axes)
+
+            self._write_row = jax.jit(write_row, donate_argnums=(0,))
+
         self._free = list(range(n_slots))
-        # host mirror of each slot's sequence length (prompt + generated so
-        # far) for admission guards and introspection
+        # host mirror of each slot's cache-row count and row reservation
         self.slot_len = np.zeros((n_slots,), np.int64)
+        self._slot_cap = np.zeros((n_slots,), np.int64)
 
     def template(self, batch: int = 1):
-        """Pristine batch-`batch` cache: prefill input / slot-reset source."""
+        """Pristine batch-`batch` stripe cache: prefill input / slot-reset
+        source (prefill always runs on stripes; paged insert scatters the
+        prefilled rows into pages)."""
         if batch not in self._templates:
             self._templates[batch] = zoo.make_cache(
                 self.cfg, batch, self.max_seq, **self._cache_kw)
         return self._templates[batch]
 
-    # -- slot lifecycle -----------------------------------------------------
+    # -- page accounting ------------------------------------------------------
+
+    def pages_needed(self, rows: int) -> int:
+        """Pages covering `rows` cache rows (capped at the view: a windowed
+        ring reuses its pages in place once positions wrap)."""
+        rows = min(rows, self.view_len)
+        return max(1, -(-rows // self.page))
+
+    @property
+    def n_free_pages(self) -> int:
+        return len(self._free_pages) if self.paged else 1 << 62
+
+    @property
+    def n_alloc_pages(self) -> int:
+        """Total allocatable pages (excludes the two reserved pages)."""
+        return self.n_pages - paging.N_RESERVED if self.paged else 1 << 62
+
+    def can_admit(self, reserve_rows: int) -> bool:
+        """Would a request needing `reserve_rows` cache rows fit right now?"""
+        if not self._free:
+            return False
+        return (not self.paged
+                or self.pages_needed(reserve_rows) <= len(self._free_pages))
+
+    def slot_capacity(self, slot: int) -> int:
+        """Cache rows reserved for `slot` at insert time."""
+        return int(self._slot_cap[slot])
+
+    def pool_bytes(self) -> int:
+        """Device bytes held by the pool cache pytree."""
+        return sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(self.cache))
+
+    # -- slot lifecycle -------------------------------------------------------
 
     @property
     def n_free(self) -> int:
@@ -59,20 +144,62 @@ class SlotKVCache:
             raise RuntimeError("no free slots")
         return self._free.pop(0)
 
-    def insert(self, slot: int, cache, length: int, row: int = 0) -> None:
-        """Write row `row` of a prefilled batch-k cache into `slot`."""
-        self.cache = self._write_row(self.cache, cache, slot, row)
+    def insert(self, slot: int, cache, length: int, row: int = 0,
+               reserve: int | None = None) -> None:
+        """Write row `row` of a prefilled batch-k stripe cache into `slot`.
+
+        `length` is the row count actually written (true prompt rows);
+        `reserve` is the row budget the request may grow to (prompt +
+        max_new_tokens) — in paged mode it sizes the page allocation."""
+        reserve = length if reserve is None else reserve
+        if self.paged:
+            n_alloc = self.pages_needed(reserve)
+            if n_alloc > len(self._free_pages):
+                raise RuntimeError(
+                    f"slot {slot}: {n_alloc} pages needed, "
+                    f"{len(self._free_pages)} free")
+            pages = [self._free_pages.popleft() for _ in range(n_alloc)]
+            ids = np.full((self.n_bt,), paging.SCRATCH_PAGE, np.int32)
+            bt_row = np.full((self.n_bt,), paging.SENTINEL_PAGE, np.int32)
+            ids[:n_alloc] = bt_row[:n_alloc] = pages
+            self.cache = self._insert_paged(
+                self.cache, cache, slot, row, jnp.asarray(ids),
+                jnp.asarray(bt_row), np.int32(n_alloc))
+            self._slot_pages[slot] = pages
+        else:
+            self.cache = self._write_row(self.cache, cache, slot, row)
+        # row budget the request may legally grow to; a windowed ring wraps
+        # within its pages, so `reserve` (not n_alloc * page) is the bound
+        self._slot_cap[slot] = reserve
         self.slot_len[slot] = length
 
     def release(self, slot: int) -> None:
-        """Reset `slot` to pristine state (kpos -> +inf sentinel, pos -> 0,
-        recurrent state -> initial) and return it to the free list."""
-        self.cache = self._write_row(self.cache, self.template(), slot, 0)
+        """Reset `slot` to pristine state and return it (and, in paged mode,
+        its pages — kpos rows back to the sentinel) to the free lists."""
+        if self.paged:
+            pages = self._slot_pages.pop(slot, [])
+            ids = np.full((self.n_bt,), paging.SCRATCH_PAGE, np.int32)
+            ids[: len(pages)] = pages
+            self.cache = self._release_paged(
+                self.cache, slot, jnp.asarray(ids))
+            self._free_pages.extend(pages)
+        else:
+            self.cache = self._write_row(self.cache, self.template(), slot, 0)
         self.slot_len[slot] = 0
+        self._slot_cap[slot] = 0
         self._free.append(slot)
 
     def reset_all(self) -> None:
-        self.cache = zoo.make_cache(
-            self.cfg, self.n_slots, self.max_seq, **self._cache_kw)
+        if self.paged:
+            self.cache = zoo.make_cache(
+                self.cfg, self.n_slots, self.max_seq, page=self.page,
+                n_pages=self.n_pages, **self._cache_kw)
+            self._free_pages = collections.deque(
+                range(paging.N_RESERVED, self.n_pages))
+            self._slot_pages = {}
+        else:
+            self.cache = zoo.make_cache(
+                self.cfg, self.n_slots, self.max_seq, **self._cache_kw)
         self._free = list(range(self.n_slots))
         self.slot_len[:] = 0
+        self._slot_cap[:] = 0

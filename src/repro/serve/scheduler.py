@@ -3,9 +3,11 @@
 The decode batch is a fixed-width pool of request slots (`SlotKVCache`).
 Every scheduler step:
 
-  1. admission — queued requests are prefilled (batch-1, at exact prompt
-     length) and inserted into free slots; `policy="static"` instead gang-
-     admits only when the pool is idle (the naive baseline the benchmark
+  1. admission — queued requests are prefilled (grouped by prompt-length
+     bucket, padded with sentinel-masked rows so one jit serves the whole
+     bucket) and inserted into free slots; a paged pool also gates
+     admission on free KV pages. `policy="static"` instead gang-admits
+     only when the pool is idle (the naive baseline the benchmark
      compares against);
   2. decode — one jitted chunk of `decode_chunk` steps runs as a
      `lax.scan` over `zoo.decode_step` + on-device sampling, with per-slot
@@ -52,7 +54,9 @@ def param_bytes(params) -> tuple[int, int]:
 class Scheduler:
     def __init__(self, cfg, params, max_slots: int = 4, max_seq: int = 512,
                  decode_chunk: int = 8, rng_seed: int = 0,
-                 policy: str = "continuous", cache_kw: dict | None = None):
+                 policy: str = "continuous", cache_kw: dict | None = None,
+                 page: int | None = 64, n_pages: int | None = None,
+                 bucket: bool | None = None, bucket_min: int = 8):
         if policy not in ("continuous", "static"):
             raise ValueError(f"unknown admission policy {policy!r}")
         self.cfg = cfg
@@ -66,8 +70,22 @@ class Scheduler:
         # out-of-vocab EOS (e.g. full-tokenizer ids on reduced test configs)
         # disables EOS termination rather than matching a wrong token
         self.default_eos = eos if 0 <= eos < cfg.vocab else -1
+        # prompt-length bucketing: pad admission prefill to power-of-two
+        # buckets (one jit per bucket, not per distinct prompt length).
+        # Auto-off for recurrent families (pads would enter the state) and
+        # windowed configs (the stripe ring-roll path assumes real
+        # positions in every prefill row).
+        can_bucket = zoo.supports_bucketed_prefill(cfg) and not cfg.window
+        if bucket and not can_bucket:
+            raise ValueError(f"{cfg.family!r} prefill cannot be length-bucketed")
+        self.bucket = can_bucket if bucket is None else bucket
+        self.bucket_min = bucket_min
+        # distinct XLA traces of the admission prefill (the compile-count
+        # column in benchmarks/serve_bench.py)
+        self.prefill_traces = 0
 
-        self.kv = SlotKVCache(cfg, max_slots, max_seq, **(cache_kw or {}))
+        self.kv = SlotKVCache(cfg, max_slots, max_seq, page=page,
+                              n_pages=n_pages, **(cache_kw or {}))
         # enc-dec pools cache the encoder output at fixed width t_enc
         # (pass cache_kw={"t_enc": ...} to right-size it for the workload)
         self._t_enc = (cache_kw or {}).get("t_enc") or max_seq
@@ -90,9 +108,11 @@ class Scheduler:
         # RNG key advances identically in both variants so the stream does
         # not depend on which one is live.
 
-        def prefill_fn(params, tokens, cache, embeds, key, temp, topk,
+        def prefill_fn(params, tokens, cache, embeds, key, temp, topk, n_rows,
                        stochastic):
-            last, cache = zoo.prefill(params, cfg, tokens, cache, embeds=embeds)
+            self.prefill_traces += 1  # runs at trace time only
+            last, cache = zoo.prefill(params, cfg, tokens, cache,
+                                      embeds=embeds, n_rows=n_rows)
             logits = zoo.logits_fn(params, cfg, last)[:, :vocab].astype(jnp.float32)
             first = (sampler.sample(key, logits, temp, topk) if stochastic
                      else sampler.greedy(logits))
@@ -165,12 +185,29 @@ class Scheduler:
             extra = req.embeds.shape[0]
         return len(req.prompt) + extra
 
+    def _reserve_rows(self, req: Request) -> int:
+        """Cache rows this request may legally grow to (page budget)."""
+        return self._cache_rows(req) + req.params.max_new_tokens
+
+    def _bucket_len(self, n_tokens: int, extra: int) -> int:
+        """Power-of-two prompt-length bucket, clamped so bucket + non-token
+        rows (vlm embeds) still fit the prefill stripe."""
+        b = self.bucket_min
+        while b < n_tokens:
+            b *= 2
+        return max(n_tokens, min(b, self.max_seq - extra))
+
     def submit(self, req: Request) -> None:
         rows = self._cache_rows(req)
         if rows + req.params.max_new_tokens > self.max_seq:
             raise ValueError(
                 f"request {req.rid}: {rows} prompt rows + max_new_tokens "
                 f"{req.params.max_new_tokens} exceeds max_seq {self.max_seq}")
+        if (self.kv.paged and self.kv.pages_needed(self._reserve_rows(req))
+                > self.kv.n_alloc_pages):
+            raise ValueError(
+                f"request {req.rid}: needs more KV pages than the pool "
+                f"allocates — raise n_pages")
         if (self.cfg.family == "encdec" and req.embeds is not None
                 and req.embeds.shape[0] > self._t_enc):
             raise ValueError(
@@ -199,16 +236,35 @@ class Scheduler:
         if self.policy == "static" and self._running:
             return  # gang admission: wait for the whole pool to drain
         while self._queue and self.kv.n_free:
-            # group the queue head by (prompt length, embeds shape): one
-            # batched prefill per group instead of k batch-1 prefills — the
-            # fixed-batch compat path becomes a single (B, S) prefill again
+            # group the queue head by (prompt-length bucket, embeds shape):
+            # one batched prefill per group instead of k batch-1 prefills.
+            # With bucketing on, every length in a bucket shares both the
+            # group and the jit; without it the signature is the exact
+            # length (fixed-batch compat stays a single (B, S) prefill).
             def sig(r):
-                return (len(r.prompt),
+                n = len(r.prompt)
+                extra = self._cache_rows(r) - n
+                return ((self._bucket_len(n, extra) if self.bucket else n),
                         None if r.embeds is None else r.embeds.shape)
 
+            # paged pool: admission is also gated on free pages — a request
+            # whose page budget doesn't fit waits at the queue head (FIFO,
+            # no starvation) until releases refill the free list
+            head_reserve = self._reserve_rows(self._queue[0])
+            if not self.kv.can_admit(head_reserve):
+                return
+            pages_left = self.kv.n_free_pages
+            if self.kv.paged:
+                pages_left -= self.kv.pages_needed(head_reserve)
             group = [self._queue.popleft()]
             while (self._queue and len(group) < self.kv.n_free
                    and sig(self._queue[0]) == sig(group[0])):
+                if self.kv.paged:
+                    need = self.kv.pages_needed(
+                        self._reserve_rows(self._queue[0]))
+                    if need > pages_left:
+                        break
+                    pages_left -= need
                 group.append(self._queue.popleft())
             self._admit_group(group, finished)
 
@@ -218,17 +274,47 @@ class Scheduler:
         for req in group:
             req.state = RequestState.PREFILLING
             req.admit_time = now
-        tokens = jnp.asarray(np.stack([r.prompt for r in group]), jnp.int32)
-        embeds = (None if group[0].embeds is None
-                  else jnp.asarray(np.stack([r.embeds for r in group])))
-        temps = np.asarray([r.params.temperature for r in group], np.float32)
-        topks = np.asarray([r.params.top_k for r in group], np.int32)
+        if self.bucket:
+            # pad every prompt to the group's shared length bucket and the
+            # group itself to a power-of-two width: one jit per
+            # (bucket, width-bucket) instead of one per distinct shape.
+            # Padded rows/lanes are sentinel-masked and discarded.
+            n0 = len(group[0].prompt)
+            s_b = self._bucket_len(n0, self._cache_rows(group[0]) - n0)
+            k_b = 1
+            while k_b < k:
+                k_b *= 2
+            tokens = np.zeros((k_b, s_b), np.int32)
+            n_rows = np.zeros((k_b,), np.int32)
+            for i in range(k_b):
+                r = group[min(i, k - 1)]
+                tokens[i, : len(r.prompt)] = r.prompt
+                n_rows[i] = self._cache_rows(r)
+            tokens = jnp.asarray(tokens)
+            n_rows_dev = jnp.asarray(n_rows)
+            def pad(a):
+                return (np.concatenate([a, np.repeat(a[-1:], k_b - k, axis=0)])
+                        if k_b > k else a)
+
+            embeds = (None if group[0].embeds is None
+                      else jnp.asarray(pad(np.stack([r.embeds for r in group]))))
+            temps = pad(np.asarray([r.params.temperature for r in group],
+                                   np.float32))
+            topks = pad(np.asarray([r.params.top_k for r in group], np.int32))
+        else:
+            k_b = k
+            tokens = jnp.asarray(np.stack([r.prompt for r in group]), jnp.int32)
+            n_rows_dev = None
+            embeds = (None if group[0].embeds is None
+                      else jnp.asarray(np.stack([r.embeds for r in group])))
+            temps = np.asarray([r.params.temperature for r in group], np.float32)
+            topks = np.asarray([r.params.top_k for r in group], np.int32)
         self._key, sub = jax.random.split(self._key)
         t0 = time.perf_counter()
         first, cache_k = self._prefill(
-            self.params, tokens, self.kv.template(k), embeds, sub,
-            jnp.asarray(temps), jnp.asarray(topks),
-            stochastic=bool((temps > 0).any()))
+            self.params, tokens, self.kv.template(k_b), embeds, sub,
+            jnp.asarray(temps), jnp.asarray(topks), n_rows_dev,
+            stochastic=bool((temps[:k] > 0).any()))
         first_np = np.asarray(first)  # one sync per admitted group (= TTFT)
         now = time.perf_counter()
         self.stats.prefill_seconds += now - t0
@@ -239,12 +325,15 @@ class Scheduler:
             req.tokens.append(first_i)
             req.first_token_time = now
             self.stats.tokens_generated += 1
-            slot = self.kv.acquire()
             if (eos >= 0 and first_i == eos) or p.max_new_tokens <= 1:
+                # finished at its first token: never touch the slot pool —
+                # acquiring a slot just to release it would dispatch a full
+                # template reset into a slot that was never written
                 self._finish(req, finished)
-                self.kv.release(slot)
                 continue
-            self.kv.insert(slot, cache_k, self._cache_rows(req), row=row)
+            slot = self.kv.acquire()
+            self.kv.insert(slot, cache_k, self._cache_rows(req), row=row,
+                           reserve=self._reserve_rows(req))
             (self._tok, self._active, self._rem, self._temp, self._topk,
              self._eos) = self._set_slot(
                 self._tok, self._active, self._rem, self._temp, self._topk,
@@ -278,7 +367,16 @@ class Scheduler:
             req.shared_decode_steps += float((1.0 / width)[mine].sum())
             self.stats.tokens_generated += len(new)
             self.stats.decode_tokens += len(new)
+            # slot_len = actual cache rows: prompt rows + one row per
+            # decode-emitted token (each emitted token implies the step that
+            # wrote the PREVIOUS token's KV; the newest token's row lands on
+            # the step that feeds it back)
             self.kv.slot_len[slot] += len(new)
+            cap = self.kv.slot_capacity(slot)
+            assert self.kv.slot_len[slot] <= cap, (
+                f"slot {slot}: {self.kv.slot_len[slot]} cache rows exceed "
+                f"the {cap}-row reservation — accounting drift would "
+                f"corrupt a neighbor page")
             if not active_np[slot]:
                 self._finish(req, finished)
                 self.kv.release(slot)

@@ -90,9 +90,29 @@ def test_nm_select_ties_deterministic():
 
 def test_pick_bblk_respects_budget():
     b = pick_bblk(n_in=32768, k=16384, b=1024)
-    ws = 32768 * b * 2 + 16384 * b * 4
-    assert ws <= 8 * 1024 * 1024 * 1.01
+    # full working set with real itemsizes: xT + gather (activation dtype),
+    # weights (vals + int8 slots + vec_idx), decompress one-hot + dense
+    # tile, f32 accumulator
+    k, v, nn, mm, it = 16384, 32, 2, 4, 2
+    kn = k // mm * nn
+    ws = (32768 * b * it + k * b * it + v * b * 4
+          + v * kn * (it + 1) + k * 4 + v * kn * mm * it + v * k * it)
+    assert ws <= 8 * 1024 * 1024
     assert pick_bblk(128, 64, 4) >= 4
+
+
+def test_pick_bblk_pinned_representative_shapes():
+    """Pin the chosen batch block for representative (n_in, k, B, itemsize)
+    shapes so VMEM-formula regressions are caught, not silently absorbed.
+    The f32 5120x2560 case is the one the old 4-byte-gather formula got
+    wrong: it picked 256, which overflows the budget once the decompress
+    one-hot transient is counted."""
+    assert pick_bblk(32768, 16384, 1024, 2) == 32
+    assert pick_bblk(13824, 5120, 2048, 2) == 128
+    assert pick_bblk(5120, 2560, 1024, 2) == 256
+    assert pick_bblk(5120, 2560, 1024, 4) == 128
+    assert pick_bblk(1024, 512, 256, 4) == 256
+    assert pick_bblk(128, 64, 4, 2) == 8
 
 
 def test_decompress_tiles_matches_unpack(rng):

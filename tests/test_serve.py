@@ -191,6 +191,214 @@ def test_slot_pool_accounting(pruned_model):
 
 
 # ---------------------------------------------------------------------------
+# paged pool + bucketed admission
+# ---------------------------------------------------------------------------
+
+
+def test_paged_staggered_matches_stripe_and_isolated(pruned_model):
+    """The paged pool must not change tokens: a staggered mixed-length
+    workload decodes identically on the paged pool (bucketed admission,
+    page-constrained), the PR 2 stripe pool, and isolated per-request
+    batch-1 decode."""
+    cfg, _, _, packed = pruned_model
+    rng = np.random.default_rng(17)
+    prompts = [rng.integers(0, cfg.vocab, (n,)).astype(np.int32)
+               for n in (5, 8, 11, 8, 14)]
+
+    def run(**kw):
+        sched = Scheduler(cfg, packed, max_slots=2, max_seq=64,
+                          decode_chunk=4, **kw)
+        reqs = [Request(rid=i, prompt=p,
+                        params=SamplingParams(max_new_tokens=7), arrival=i)
+                for i, p in enumerate(prompts)]
+        sched.run(reqs)
+        return [r.tokens for r in reqs], sched
+
+    stripe, _ = run(page=None, bucket=False)
+    paged, sp = run(page=16)
+    paged_tight, st = run(page=16, n_pages=6)  # admission waits on pages
+    assert sp.kv.paged and st.kv.paged
+    iso = [greedy_isolated(cfg, packed, p, 7, 64) for p in prompts]
+    assert paged == stripe == iso
+    assert paged_tight == iso
+    # all pages drained back to the free list
+    assert st.kv.n_free_pages == st.kv.n_alloc_pages
+
+
+def test_paged_page_reuse_cannot_leak(pruned_model):
+    """A freed page rewritten by a new request must not leak rows into any
+    lane: release resets the freed pages' kpos to the sentinel (the per-page
+    form of the slot-reset argument in serve/README.md), so the recycled
+    request decodes exactly like a fresh pool."""
+    cfg, _, _, packed = pruned_model
+    from repro.models import paging
+
+    rng = np.random.default_rng(19)
+    p_long = rng.integers(0, cfg.vocab, (14,)).astype(np.int32)
+    p_short = rng.integers(0, cfg.vocab, (6,)).astype(np.int32)
+
+    sched = Scheduler(cfg, packed, max_slots=1, max_seq=64, decode_chunk=4,
+                      page=8, n_pages=4)
+    r1 = Request(rid=0, prompt=p_long, params=SamplingParams(max_new_tokens=6))
+    r2 = Request(rid=1, prompt=p_short, params=SamplingParams(max_new_tokens=6),
+                 arrival=1)
+    sched.submit(r1)
+    sched.step()  # r1 admitted: 3 pages hold real kpos rows
+    kpos = np.asarray(sched.kv.cache["kpos"])  # (L, n_pages, page)
+    live = sched.kv._slot_pages[0]
+    assert len(live) == 3  # ceil((14 + 6) / 8)
+    for pid in live:
+        assert (kpos[:, pid] < 2**30).any(), f"live page {pid} has no rows"
+
+    sched.submit(r2)
+    while sched.n_pending:
+        sched.step()
+    assert r1.slot == r2.slot == 0  # r2 recycled r1's slot (and pages)
+
+    # every release must have swept its pages' kpos back to the sentinel:
+    # with both requests drained, no allocatable page may retain real rows
+    kpos = np.asarray(sched.kv.cache["kpos"])
+    for pid in range(paging.N_RESERVED, sched.kv.n_pages):
+        assert (kpos[:, pid] == paging.KPOS_SENTINEL).all(), \
+            f"freed page {pid} leaked real kpos rows"
+
+    fresh = Scheduler(cfg, packed, max_slots=1, max_seq=64, decode_chunk=4,
+                      page=8, n_pages=4)
+    rf = Request(rid=0, prompt=p_short, params=SamplingParams(max_new_tokens=6))
+    fresh.run([rf])
+    assert r2.tokens == rf.tokens
+
+
+def test_bucketed_admission_compile_count(pruned_model):
+    """>= 8 distinct prompt lengths must compile at most one prefill per
+    power-of-two bucket (4 here), not one per length; tokens stay identical
+    to isolated decode."""
+    cfg, _, _, packed = pruned_model
+    rng = np.random.default_rng(23)
+    lens = [5, 7, 9, 12, 16, 21, 30, 47]
+    prompts = [rng.integers(0, cfg.vocab, (n,)).astype(np.int32) for n in lens]
+
+    sched = Scheduler(cfg, packed, max_slots=len(lens), max_seq=64,
+                      decode_chunk=4, page=16)
+    assert sched.bucket
+    reqs = [Request(rid=i, prompt=p, params=SamplingParams(max_new_tokens=5),
+                    arrival=2 * i) for i, p in enumerate(prompts)]
+    sched.run(reqs)
+    assert sched.prefill_traces <= 4  # buckets {8, 16, 32, 64}
+    for r in reqs:
+        assert r.tokens == greedy_isolated(cfg, packed, r.prompt, 5, 64)
+
+    exact = Scheduler(cfg, packed, max_slots=len(lens), max_seq=64,
+                      decode_chunk=4, page=16, bucket=False)
+    reqs = [Request(rid=i, prompt=p, params=SamplingParams(max_new_tokens=5),
+                    arrival=2 * i) for i, p in enumerate(prompts)]
+    exact.run(reqs)
+    assert exact.prefill_traces == len(lens)  # one jit per distinct length
+
+
+def test_first_token_finish_skips_slot_churn(pruned_model):
+    """Requests that finish at their first token (EOS at prefill or
+    max_new_tokens <= 1) must never acquire a slot: previously they
+    dispatched a full template reset into a slot that was never written."""
+    cfg, _, _, packed = pruned_model
+    rng = np.random.default_rng(29)
+    prompt = rng.integers(0, cfg.vocab, (8,)).astype(np.int32)
+    first = greedy_isolated(cfg, packed, prompt, 1, 64)[0]
+
+    sched = Scheduler(cfg, packed, max_slots=2, max_seq=64, decode_chunk=4)
+    writes_before = sched.kv._slot_pages.copy() if sched.kv.paged else None
+    r_one = Request(rid=0, prompt=prompt, params=SamplingParams(max_new_tokens=1))
+    r_eos = Request(rid=1, prompt=prompt,
+                    params=SamplingParams(max_new_tokens=8, eos_id=first))
+    done = sched.run([r_one, r_eos])
+    assert {r.rid for r in done} == {0, 1}
+    assert r_one.slot is None and r_eos.slot is None
+    assert r_one.tokens == [first] and r_eos.tokens == [first]
+    assert r_eos.finish_reason == "eos" and r_one.finish_reason == "length"
+    assert sched.kv.n_free == 2
+    # no pages were ever allocated, so none could have been churned
+    assert sched.kv._slot_pages == writes_before == {}
+
+
+def test_slot_len_tracks_actual_cache_rows(pruned_model):
+    """slot_len mirrors real cache rows: prompt rows after insert, +1 per
+    decode-emitted token (the newest sampled token's KV lands on the step
+    that feeds it back, so it is not yet a row)."""
+    cfg, _, _, packed = pruned_model
+    rng = np.random.default_rng(31)
+    prompt = rng.integers(0, cfg.vocab, (9,)).astype(np.int32)
+    sched = Scheduler(cfg, packed, max_slots=1, max_seq=64, decode_chunk=2,
+                      page=16)
+    req = Request(rid=0, prompt=prompt, params=SamplingParams(max_new_tokens=6))
+    sched.submit(req)
+    finished = sched.step()  # admit (prompt rows) + one 2-step chunk
+    assert not finished
+    emitted_by_chunks = req.n_generated - 1  # first token came from prefill
+    assert sched.kv.slot_len[0] == len(prompt) + emitted_by_chunks
+    # device truth: the pos counter counts exactly the written rows
+    assert int(np.asarray(sched.kv.cache["pos"])[0, 0]) == sched.kv.slot_len[0]
+    assert sched.kv.slot_len[0] <= sched.kv.slot_capacity(0)
+    sched.run([])  # drain
+    assert sched.kv.slot_len[0] == 0  # released
+
+
+def test_paged_matches_stripe_hybrid_and_encdec():
+    """Family-specific paged paths must match stripe decode: the hybrid
+    windowed ring wrapping through its pages (prompt > window exercises the
+    roll-insert too) with recurrent leaves slot-striped, and the encdec
+    paged self-attn with striped enc_out/enc_len slot copies."""
+    from repro.configs.base import load_arch
+
+    rng = np.random.default_rng(37)
+
+    cfg = load_arch("recurrentgemma_9b").reduced(window=16, n_layers=3)
+    params = zoo.init(jax.random.PRNGKey(1), cfg)
+    prompts = [rng.integers(0, cfg.vocab, (n,)).astype(np.int32)
+               for n in (8, 20, 12)]  # 20 > window: ring wraps in pages
+
+    def run(c, p, pr, embeds=None, **kw):
+        sched = Scheduler(c, p, max_slots=2, max_seq=64, decode_chunk=4, **kw)
+        reqs = [Request(rid=i, prompt=pp, params=SamplingParams(max_new_tokens=6),
+                        embeds=None if embeds is None else embeds[i], arrival=i)
+                for i, pp in enumerate(pr)]
+        sched.run(reqs)
+        return [r.tokens for r in reqs], sched
+
+    stripe, _ = run(cfg, params, prompts, page=None)
+    paged, sp = run(cfg, params, prompts, page=8)
+    assert sp.kv.paged and not sp.bucket  # recurrent: exact-length admission
+    assert paged == stripe
+
+    cfg2 = load_arch("seamless_m4t_medium").reduced()
+    params2 = zoo.init(jax.random.PRNGKey(2), cfg2)
+    frames = rng.standard_normal((3, 6, cfg2.d_model)).astype(np.float32)
+    prompts2 = [rng.integers(0, cfg2.vocab, (n,)).astype(np.int32)
+                for n in (5, 9, 7)]
+    stripe2, _ = run(cfg2, params2, prompts2, embeds=frames, page=None,
+                     bucket=False, cache_kw={"t_enc": 6})
+    paged2, s2 = run(cfg2, params2, prompts2, embeds=frames, page=16,
+                     cache_kw={"t_enc": 6})
+    assert s2.kv.paged and s2.bucket  # decoder prompts bucket fine
+    assert paged2 == stripe2
+
+
+def test_paged_pool_accounting(pruned_model):
+    cfg, _, _, packed = pruned_model
+    kv = SlotKVCache(cfg, 2, 64, page=16, n_pages=5)
+    assert kv.paged and kv.page == 16 and kv.n_bt == 4
+    assert kv.n_free_pages == kv.n_alloc_pages == 5
+    assert kv.pages_needed(1) == 1 and kv.pages_needed(17) == 2
+    assert kv.pages_needed(1000) == 4  # capped at the view
+    assert kv.can_admit(64)
+    tight = SlotKVCache(cfg, 2, 64, page=16, n_pages=3)
+    assert not tight.can_admit(64)  # needs 4 pages, pool allocates 3
+    # stripe mode keeps the PR 2 contract untouched
+    kv_stripe = SlotKVCache(cfg, 2, 64)
+    assert not kv_stripe.paged
+    assert kv_stripe.pool_bytes() > 0
+
+
+# ---------------------------------------------------------------------------
 # sampler
 # ---------------------------------------------------------------------------
 
