@@ -12,6 +12,13 @@ Three comparisons on the same jitted decode machinery (serve.Scheduler):
      (8 distinct prompt lengths) — the compile-count column: distinct
      prefill jits traced before vs after power-of-two bucketing.
 
+  4. sharded vs single-device decode: the same continuous paged workload
+     on a data mesh over every visible device (the CI multi-device job
+     forces 4 fake host devices via XLA_FLAGS; locally this is usually a
+     1-device mesh, which still exercises the sharded code path). Fake
+     host devices share one CPU, so the column tracks sharding overhead
+     and conformance, not real scaling.
+
 Writes `BENCH_serve.json` (CI uploads it as an artifact; the paged pool
 must come in at <= 0.5x the stripe pool bytes or the smoke run fails) and
 prints the usual ``name,us_per_call,derived`` CSV rows.
@@ -128,6 +135,18 @@ def run(out_path: str = "BENCH_serve.json") -> dict:
         f"paged pool {paged['kv_pool_bytes']}B exceeds 0.5x the stripe pool "
         f"{stripe['kv_pool_bytes']}B at benchmark occupancy")
 
+    # sharded decode: page-axis pool sharding over every visible device
+    from repro import compat
+
+    n_dev = len(jax.devices())
+    mesh = compat.make_mesh((n_dev,), ("data",))
+    reqs = _workload(cfg, np.random.default_rng(0), n_requests, slots, prompt_len)
+    sharded = _serve(cfg, packed, reqs, "continuous", slots, max_seq,
+                     page=PAGE, n_pages=N_PAGES, mesh=mesh)
+    sharded["n_devices"] = n_dev
+    sharded_vs_single = (sharded["tokens_per_second"]
+                         / max(paged["tokens_per_second"], 1e-9))
+
     compiles = _compile_counts(cfg, packed, np.random.default_rng(1), 8, max_seq)
     assert compiles["bucketed"] <= 4, (
         f"{compiles['distinct_lengths']} prompt lengths compiled "
@@ -155,6 +174,13 @@ def run(out_path: str = "BENCH_serve.json") -> dict:
             "ratio": kv_ratio,
         },
         "prefill_compiles": compiles,
+        "sharded": {
+            "n_devices": n_dev,
+            "tokens_per_second": sharded["tokens_per_second"],
+            "single_device_tokens_per_second": paged["tokens_per_second"],
+            "vs_single_device": sharded_vs_single,
+            "kv_pool_bytes": sharded["kv_pool_bytes"],
+        },
     }
     with open(out_path, "w") as f:
         json.dump(report, f, indent=2)
@@ -172,6 +198,9 @@ def run(out_path: str = "BENCH_serve.json") -> dict:
     emit("serve_prefill_compiles", 0.0,
          f"exact={compiles['exact']} bucketed={compiles['bucketed']} "
          f"lengths={compiles['distinct_lengths']}")
+    emit("serve_sharded", 0.0,
+         f"devices={n_dev} tok/s={sharded['tokens_per_second']:.1f} "
+         f"vs_single={sharded_vs_single:.2f}x")
     return report
 
 

@@ -35,7 +35,9 @@ def batch_axes(mesh: Mesh) -> tuple[str, ...]:
 
 
 def _axis_size(mesh: Mesh, name: str) -> int:
-    return mesh.shape[name]
+    # serving meshes may be data-only: a missing axis has size 0, which
+    # every divisibility check below treats as "does not fit" (replicate)
+    return mesh.shape[name] if name in mesh.axis_names else 0
 
 
 def _fits(dim: int, mesh: Mesh, axis) -> bool:
@@ -45,7 +47,13 @@ def _fits(dim: int, mesh: Mesh, axis) -> bool:
         n = int(np.prod([_axis_size(mesh, a) for a in axis]))
     else:
         n = _axis_size(mesh, axis)
-    return dim % n == 0 and dim >= n
+    return n > 0 and dim % n == 0 and dim >= n
+
+
+def _divides(n: int, mesh: Mesh, name: str) -> bool:
+    """Like _fits but for count-divisibility checks (heads per shard)."""
+    sz = _axis_size(mesh, name)
+    return sz > 0 and n % sz == 0
 
 
 def _resolve(role, dim: int, mesh: Mesh, cfg) -> Any:
@@ -131,9 +139,9 @@ def _rule_for(path: str, shape: tuple[int, ...], mesh: Mesh, cfg):
         base = (None,) * (nd - 1)
         # bias shards like its weight's output dim
         if parent in ("wq",):
-            return base + ("heads" if cfg and cfg.n_heads % _axis_size(mesh, "model") == 0 else None,)
+            return base + ("heads" if cfg and _divides(cfg.n_heads, mesh, "model") else None,)
         if parent in ("wk", "wv"):
-            return base + ("heads" if cfg and cfg.n_kv_heads % _axis_size(mesh, "model") == 0 else None,)
+            return base + ("heads" if cfg and _divides(cfg.n_kv_heads, mesh, "model") else None,)
         if parent in ("wo", "wd", "wout"):
             return base + (None,)
         return base + ("tp",)
@@ -147,13 +155,13 @@ def _rule_for(path: str, shape: tuple[int, ...], mesh: Mesh, cfg):
             return ("ep", "fsdp", None)
         lead = (None,)
     if parent in ("wq",):
-        out_role = "heads" if cfg and cfg.n_heads % _axis_size(mesh, "model") == 0 else None
+        out_role = "heads" if cfg and _divides(cfg.n_heads, mesh, "model") else None
         return lead + ("fsdp", out_role)
     if parent in ("wk", "wv"):
-        out_role = "heads" if cfg and cfg.n_kv_heads % _axis_size(mesh, "model") == 0 else None
+        out_role = "heads" if cfg and _divides(cfg.n_kv_heads, mesh, "model") else None
         return lead + ("fsdp", out_role)
     if parent == "wo":
-        in_role = "heads" if cfg and cfg.n_heads % _axis_size(mesh, "model") == 0 else None
+        in_role = "heads" if cfg and _divides(cfg.n_heads, mesh, "model") else None
         return lead + (in_role, "fsdp")
     if parent in ("wd", "wout"):
         return lead + ("tp", "fsdp")
@@ -268,52 +276,107 @@ def batch_specs(batch, mesh: Mesh):
     return jax.tree.map(f, batch)
 
 
+def _cache_leaf_spec(role: str, leaf, mesh: Mesh, dp) -> P:
+    """Resolve one decode-cache leaf's sharding role to a PartitionSpec.
+
+    Roles (declared per family by ``zoo.cache_shard_roles``):
+      kv    : stripe K/V (L, B, S, KV, hd) — batch over dp, KV heads (or
+              the slot dim, per KNOBS.decode_seq_shard) over 'model'
+      page  : paged-pool leaf (L, n_pages, page, ...) — the PAGE axis over
+              dp (the pool is a shared resource: its natural parallel axis
+              is pages, not request slots), KV heads over 'model'
+      slot  : per-slot bookkeeping (L, B[, ...]) — slot (batch) axis over
+              dp so block-table/counter writes stay on the owning shard
+      enc   : per-slot encoder leaves (B, ...) — batch over dp at axis 0
+      state : recurrent state (L, B, feat...) — batch over dp, feature
+              (last) dim over 'model'
+
+    Every role degrades to replication when a dim is not divisible."""
+    nd = leaf.ndim
+    sp = [None] * nd
+    if role == "kv":  # (L, B, S, KV, hd)
+        from repro.perf_knobs import KNOBS
+
+        if _fits(leaf.shape[1], mesh, dp):
+            sp[1] = dp
+        if (not KNOBS.decode_seq_shard) and _fits(leaf.shape[3], mesh, "model"):
+            sp[3] = "model"
+        elif _fits(leaf.shape[2], mesh, "model"):
+            sp[2] = "model"
+    elif role == "page":  # (L, n_pages, page[, KV, hd])
+        if nd >= 2 and _fits(leaf.shape[1], mesh, dp):
+            sp[1] = dp
+        if nd == 5 and _fits(leaf.shape[3], mesh, "model"):
+            sp[3] = "model"
+    elif role == "slot":  # (L, B[, n_bt]) / stripe kpos (L, B, S)
+        if nd >= 2 and _fits(leaf.shape[1], mesh, dp):
+            sp[1] = dp
+    elif role == "enc":  # enc_out (B, T, D) / enc_len (B,)
+        if nd >= 1 and _fits(leaf.shape[0], mesh, dp):
+            sp[0] = dp
+    else:  # "state": recurrent (L, B, feat...) — batch over dp, last dim tp
+        if nd >= 2 and _fits(leaf.shape[1], mesh, dp):
+            sp[1] = dp
+        if nd >= 3 and _fits(leaf.shape[-1], mesh, "model"):
+            sp[-1] = "model"
+    return P(*sp)
+
+
+def _infer_cache_roles(node):
+    """Name-based role inference for caches without a cfg (legacy callers).
+
+    Mirrors what the families declare: a paged pool dict is recognised by
+    its block table, stripe K/V by name+ndim, encoder leaves by name;
+    anything else is recurrent state."""
+    from repro.models import paging
+
+    if isinstance(node, dict):
+        if paging.is_paged(node):
+            return paging.paged_roles(node)
+        out = {}
+        for k, v in node.items():
+            if isinstance(v, (dict, tuple, list)):
+                out[k] = _infer_cache_roles(v)
+            elif k in ("k", "v") and v.ndim == 5:
+                out[k] = "kv"
+            elif k in ("pos", "kpos"):
+                out[k] = "slot"
+            elif k in ("enc_out", "enc_len"):
+                out[k] = "enc"
+            else:
+                out[k] = "state"
+        return out
+    if isinstance(node, (tuple, list)):
+        return type(node)(_infer_cache_roles(v) for v in node)
+    return "state"
+
+
 def cache_specs(cache, mesh: Mesh, cfg=None):
-    """Decode-cache sharding: batch over dp; KV heads over 'model' when
-    divisible, else the sequence (slot) dim over 'model'; recurrent states
-    shard their feature dim over 'model'."""
+    """Decode-cache sharding, both layouts.
+
+    stripe — batch (request-slot) dim over dp; KV heads over 'model' when
+    divisible, else the sequence dim; recurrent states shard their feature
+    dim over 'model'.
+
+    paged — the shared page pools shard their PAGE axis over dp (size the
+    pool with ``models.paging.shard_geometry`` so the page count, reserved
+    pages included, divides the mesh) while block tables / pos / alloc
+    keep slot-axis sharding; attention's ``pool[bt]`` gather resolves
+    cross-shard pages through XLA SPMD like any other indexed gather.
+
+    Roles come from the family (``zoo.cache_shard_roles``) when ``cfg`` is
+    given; otherwise they are inferred from leaf names (legacy layout)."""
     dp = batch_axes(mesh)
     dp = dp if len(dp) > 1 else dp[0]
-    flat, treedef = jax.tree_util.tree_flatten_with_path(cache)
-    specs = []
-    for pathkeys, leaf in flat:
-        path = "/".join(_key_str(k) for k in pathkeys)
-        name = path.split("/")[-1]
-        nd = leaf.ndim
-        if name in ("k", "v") and nd == 5:  # (L, B, S, KV, hd)
-            from repro.perf_knobs import KNOBS
+    if cfg is not None:
+        from repro.models import zoo
 
-            sp = [None] * 5
-            if _fits(leaf.shape[1], mesh, dp):
-                sp[1] = dp
-            if (not KNOBS.decode_seq_shard) and _fits(leaf.shape[3], mesh, "model"):
-                sp[3] = "model"
-            elif _fits(leaf.shape[2], mesh, "model"):
-                sp[2] = "model"
-            specs.append(P(*sp))
-        elif name in ("pos", "kpos"):
-            # per-slot position tracking: (L, B) / (L, B, S) — follow the
-            # k/v batch sharding so slot writes stay local to the dp shard
-            sp = [None] * nd
-            if nd >= 2 and _fits(leaf.shape[1], mesh, dp):
-                sp[1] = dp
-            specs.append(P(*sp))
-        elif name == "enc_len" and nd == 1:  # (B,) — follow enc_out's batch
-            specs.append(P(dp if _fits(leaf.shape[0], mesh, dp) else None))
-        elif name == "enc_out" and nd == 3:  # (B, T, D)
-            sp = [None] * 3
-            if _fits(leaf.shape[0], mesh, dp):
-                sp[0] = dp
-            specs.append(P(*sp))
-        else:
-            # recurrent states: (L, B, feat...) — batch over dp, last dim tp
-            sp = [None] * nd
-            if nd >= 2 and _fits(leaf.shape[1], mesh, dp):
-                sp[1] = dp
-            if nd >= 3 and _fits(leaf.shape[-1], mesh, "model"):
-                sp[-1] = "model"
-            specs.append(P(*sp))
-    return jax.tree_util.tree_unflatten(treedef, specs)
+        roles = zoo.cache_shard_roles(cfg, cache)
+    else:
+        roles = _infer_cache_roles(cache)
+    return jax.tree.map(
+        lambda role, leaf: _cache_leaf_spec(role, leaf, mesh, dp),
+        roles, cache)
 
 
 def to_named(tree_specs, mesh: Mesh):

@@ -206,6 +206,17 @@ def cache_batch_axes(cfg, cache):
     }
 
 
+def cache_shard_roles(cfg, cache):
+    """Sharding role per cache leaf: decoder self-attn like the decoder-only
+    stack (paged pools page-axis, stripes slot-axis); the cached encoder
+    output/length are per-slot encoder leaves (batch at axis 0)."""
+    if paging.is_paged(cache["self"]):
+        self_roles = paging.paged_roles(cache["self"])
+    else:
+        self_roles = {"k": "kv", "v": "kv", "pos": "slot", "kpos": "slot"}
+    return {"self": self_roles, "enc_out": "enc", "enc_len": "enc"}
+
+
 def prefill(params, cfg, tokens, cache, embeds=None, n_rows=None):
     b = tokens.shape[0]
     if embeds is not None:

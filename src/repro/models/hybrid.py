@@ -202,6 +202,20 @@ def cache_batch_axes(cfg, cache):
         for c in cache)
 
 
+def cache_shard_roles(cfg, cache):
+    """Sharding role per cache leaf: paged attn stacks shard their page
+    axis, stripe attn stacks their slot axis, recurrent stacks stay
+    slot-striped state (batch over dp, feature dim over 'model')."""
+    def one(c):
+        if paging.is_paged(c):
+            return paging.paged_roles(c)
+        if "k" in c:  # stripe attn stack
+            return {"k": "kv", "v": "kv", "pos": "slot", "kpos": "slot"}
+        return {k: "state" for k in c}  # rglru h/conv
+
+    return tuple(one(c) for c in cache)
+
+
 def prefill(params, cfg, tokens, cache, embeds=None, n_rows=None):
     if n_rows is not None:
         raise ValueError("hybrid prefill cannot be length-bucketed: recurrent"

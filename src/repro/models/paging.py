@@ -37,6 +37,25 @@ SENTINEL_PAGE = 1
 N_RESERVED = 2
 
 
+def shard_geometry(n_alloc: int, n_shards: int = 1) -> dict:
+    """Total physical page count for an ``n_shards``-way sharded pool.
+
+    The page axis is the sharded axis of every pool leaf, so the TOTAL page
+    count — allocatable pages plus the two reserved pages (scratch and
+    sentinel are pool-global: they live on the shard that owns ids 0/1 and
+    are reached through the same SPMD gather as any other page) — must
+    divide the mesh. The count is rounded UP so provisioning never shrinks;
+    the padding pages join the free list as ordinary allocatable pages.
+
+    Returns dict(n_pages, n_alloc, pages_per_shard).
+    """
+    n_shards = max(1, int(n_shards))
+    total = N_RESERVED + max(1, int(n_alloc))
+    total = -(-total // n_shards) * n_shards
+    return {"n_pages": total, "n_alloc": total - N_RESERVED,
+            "pages_per_shard": total // n_shards}
+
+
 def geometry(view_len: int, page: int) -> dict:
     """Resolve page geometry for a logical view of ``view_len`` rows.
 
@@ -82,6 +101,17 @@ STRIPED_AXES = {"pos": 1, "bt": 1, "alloc": 1}
 def paged_axes(cache: dict) -> dict:
     """Slot-axis map for one paged attn cache dict (see cache_batch_axes)."""
     return {k: STRIPED_AXES.get(k) for k in cache}
+
+
+# sharding roles per paged-pool leaf (see distributed.sharding.cache_specs):
+# pool leaves shard their page axis, per-slot leaves their slot (batch) axis
+PAGED_ROLES = {"k": "page", "v": "page", "kpos": "page",
+               "pos": "slot", "bt": "slot", "alloc": "slot"}
+
+
+def paged_roles(cache: dict) -> dict:
+    """Sharding-role map for one paged attn cache dict."""
+    return {k: PAGED_ROLES.get(k, "slot") for k in cache}
 
 
 def scatter_rows(pool: jax.Array, stripe: jax.Array, row, scatter_ids) -> jax.Array:

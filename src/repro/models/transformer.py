@@ -159,6 +159,14 @@ def cache_batch_axes(cfg, cache):
     return jax.tree.map(lambda _: 1, cache)
 
 
+def cache_shard_roles(cfg, cache):
+    """Sharding role per cache leaf (see distributed.sharding.cache_specs):
+    paged pools shard their page axis, stripes their slot (batch) axis."""
+    if paging.is_paged(cache):
+        return paging.paged_roles(cache)
+    return {"k": "kv", "v": "kv", "pos": "slot", "kpos": "slot"}
+
+
 def prefill(params, cfg, tokens, cache, embeds=None, n_rows=None):
     """Fill the KV cache; returns (last-token pre-logits (B, D), cache).
 

@@ -102,6 +102,14 @@ def cache_batch_axes(cfg, cache):
     return jax.tree.map(lambda _: 1, cache)
 
 
+def cache_shard_roles(cfg, cache):
+    """Every leaf is O(1)-per-slot recurrent state (n_p, B, feat...): batch
+    over dp, feature dim over 'model'. There is no paged layout to declare
+    — the serve pool falls back to stripes (page_geometry is absent), and
+    cache_specs must resolve this tree without assuming attention leaves."""
+    return jax.tree.map(lambda _: "state", cache)
+
+
 def prefill(params, cfg, tokens, cache, embeds=None, n_rows=None):
     if n_rows is not None:
         raise ValueError("xlstm prefill cannot be length-bucketed: recurrent"

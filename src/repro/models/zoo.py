@@ -5,6 +5,7 @@
   logits_fn(params, x)                    -> vocab projection
   make_cache(cfg, batch, max_seq)         -> decode cache pytree
   cache_batch_axes(cfg, cache)            -> slot axis per cache leaf
+  cache_shard_roles(cfg, cache)           -> sharding role per cache leaf
   prefill / decode_step                   -> serving
   hinm_plan(cfg)                          -> prune specs (see repro.perm)
   perm_graph(cfg)                         -> compiled ModelPermGraph
@@ -51,6 +52,15 @@ def cache_batch_axes(cfg, cache):
     request completion — with a single `dynamic_update_slice_in_dim` per
     leaf, without knowing family cache internals."""
     return model_for(cfg).cache_batch_axes(cfg, cache)
+
+
+def cache_shard_roles(cfg, cache):
+    """Pytree (matching `cache`) of sharding roles per leaf — the family's
+    declaration of its cache layout to `distributed.sharding.cache_specs`:
+    "page" (shared paged-pool leaf, page axis sharded), "kv" (stripe K/V),
+    "slot" (per-slot bookkeeping), "enc" (cached encoder leaves), "state"
+    (recurrent state)."""
+    return model_for(cfg).cache_shard_roles(cfg, cache)
 
 
 def prefill(params, cfg, tokens, cache, embeds=None, n_rows=None):

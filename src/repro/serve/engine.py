@@ -24,7 +24,8 @@ __all__ = ["ServeEngine", "ServeStats"]
 class ServeEngine:
     def __init__(self, cfg, params, max_seq: int = 512, temperature: float = 0.0,
                  top_k: int = 0, decode_chunk: int = 8,
-                 page: int | None = 64, n_pages: int | None = None):
+                 page: int | None = 64, n_pages: int | str | None = "auto",
+                 mesh=None):
         self.cfg = cfg
         self.params = params
         self.max_seq = max_seq
@@ -33,6 +34,7 @@ class ServeEngine:
         self.decode_chunk = decode_chunk
         self.page = page
         self.n_pages = n_pages
+        self.mesh = mesh
         self._sched: Scheduler | None = None
 
     def packed_bytes(self) -> tuple[int, int]:
@@ -43,7 +45,7 @@ class ServeEngine:
             self._sched = Scheduler(
                 self.cfg, self.params, max_slots=batch, max_seq=self.max_seq,
                 decode_chunk=self.decode_chunk, rng_seed=rng_seed,
-                page=self.page, n_pages=self.n_pages)
+                page=self.page, n_pages=self.n_pages, mesh=self.mesh)
         else:
             self._sched.reset(rng_seed)
         return self._sched

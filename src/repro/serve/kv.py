@@ -14,9 +14,28 @@ page that every unassigned block-table entry points at.  Releasing a slot
 resets its freed pages' ``kpos`` rows to the sentinel, so a page recycled
 to a new request can never leak rows into the old lane.
 
+``n_pages`` provisioning: an int is the explicit allocatable page count;
+``"auto"`` derives one from expected occupancy (~half-view average live
+length per slot, floored at one full view so a max-size request can
+always admit) — the default in the Scheduler, so the paged memory win
+does not silently vanish; ``None`` provisions full stripe capacity
+(admission never blocks on pages).
+
+Sharded mode (``mesh=...``): the pool is laid out for an N-device mesh.
+``distributed.sharding.cache_specs`` assigns page-axis specs to the
+shared pools and slot-axis specs to block tables / counters;
+``paging.shard_geometry`` rounds the total page count (reserved pages
+included) up so the page axis divides the mesh; the free list becomes
+per-shard, and allocation draws from the fullest shard first so a slot's
+pages spread across devices.  Admission/release accounting stays
+host-side; page reads and writes stay device-resident — attention's
+``pool[bt]`` gather resolves cross-shard pages through XLA SPMD.
+
 Stripe mode (``page=None``) keeps the PR 2 layout: each batch lane pins a
 full ``max_seq`` stripe; insertion and reset are each a single device
 dispatch of per-leaf ``dynamic_update_slice_in_dim`` writes (donated).
+Stripe pools shard too (batch over dp), so the conformance suite can
+compare layouts on the same mesh.
 
 ``slot_len`` mirrors each slot's **actual cache rows**: prompt rows
 written by prefill plus one row per decode-emitted token (a generated
@@ -34,46 +53,78 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.distributed import sharding as shd
 from repro.models import paging, zoo
 
 
 class SlotKVCache:
     def __init__(self, cfg, n_slots: int, max_seq: int, dtype=None,
-                 page: int | None = None, n_pages: int | None = None,
-                 **cache_kw):
+                 page: int | None = None, n_pages: int | str | None = None,
+                 mesh=None, **cache_kw):
         self.cfg = cfg
         self.n_slots = n_slots
         self.max_seq = max_seq
+        self.mesh = mesh
         self._cache_kw = dict(cache_kw, dtype=dtype)
         geom = zoo.page_geometry(cfg, max_seq, page) if page else None
         self.paged = geom is not None
         self._templates: dict[int, object] = {}  # pristine batch-k caches
 
+        # page-axis shard count: the dp axes of the mesh (the axes
+        # cache_specs assigns to the page/slot axes); 1 when unsharded or
+        # when the mesh has no dp axis at all (model-only mesh: the pool
+        # replicates, matching cache_specs' degrade-to-replicate rule)
+        self._n_shards = 1
+        if mesh is not None:
+            sizes = [shd._axis_size(mesh, a) for a in shd.batch_axes(mesh)]
+            self._n_shards = max(1, int(np.prod([s for s in sizes if s > 0])))
+
         if self.paged:
             self.page = geom["page"]
             self.view_len = geom["view"]
             self.n_bt = geom["n_bt"]
-            # `n_pages` = allocatable pages; None = full stripe capacity
-            alloc_pages = n_slots * self.n_bt if n_pages is None else n_pages
-            self.n_pages = paging.N_RESERVED + alloc_pages
+            if n_pages == "auto":
+                # occupancy-derived: ~half-view average live length per
+                # slot, floored at one full view (max-size admission)
+                alloc_req = max(self.n_bt, n_slots * ((self.n_bt + 1) // 2))
+            elif n_pages is None:
+                alloc_req = n_slots * self.n_bt  # full stripe capacity
+            else:
+                alloc_req = int(n_pages)
+            sg = paging.shard_geometry(alloc_req, self._n_shards)
+            self.n_pages = sg["n_pages"]
+            self._pages_per_shard = sg["pages_per_shard"]
             self.cache = zoo.make_cache(
                 cfg, n_slots, max_seq, page=self.page, n_pages=self.n_pages,
                 **self._cache_kw)
-            self._free_pages = collections.deque(
-                range(paging.N_RESERVED, self.n_pages))
+            self._reset_free_pages()
             self._slot_pages: dict[int, list[int]] = {}
+        else:
+            self.cache = zoo.make_cache(cfg, n_slots, max_seq, **self._cache_kw)
 
+        # sharding layout: specs (PartitionSpec pytree) + device shardings;
+        # the initial pool is placed once and every jitted write constrains
+        # its output back to the same layout, so page/slot writes never
+        # drift off their shard
+        self.specs = None
+        self.shardings = None
+        if mesh is not None:
+            self.specs = shd.cache_specs(self.cache, mesh, cfg)
+            self.shardings = shd.to_named(self.specs, mesh)
+            self.cache = jax.device_put(self.cache, self.shardings)
+
+        if self.paged:
             def insert_fn(pool, stripe, slot, row, scatter_ids, bt_row, n_alloc):
-                return zoo.paged_insert(cfg, pool, stripe, slot, row,
-                                        scatter_ids, bt_row, n_alloc)
+                out = zoo.paged_insert(cfg, pool, stripe, slot, row,
+                                       scatter_ids, bt_row, n_alloc)
+                return self._constrain(out)
 
             def release_fn(pool, slot, page_ids):
-                return zoo.paged_release(cfg, pool, slot, page_ids)
+                return self._constrain(zoo.paged_release(cfg, pool, slot, page_ids))
 
             self._insert_paged = jax.jit(insert_fn, donate_argnums=(0,))
             self._release_paged = jax.jit(release_fn, donate_argnums=(0,))
         else:
-            self.cache = zoo.make_cache(cfg, n_slots, max_seq, **self._cache_kw)
             axes = zoo.cache_batch_axes(cfg, self.cache)
 
             def write_row(pool, batched, slot, row):
@@ -83,7 +134,7 @@ class SlotKVCache:
                     return jax.lax.dynamic_update_slice_in_dim(
                         c, one.astype(c.dtype), slot, axis=a)
 
-                return jax.tree.map(f, pool, batched, axes)
+                return self._constrain(jax.tree.map(f, pool, batched, axes))
 
             self._write_row = jax.jit(write_row, donate_argnums=(0,))
 
@@ -92,13 +143,45 @@ class SlotKVCache:
         self.slot_len = np.zeros((n_slots,), np.int64)
         self._slot_cap = np.zeros((n_slots,), np.int64)
 
+    def _constrain(self, tree):
+        """Pin a jitted cache update's output to the pool layout."""
+        if self.shardings is None:
+            return tree
+        return jax.lax.with_sharding_constraint(tree, self.shardings)
+
+    def _reset_free_pages(self) -> None:
+        """Pristine per-shard free lists (shard of page p = p // per_shard);
+        the reserved scratch/sentinel ids never enter a list."""
+        self._free_pages = [collections.deque() for _ in range(self._n_shards)]
+        for p in range(paging.N_RESERVED, self.n_pages):
+            self._free_pages[p // self._pages_per_shard].append(p)
+
+    def _pop_pages(self, n: int) -> list[int]:
+        """Draw `n` free pages, fullest shard first (ties: lowest shard) —
+        a slot's pages spread across the mesh instead of draining shard 0."""
+        pages = []
+        for _ in range(n):
+            s = max(range(self._n_shards),
+                    key=lambda i: (len(self._free_pages[i]), -i))
+            pages.append(self._free_pages[s].popleft())
+        return pages
+
+    def _push_pages(self, pages) -> None:
+        for p in pages:
+            self._free_pages[p // self._pages_per_shard].append(p)
+
     def template(self, batch: int = 1):
         """Pristine batch-`batch` stripe cache: prefill input / slot-reset
         source (prefill always runs on stripes; paged insert scatters the
-        prefilled rows into pages)."""
+        prefilled rows into pages).  On a mesh the template is replicated so
+        prefill and the pool computation share one device set."""
         if batch not in self._templates:
-            self._templates[batch] = zoo.make_cache(
-                self.cfg, batch, self.max_seq, **self._cache_kw)
+            t = zoo.make_cache(self.cfg, batch, self.max_seq, **self._cache_kw)
+            if self.mesh is not None:
+                from jax.sharding import NamedSharding, PartitionSpec
+
+                t = jax.device_put(t, NamedSharding(self.mesh, PartitionSpec()))
+            self._templates[batch] = t
         return self._templates[batch]
 
     # -- page accounting ------------------------------------------------------
@@ -111,7 +194,9 @@ class SlotKVCache:
 
     @property
     def n_free_pages(self) -> int:
-        return len(self._free_pages) if self.paged else 1 << 62
+        if not self.paged:
+            return 1 << 62
+        return sum(len(d) for d in self._free_pages)
 
     @property
     def n_alloc_pages(self) -> int:
@@ -123,14 +208,14 @@ class SlotKVCache:
         if not self._free:
             return False
         return (not self.paged
-                or self.pages_needed(reserve_rows) <= len(self._free_pages))
+                or self.pages_needed(reserve_rows) <= self.n_free_pages)
 
     def slot_capacity(self, slot: int) -> int:
         """Cache rows reserved for `slot` at insert time."""
         return int(self._slot_cap[slot])
 
     def pool_bytes(self) -> int:
-        """Device bytes held by the pool cache pytree."""
+        """Device bytes held by the pool cache pytree (global, all shards)."""
         return sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(self.cache))
 
     # -- slot lifecycle -------------------------------------------------------
@@ -154,11 +239,11 @@ class SlotKVCache:
         reserve = length if reserve is None else reserve
         if self.paged:
             n_alloc = self.pages_needed(reserve)
-            if n_alloc > len(self._free_pages):
+            if n_alloc > self.n_free_pages:
                 raise RuntimeError(
                     f"slot {slot}: {n_alloc} pages needed, "
-                    f"{len(self._free_pages)} free")
-            pages = [self._free_pages.popleft() for _ in range(n_alloc)]
+                    f"{self.n_free_pages} free")
+            pages = self._pop_pages(n_alloc)
             ids = np.full((self.n_bt,), paging.SCRATCH_PAGE, np.int32)
             bt_row = np.full((self.n_bt,), paging.SENTINEL_PAGE, np.int32)
             ids[:n_alloc] = bt_row[:n_alloc] = pages
@@ -182,7 +267,7 @@ class SlotKVCache:
             ids[: len(pages)] = pages
             self.cache = self._release_paged(
                 self.cache, slot, jnp.asarray(ids))
-            self._free_pages.extend(pages)
+            self._push_pages(pages)
         else:
             self.cache = self._write_row(self.cache, self.template(), slot, 0)
         self.slot_len[slot] = 0
@@ -194,12 +279,13 @@ class SlotKVCache:
             self.cache = zoo.make_cache(
                 self.cfg, self.n_slots, self.max_seq, page=self.page,
                 n_pages=self.n_pages, **self._cache_kw)
-            self._free_pages = collections.deque(
-                range(paging.N_RESERVED, self.n_pages))
+            self._reset_free_pages()
             self._slot_pages = {}
         else:
             self.cache = zoo.make_cache(
                 self.cfg, self.n_slots, self.max_seq, **self._cache_kw)
+        if self.shardings is not None:
+            self.cache = jax.device_put(self.cache, self.shardings)
         self._free = list(range(self.n_slots))
         self.slot_len[:] = 0
         self._slot_cap[:] = 0

@@ -20,6 +20,14 @@ Every scheduler step:
 Inactive lanes keep stepping inside a chunk (fixed-shape batch); their
 cache writes land under their own lane's `kpos` mask and are wiped by the
 slot reset on reuse, so they can never leak into a later request.
+
+With `mesh=...` the same loop runs sharded: the paged pool shards its
+page axis and the block tables their slot axis (`sharding.cache_specs`),
+params and per-slot decode state ride along replicated, and every jitted
+cache update pins its output back to the pool layout — admission and
+release stay host-side, page writes stay device-resident.  `n_pages`
+defaults to `"auto"` (occupancy-derived provisioning) so admission
+actually gates on free pages; pass `None` for full stripe capacity.
 """
 from __future__ import annotations
 
@@ -55,11 +63,20 @@ class Scheduler:
     def __init__(self, cfg, params, max_slots: int = 4, max_seq: int = 512,
                  decode_chunk: int = 8, rng_seed: int = 0,
                  policy: str = "continuous", cache_kw: dict | None = None,
-                 page: int | None = 64, n_pages: int | None = None,
-                 bucket: bool | None = None, bucket_min: int = 8):
+                 page: int | None = 64, n_pages: int | str | None = "auto",
+                 bucket: bool | None = None, bucket_min: int = 8, mesh=None):
         if policy not in ("continuous", "static"):
             raise ValueError(f"unknown admission policy {policy!r}")
         self.cfg = cfg
+        self.mesh = mesh
+        if mesh is not None:
+            # decode runs data-parallel over the mesh with replicated
+            # weights (page/slot-axis sharding is the cache's job; tensor-
+            # parallel serving would compose via param_specs); placing
+            # params here keeps every jitted step on one device set
+            params = jax.device_put(
+                params, jax.sharding.NamedSharding(
+                    mesh, jax.sharding.PartitionSpec()))
         self.params = params
         self.max_slots = max_slots
         self.max_seq = max_seq
@@ -85,7 +102,7 @@ class Scheduler:
         self.prefill_traces = 0
 
         self.kv = SlotKVCache(cfg, max_slots, max_seq, page=page,
-                              n_pages=n_pages, **(cache_kw or {}))
+                              n_pages=n_pages, mesh=mesh, **(cache_kw or {}))
         # enc-dec pools cache the encoder output at fixed width t_enc
         # (pass cache_kw={"t_enc": ...} to right-size it for the workload)
         self._t_enc = (cache_kw or {}).get("t_enc") or max_seq
@@ -138,6 +155,11 @@ class Scheduler:
 
             carry, emits = jax.lax.scan(
                 step, (cache, tok, active, rem, key), None, length=chunk)
+            if self.kv.shardings is not None:
+                # pin the scanned cache back to its page/slot-axis layout so
+                # chunked decode can't drift the pool off its shards
+                carry = (jax.lax.with_sharding_constraint(
+                    carry[0], self.kv.shardings),) + carry[1:]
             return carry + (emits,)
 
         self._chunk = jax.jit(chunk_fn, donate_argnums=(1, 2, 3, 4, 8),
@@ -159,6 +181,15 @@ class Scheduler:
         self._topk = jnp.zeros((s,), jnp.int32)
         self._eos = jnp.full((s,), -1, jnp.int32)
         self._key = jax.random.PRNGKey(rng_seed)
+        if self.mesh is not None:
+            # per-slot decode state rides along replicated: the chunk jit
+            # then sees one device set (sharded pool + replicated state)
+            rep = jax.sharding.NamedSharding(self.mesh,
+                                             jax.sharding.PartitionSpec())
+            (self._tok, self._active, self._rem, self._temp, self._topk,
+             self._eos, self._key) = jax.device_put(
+                (self._tok, self._active, self._rem, self._temp, self._topk,
+                 self._eos, self._key), rep)
         self._active_host[:] = False
 
     def reset(self, rng_seed: int = 0) -> None:

@@ -1,0 +1,349 @@
+"""Cross-family serving conformance suite: paged == stripe == isolated.
+
+The serving contract is that no runtime optimisation may change tokens.
+For every family x cache layout x (sharded / unsharded), a staggered
+mixed-length workload driven through the continuous-batching `Scheduler`
+must decode token-identically to isolated per-request batch-1 greedy
+decode.  This module is the single reusable harness for that contract —
+`test_serve.py`'s ad-hoc equivalence tests migrated here — plus the
+sharded-pool churn property and the xlstm stripe-fallback regression.
+
+Sharded cases need a multi-device jax.  The device count is locked at the
+first jax import, so when this process has fewer than `N_DEVICES` devices
+each sharded case re-runs this file as a subprocess with
+``XLA_FLAGS=--xla_force_host_platform_device_count=4``; the CI
+multi-device job sets that flag for the whole pytest process and the
+cases run inline (no subprocess) on the fake 4-device host mesh.
+"""
+from __future__ import annotations
+
+import functools
+import os
+import re
+import subprocess
+import sys
+
+# subprocess entry: the fake multi-device host platform must be configured
+# before jax initialises (harmless if the parent already exported it)
+if __name__ == "__main__":
+    os.environ.setdefault(
+        "XLA_FLAGS", "--xla_force_host_platform_device_count=4")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+try:
+    import pytest
+except ImportError:  # `python tests/serve_conformance.py <mode>` driver
+    pytest = None
+
+from repro import compat
+from repro.configs.base import load_arch
+from repro.models import paging, zoo
+from repro.serve import Request, SamplingParams, Scheduler, SlotKVCache
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+N_DEVICES = 4
+
+# families with a real paged layout; "ssm" (pure recurrent) is covered by
+# the stripe-fallback regression instead
+FAMILIES = ("transformer", "hybrid", "encdec")
+
+_CASES = {
+    # staggered arrivals + mixed prompt lengths + fewer slots than requests
+    # exercise admission grouping, slot reuse, and page-gated admission
+    "transformer": dict(arch="qwen2_0_5b",
+                        reduced=dict(n_layers=2, d_model=64, n_heads=4,
+                                     n_kv_heads=2, d_ff=128, vocab=128,
+                                     head_dim=16),
+                        packed=True, page=16, prompt_lens=(5, 8, 11, 8, 14),
+                        max_new=7, seed=17),
+    # 20 > window=16: the ring wraps inside its pages (roll-insert too)
+    "hybrid": dict(arch="recurrentgemma_9b",
+                   reduced=dict(window=16, n_layers=3),
+                   page=8, prompt_lens=(8, 20, 12), max_new=6, seed=37),
+    "encdec": dict(arch="seamless_m4t_medium", reduced={},
+                   page=16, prompt_lens=(5, 9, 7), max_new=6, seed=37,
+                   n_frames=6, cache_kw={"t_enc": 6}),
+    "ssm": dict(arch="xlstm_125m",
+                reduced=dict(n_layers=2, d_model=64, n_heads=4, vocab=128),
+                page=16, prompt_lens=(5, 9, 7), max_new=6, seed=41),
+}
+
+MAX_SEQ = 64
+
+
+def greedy_isolated(cfg, params, prompt, n, max_seq, eos=-1, embeds=None,
+                    cache_kw=None):
+    """Reference decode: raw batch-1 prefill + python token loop."""
+    cache = zoo.make_cache(cfg, 1, max_seq, **(cache_kw or {}))
+    emb = None if embeds is None else jnp.asarray(np.asarray(embeds)[None])
+    last, cache = zoo.prefill(params, cfg, jnp.asarray(prompt[None]), cache,
+                              embeds=emb)
+    lg = zoo.logits_fn(params, cfg, last)[:, : cfg.vocab]
+    toks = [int(jnp.argmax(lg, -1)[0])]
+    while len(toks) < n and toks[-1] != eos:
+        lg, cache = zoo.decode_step(
+            params, cfg, jnp.asarray([[toks[-1]]], jnp.int32), cache)
+        toks.append(int(jnp.argmax(lg[:, : cfg.vocab], -1)[0]))
+    return toks
+
+
+@functools.lru_cache(maxsize=None)
+def _model(family):
+    c = _CASES[family]
+    cfg = load_arch(c["arch"]).reduced(**c["reduced"])
+    params = zoo.init(jax.random.PRNGKey(c["seed"]), cfg)
+    if c.get("packed"):  # the HiNM serving path, not just dense decode
+        from repro.train import pruning
+
+        _, _, params, _ = pruning.prune_model(params, cfg, ocp_iters=2,
+                                              icp_iters=2)
+    return cfg, params
+
+
+@functools.lru_cache(maxsize=None)
+def _workload(family):
+    c = _CASES[family]
+    cfg, _ = _model(family)
+    rng = np.random.default_rng(c["seed"])
+    prompts = tuple(rng.integers(0, cfg.vocab, (n,)).astype(np.int32)
+                    for n in c["prompt_lens"])
+    embeds = None
+    if c.get("n_frames"):
+        embeds = tuple(
+            rng.standard_normal((c["n_frames"], cfg.d_model)).astype(np.float32)
+            for _ in prompts)
+    return prompts, embeds
+
+
+def scheduler_tokens(family, layout, mesh=None, n_pages="auto",
+                     max_slots=4, decode_chunk=4):
+    """Drive the family workload through a Scheduler; returns (tokens list
+    per request, scheduler).  layout: "paged" | "stripe" ("stripe" is the
+    PR 2 baseline: exact-length admission, per-slot max_seq stripes)."""
+    c = _CASES[family]
+    cfg, params = _model(family)
+    prompts, embeds = _workload(family)
+    kw = dict(cache_kw=c.get("cache_kw"))
+    if layout == "paged":
+        kw.update(page=c["page"], n_pages=n_pages)
+    else:
+        kw.update(page=None, bucket=False)
+    sched = Scheduler(cfg, params, max_slots=max_slots, max_seq=MAX_SEQ,
+                      decode_chunk=decode_chunk, mesh=mesh, **kw)
+    reqs = [Request(rid=i, prompt=p, params=SamplingParams(max_new_tokens=c["max_new"]),
+                    embeds=None if embeds is None else embeds[i], arrival=i)
+            for i, p in enumerate(prompts)]
+    sched.run(reqs)
+    return [r.tokens for r in reqs], sched
+
+
+@functools.lru_cache(maxsize=None)
+def isolated_tokens(family):
+    c = _CASES[family]
+    cfg, params = _model(family)
+    prompts, embeds = _workload(family)
+    return [greedy_isolated(cfg, params, p, c["max_new"], MAX_SEQ,
+                            embeds=None if embeds is None else embeds[i],
+                            cache_kw=c.get("cache_kw"))
+            for i, p in enumerate(prompts)]
+
+
+def _pool_leaf(cache):
+    """The k pool leaf of the first paged attn stack in a cache pytree."""
+    for node in jax.tree_util.tree_leaves(cache, is_leaf=paging.is_paged):
+        if paging.is_paged(node):
+            return node["k"]
+    return None
+
+
+def _mesh_size(mesh):
+    return int(np.prod(list(mesh.shape.values()))) if mesh is not None else 1
+
+
+def assert_conformance(family, mesh=None):
+    """paged == stripe == isolated, on `mesh` (None = unsharded)."""
+    iso = isolated_tokens(family)
+    paged, sp = scheduler_tokens(family, "paged", mesh=mesh)
+    stripe, ss = scheduler_tokens(family, "stripe", mesh=mesh)
+    assert sp.kv.paged, f"{family}: paged layout did not engage"
+    # bucketed admission engages exactly where it is sound: attention-only
+    # prefill stacks bucket, recurrent blocks admit at exact length
+    assert sp.bucket == zoo.supports_bucketed_prefill(sp.cfg)
+    assert paged == iso, f"{family}: paged decode diverged from isolated"
+    assert stripe == iso, f"{family}: stripe decode diverged from isolated"
+    # all pages drained back to the free list once the workload finishes
+    assert sp.kv.n_free_pages == sp.kv.n_alloc_pages
+    if mesh is not None:
+        assert sp.kv.specs is not None and ss.kv.specs is not None
+        if _mesh_size(mesh) > 1:
+            # the pool must actually live page-sharded on the mesh, not
+            # silently replicate (the equivalence would then prove nothing)
+            pool_k = _pool_leaf(sp.kv.cache)
+            assert not pool_k.sharding.is_fully_replicated, \
+                f"{family}: page pool replicated on a {_mesh_size(mesh)}-device mesh"
+    if family == "transformer":
+        # page-constrained pool: admission waits on free pages, tokens
+        # must still be identical (FIFO, no starvation)
+        tight, st = scheduler_tokens(family, "paged", mesh=mesh, n_pages=6)
+        assert tight == iso
+        assert st.kv.n_free_pages == st.kv.n_alloc_pages
+
+
+# ---------------------------------------------------------------------------
+# churn property: random admit/release against the (sharded) paged pool
+# ---------------------------------------------------------------------------
+
+
+def run_churn(seed, mesh=None, n_ops=40):
+    """Random admit/finish/release churn against a paged SlotKVCache: page
+    accounting must stay exact at every step, no page may leak rows after
+    drain, and pool bytes never move (the pool never reallocates)."""
+    cfg, _ = _model("transformer")
+    # n_pages=10 -> 12 with the reserved pair: already divides a 4-way mesh,
+    # so sharded and unsharded pools are byte-identical
+    kv = SlotKVCache(cfg, 4, MAX_SEQ, page=8, n_pages=10, mesh=mesh)
+    assert kv.paged and kv.n_pages == 12
+    bytes0 = kv.pool_bytes()
+    tpl = kv.template(1)
+    ar = jnp.arange(MAX_SEQ, dtype=jnp.int32)
+    rng = np.random.default_rng(seed)
+    live: dict[int, int] = {}  # slot -> reserved rows
+
+    def check():
+        used = sum(kv.pages_needed(r) for r in live.values())
+        assert kv.n_free_pages == kv.n_alloc_pages - used, \
+            f"free-list drift: {kv.n_free_pages} free, {used} pages live"
+        assert kv.pool_bytes() == bytes0  # the pool never reallocates
+
+    for _ in range(n_ops):
+        admit = kv.n_free > 0 and (not live or rng.random() < 0.55)
+        if admit:
+            rows = int(rng.integers(1, 33))
+            reserve = min(MAX_SEQ, rows + int(rng.integers(0, 16)))
+            if not kv.can_admit(reserve):
+                check()  # a refused admission must not move accounting
+                continue
+            slot = kv.acquire()
+            # a stripe carrying `rows` real kpos rows, so live pages hold
+            # real positions and the leak check below is meaningful
+            stripe = dict(
+                tpl,
+                kpos=jnp.where(ar[None, None, :] < rows, ar[None, None, :],
+                               paging.KPOS_SENTINEL),
+                pos=jnp.full_like(tpl["pos"], rows))
+            kv.insert(slot, stripe, rows, reserve=reserve)
+            live[slot] = reserve
+            assert kv.slot_len[slot] == rows
+            assert kv.slot_capacity(slot) == reserve
+        else:
+            slot = int(rng.choice(sorted(live)))
+            kv.release(slot)
+            live.pop(slot)
+            assert kv.slot_len[slot] == 0 and kv.slot_capacity(slot) == 0
+        check()
+
+    for slot in sorted(live):
+        kv.release(slot)
+    assert kv.n_free_pages == kv.n_alloc_pages, "leaked pages after drain"
+    assert kv.n_free == kv.n_slots
+    assert (kv.slot_len == 0).all()
+    kpos = np.asarray(kv.cache["kpos"])
+    assert (kpos[:, paging.N_RESERVED:] == paging.KPOS_SENTINEL).all(), \
+        "a freed page kept real kpos rows (would leak into a recycled slot)"
+    assert (kpos[:, paging.SENTINEL_PAGE] == paging.KPOS_SENTINEL).all()
+
+
+# ---------------------------------------------------------------------------
+# xlstm: pure recurrent families fall back to stripes under a mesh
+# ---------------------------------------------------------------------------
+
+
+def run_xlstm_fallback(mesh):
+    """Requesting a paged pool on a pure-recurrent family must fall back to
+    stripes transparently — including under a sharded mesh, where
+    cache_specs must resolve the recurrent state tree (no attention
+    leaves) instead of crashing — and decode token-identically."""
+    toks, sched = scheduler_tokens("ssm", "paged", mesh=mesh)
+    assert not sched.kv.paged  # transparent stripe fallback
+    if mesh is not None:
+        assert sched.kv.specs is not None  # cache_specs resolved the tree
+    assert toks == isolated_tokens("ssm")
+
+
+# ---------------------------------------------------------------------------
+# pytest entry points
+# ---------------------------------------------------------------------------
+
+
+def _sharded_case(mode: str) -> None:
+    """Run `mode` on a 4-device mesh: inline when this process already has
+    enough devices (CI multi-device job), else in a subprocess with the
+    host-platform device-count flag."""
+    if len(jax.devices()) >= N_DEVICES:
+        _drive(mode, compat.make_mesh((N_DEVICES,), ("data",)))
+        return
+    # merge with inherited flags, but override any smaller device count
+    # (we only reach here when this process has < N_DEVICES devices)
+    flags = re.sub(r"--xla_force_host_platform_device_count=\d+", "",
+                   os.environ.get("XLA_FLAGS", ""))
+    flags = (flags + " --xla_force_host_platform_device_count=4").strip()
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(REPO, "src")
+               + os.pathsep + os.environ.get("PYTHONPATH", ""),
+               XLA_FLAGS=flags)
+    out = subprocess.run([sys.executable, os.path.abspath(__file__), mode],
+                         env=env, capture_output=True, text=True, timeout=600)
+    assert f"CONFORMANCE_OK {mode}" in out.stdout, out.stdout + out.stderr
+
+
+def _drive(mode: str, mesh) -> None:
+    if mode.startswith("conformance:"):
+        assert_conformance(mode.split(":", 1)[1], mesh=mesh)
+    elif mode == "churn":
+        for seed in (0, 1, 2):
+            run_churn(seed, mesh=mesh)
+    elif mode == "xlstm":
+        run_xlstm_fallback(mesh)
+    else:
+        raise ValueError(mode)
+
+
+if pytest is not None:
+
+    @pytest.mark.parametrize("family", FAMILIES + ("ssm",))
+    def test_conformance_unsharded(family):
+        if family == "ssm":
+            run_xlstm_fallback(None)  # fallback is the ssm conformance case
+        else:
+            assert_conformance(family, mesh=None)
+
+    @pytest.mark.parametrize("family", FAMILIES)
+    def test_conformance_sharded(family):
+        _sharded_case(f"conformance:{family}")
+
+    from _hypothesis_compat import given, integers, settings
+
+    @settings(max_examples=6, deadline=None)
+    @given(seed=integers(0, 100))
+    def test_churn_property(seed):
+        run_churn(seed, mesh=None)
+        # 1-device mesh: the sharded code path (specs, device_put,
+        # constrained writes) without multi-device execution
+        run_churn(seed, mesh=compat.make_mesh((1,), ("data",)))
+
+    def test_churn_sharded():
+        _sharded_case("churn")
+
+    def test_xlstm_stripe_fallback_sharded():
+        _sharded_case("xlstm")
+
+
+if __name__ == "__main__":
+    _mode = sys.argv[1] if len(sys.argv) > 1 else "conformance:transformer"
+    assert len(jax.devices()) >= N_DEVICES, \
+        f"{len(jax.devices())} devices; the driver needs the XLA flag"
+    _drive(_mode, compat.make_mesh((N_DEVICES,), ("data",)))
+    print(f"CONFORMANCE_OK {_mode}")

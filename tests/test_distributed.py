@@ -131,3 +131,41 @@ def test_batch_and_cache_specs():
     kspec = tuple(cs["k"])
     assert kspec[1] == ("pod", "data")
     assert "model" in (kspec[2], kspec[3])
+
+
+def test_cache_specs_paged_layout():
+    """Paged decode caches resolve on a data-only serving mesh: pool leaves
+    shard their PAGE axis, block tables / counters their slot axis; a
+    non-divisible page count degrades to replication; the xlstm recurrent
+    tree (no attention leaves) resolves instead of crashing."""
+    from repro.models import paging
+
+    mesh = compat.abstract_mesh((4,), ("data",))
+    cfg = load_arch("qwen2_0_5b").reduced(n_layers=2, d_model=64, n_heads=4,
+                                          n_kv_heads=2, d_ff=128, vocab=128,
+                                          head_dim=16)
+    geom = paging.shard_geometry(10, 4)
+    assert geom["n_pages"] % 4 == 0 and geom["n_pages"] >= 12
+    cache = jax.eval_shape(lambda: zoo.make_cache(
+        cfg, 4, 64, page=16, n_pages=geom["n_pages"]))
+    cs = shd.cache_specs(cache, mesh, cfg)
+    for pool in ("k", "v", "kpos"):   # (L, n_pages, page, ...)
+        assert tuple(cs[pool])[1] == "data", pool
+        assert tuple(cs[pool])[2] is None, pool  # never split inside a page
+    for slot in ("bt", "alloc", "pos"):  # (L, B[, n_bt])
+        assert tuple(cs[slot])[1] == "data", slot
+
+    # page count not divisible by the mesh -> pool replicates, slots keep
+    # their batch sharding (the rule engine never emits an invalid spec)
+    odd = jax.eval_shape(lambda: zoo.make_cache(cfg, 4, 64, page=16, n_pages=13))
+    co = shd.cache_specs(odd, mesh, cfg)
+    assert tuple(co["k"])[1] is None
+    assert tuple(co["bt"])[1] == "data"
+
+    # pure-recurrent family: every leaf is state (batch over dp); this is
+    # the in-process half of the xlstm stripe-fallback regression
+    xcfg = load_arch("xlstm_125m").reduced()
+    xcache = jax.eval_shape(lambda: zoo.make_cache(xcfg, 4, 32))
+    xs = shd.cache_specs(xcache, mesh, xcfg)
+    for spec in jax.tree.leaves(xs, is_leaf=lambda x: isinstance(x, P)):
+        assert tuple(spec)[1] == "data"
