@@ -32,6 +32,7 @@ def main() -> None:
         "compression": compression_bench.run,
         "permgraph": permgraph_bench.run,
         "serve": serve_bench.run,
+        "serve_spec": serve_bench.run_spec,
     }
     pattern = sys.argv[1] if len(sys.argv) > 1 else ""
     print("name,us_per_call,derived")

@@ -58,11 +58,16 @@ def _serve(cfg, packed, reqs, policy: str, slots: int, max_seq: int,
 
     sched = Scheduler(cfg, packed, max_slots=slots, max_seq=max_seq,
                       decode_chunk=4, policy=policy, **sched_kw)
+    return _drive(sched, reqs)
+
+
+def _drive(sched, reqs):
+    from repro.serve import Request, SamplingParams
     # warm the jitted kernels outside the timed region: the decode chunk,
     # and the admission prefill/insert for every group width 1..slots the
     # admission policy can form (one XLA trace per batch shape). The timed
     # region then measures scheduling, not compilation.
-    for k in range(1, slots + 1):
+    for k in range(1, sched.max_slots + 1):
         warm = [Request(rid=-1 - i, prompt=reqs[0].prompt.copy(),
                         params=SamplingParams(max_new_tokens=2))
                 for i in range(k)]
@@ -72,8 +77,8 @@ def _serve(cfg, packed, reqs, policy: str, slots: int, max_seq: int,
     sched.run(reqs)
     makespan = time.perf_counter() - t0
     st = sched.stats
-    return {
-        "policy": policy,
+    out = {
+        "policy": sched.policy,
         "tokens": st.tokens_generated,
         "requests": st.requests_finished,
         "decode_steps": st.decode_steps,
@@ -85,6 +90,16 @@ def _serve(cfg, packed, reqs, policy: str, slots: int, max_seq: int,
         "kv_pool_bytes": sched.kv.pool_bytes(),
         "kv_paged": sched.kv.paged,
     }
+    if sched.spec is not None:
+        out.update(
+            spec_k=sched.spec.k,
+            drafter=sched.drafter.kind,
+            verify_steps=st.verify_steps,
+            acceptance_rate=st.acceptance_rate,
+            tokens_per_verify_step=st.tokens_per_verify_step,
+            weight_bytes_per_accepted_token=st.weight_bytes_per_accepted_token,
+        )
+    return out
 
 
 def _compile_counts(cfg, packed, rng, slots: int, max_seq: int) -> dict:
@@ -204,5 +219,96 @@ def run(out_path: str = "BENCH_serve.json") -> dict:
     return report
 
 
+def run_spec(out_path: str = "BENCH_spec.json") -> dict:
+    """Speculative decoding vs the chunked baseline (`BENCH_spec.json`).
+
+    A repetitive-prompt workload (a 4-token pattern tiled, the generation
+    itself settles into loops a prompt-lookup drafter can predict) decoded
+    three ways on the same paged pool: non-speculative baseline, n-gram
+    drafter, and a self-drafting ModelDrafter (draft == target, the
+    acceptance-1.0 upper bound that pins the stats algebra).  CI asserts:
+    tokens identical to the baseline, acceptance-weighted
+    tokens-per-verify-step > 1 for both drafters, and a proportional drop
+    in packed-weight bytes per accepted token."""
+    import jax
+
+    from repro.configs.base import load_arch
+    from repro.models import zoo
+    from repro.serve import (ModelDrafter, Request, SamplingParams, Scheduler,
+                             SpecConfig)
+    from repro.train import pruning
+
+    cfg = load_arch("qwen2_0_5b").reduced(
+        n_layers=2, d_model=128, n_heads=4, n_kv_heads=2, d_ff=256,
+        vocab=256, head_dim=32, max_seq=128)
+    params = zoo.init(jax.random.PRNGKey(0), cfg)
+    _, _, packed, _ = pruning.prune_model(params, cfg, ocp_iters=2, icp_iters=2)
+
+    slots, n_requests, max_new, max_seq, k = 4, 8, 32, 128, 4
+    rng = np.random.default_rng(0)
+    pat = rng.integers(0, cfg.vocab, (4,)).astype(np.int32)
+
+    def workload():
+        return [Request(rid=i,
+                        prompt=np.tile(np.roll(pat, i % 4), 6).astype(np.int32),
+                        params=SamplingParams(max_new_tokens=max_new),
+                        arrival=i)
+                for i in range(n_requests)]
+
+    def case(spec):
+        reqs = workload()
+        sched = Scheduler(cfg, packed, max_slots=slots, max_seq=max_seq,
+                          decode_chunk=4, page=PAGE, n_pages=12, spec=spec)
+        row = _drive(sched, reqs)
+        return row, [r.tokens for r in reqs]
+
+    base_row, base_toks = case(None)
+    ngram_row, ngram_toks = case(SpecConfig(k=k, drafter="ngram"))
+    self_row, self_toks = case(
+        SpecConfig(k=k, drafter=ModelDrafter(cfg, packed)))
+
+    # the serving contract survives speculation: tokens are identical
+    assert ngram_toks == base_toks, "ngram spec decode changed tokens"
+    assert self_toks == base_toks, "self-draft spec decode changed tokens"
+    # acceptance-weighted tokens per verify must beat 1 (else speculation
+    # never pays), and the packed-weight read per accepted token must drop
+    # proportionally vs the baseline's per-chunk-step read
+    for row in (ngram_row, self_row):
+        assert row["tokens_per_verify_step"] > 1.0, row
+        assert (row["weight_bytes_per_accepted_token"]
+                < base_row["weight_bytes_per_token"]), row
+    assert self_row["acceptance_rate"] == 1.0  # draft == target upper bound
+
+    report = {
+        "shape": {"arch": "qwen2_0_5b.reduced", "d_model": cfg.d_model,
+                  "n_layers": cfg.n_layers, "vocab": cfg.vocab,
+                  "slots": slots, "n_requests": n_requests,
+                  "max_new_tokens": max_new, "spec_k": k},
+        "baseline": base_row,
+        "ngram": ngram_row,
+        "self_draft": self_row,
+        "bytes_per_token_ratio": {
+            "ngram": (ngram_row["weight_bytes_per_accepted_token"]
+                      / base_row["weight_bytes_per_token"]),
+            "self_draft": (self_row["weight_bytes_per_accepted_token"]
+                           / base_row["weight_bytes_per_token"]),
+        },
+    }
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2)
+
+    for name, row in (("baseline", base_row), ("ngram", ngram_row),
+                      ("self_draft", self_row)):
+        tps = row.get("tokens_per_verify_step", 1.0)
+        acc = row.get("acceptance_rate", 0.0)
+        emit(f"serve_spec_{name}",
+             row["makespan_seconds"] * 1e6 / max(row["tokens"], 1),
+             f"tok/s={row['tokens_per_second']:.1f} "
+             f"tok/verify={tps:.2f} accept={acc:.3f} "
+             f"bytes/tok={row.get('weight_bytes_per_accepted_token', row['weight_bytes_per_token']):.0f}")
+    return report
+
+
 if __name__ == "__main__":
     run()
+    run_spec()

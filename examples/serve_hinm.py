@@ -51,6 +51,9 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--decode-chunk", type=int, default=4)
     ap.add_argument("--compare-dense", action="store_true")
+    ap.add_argument("--spec-k", type=int, default=3,
+                    help="draft tokens per verify for the speculative rerun "
+                         "(0 disables the comparison)")
     args = ap.parse_args()
 
     cfg = load_arch("qwen2_0_5b").reduced(n_layers=4, d_model=256, n_heads=4,
@@ -94,6 +97,26 @@ def main():
     print(f"static baseline: {static.stats.decode_steps} batched steps "
           f"(continuous saved "
           f"{static.stats.decode_steps - st.decode_steps} full-batch steps)")
+
+    if args.spec_k:
+        from repro.serve import SpecConfig
+
+        spec = Scheduler(cfg, packed, max_slots=args.slots, max_seq=max_seq,
+                         decode_chunk=args.decode_chunk,
+                         spec=SpecConfig(k=args.spec_k))
+        spec_reqs = build_workload(cfg, args.requests, args.prompt_len,
+                                   np.random.default_rng(0))
+        spec.run(spec_reqs)
+        ss = spec.stats
+        by_rid = {r.rid: r for r in spec_reqs}
+        same = all(r.tokens == by_rid[r.rid].tokens for r in done)
+        print(f"\nspeculative (n-gram, k={args.spec_k}): "
+              f"tokens identical: {same}; "
+              f"acceptance {ss.acceptance_rate:.3f}, "
+              f"{ss.tokens_per_verify_step:.2f} tok/verify, "
+              f"bytes/tok {ss.weight_bytes_per_accepted_token / 1e3:.1f}kB "
+              f"vs {st.weight_bytes_per_token / 1e3:.1f}kB chunked")
+        assert same  # greedy + "match" stochastic reproduce the stream
 
     if args.compare_dense:
         masked = pruning.apply_masks(newp, masks)

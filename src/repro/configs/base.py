@@ -60,6 +60,10 @@ class ArchConfig:
     rglru_dim: int = 0
     # --- enc-dec ---
     n_enc_layers: int = 0
+    # --- speculative decoding (serve/spec) ---
+    # arch id of the paired small draft model (same tokenizer family); ""
+    # = none. `serve.spec.ModelDrafter.from_zoo` resolves it via load_arch.
+    draft_arch: str = ""
     # --- modality frontend stub ---
     frontend: str = ""           # "" | "patch" | "frames"
     frontend_tokens: int = 0     # stub tokens prepended (vlm) / encoder len ratio

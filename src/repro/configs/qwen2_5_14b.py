@@ -17,4 +17,7 @@ CONFIG = ArchConfig(
     rope_theta=1_000_000.0,
     act="swiglu",
     norm="rmsnorm",
+    # speculative decoding pair: the 0.5B shares the Qwen2 tokenizer (its
+    # 151936-entry vocab is a prefix of the 14B's padded 152064 table)
+    draft_arch="qwen2_0_5b",
 )

@@ -105,11 +105,12 @@ def encode(params, cfg, frames: jax.Array, remat: bool = True):
 
 
 def _dec_stack(params, cfg, x, positions, enc_out, caches=None, remat: bool = True,
-               enc_len=None):
+               enc_len=None, spec: bool = False):
     def body(carry, layer):
         x = nn.constrain_batch(carry)
         lp, lc = layer if caches is not None else (layer, None)
-        h, nc = L.attention(lp["attn"], L.norm(lp["ln1"], x, cfg), positions, cfg, lc)
+        h, nc = L.attention(lp["attn"], L.norm(lp["ln1"], x, cfg), positions,
+                            cfg, lc, spec=spec)
         x = x + h
         x = x + _cross_attention(lp["xattn"], L.norm(lp["ln_x"], x, cfg), enc_out,
                                  cfg, enc_len=enc_len)
@@ -256,6 +257,39 @@ def decode_step(params, cfg, tokens, cache):
     x = L.norm(params["ln_f"], x, cfg)
     return logits_fn(params, x[:, 0]), {"self": new_self, "enc_out": cache["enc_out"],
                                         "enc_len": cache["enc_len"]}
+
+
+# serve/spec: the decoder is pure attention (self + cross), so one parallel
+# forward verifies all candidate rows; cross-attention reads only the
+# per-slot cached encoder output, which speculation never mutates
+SPEC_VERIFY = "parallel"
+
+
+def cache_position(cfg, cache):
+    return cache["self"]["pos"][0]
+
+
+def verify_step(params, cfg, tokens, cache):
+    """Speculative verify over the decoder: see transformer.verify_step."""
+    b, s = tokens.shape
+    x = nn.embed(params["embed"], tokens)
+    pos = cache["self"]["pos"][0]
+    positions = pos.astype(jnp.int32)[:, None] + jnp.arange(s, dtype=jnp.int32)[None, :]
+    x, new_self = _dec_stack(params, cfg, x, positions, cache["enc_out"],
+                             caches=cache["self"], enc_len=cache["enc_len"],
+                             spec=True)
+    x = L.norm(params["ln_f"], x, cfg)
+    new_cache = {"self": new_self, "enc_out": cache["enc_out"],
+                 "enc_len": cache["enc_len"]}
+    return logits_fn(params, x), new_cache, None
+
+
+def cache_rollback(cfg, cache, undo, pos0, keep, n_written):
+    roll = (paging.rollback_attn_paged if paging.is_paged(cache["self"])
+            else paging.rollback_attn_stripe)
+    return {"self": roll(cache["self"], pos0, keep, n_written,
+                         window=bool(cfg.window)),
+            "enc_out": cache["enc_out"], "enc_len": cache["enc_len"]}
 
 
 def hinm_plan(cfg):

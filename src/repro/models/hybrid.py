@@ -239,6 +239,67 @@ def decode_step(params, cfg, tokens, cache):
     return logits_fn(params, x[:, 0]), new_cache
 
 
+# serve/spec: hybrid verifies SEQUENTIALLY — one jitted scan of exact
+# single-token decode steps.  A parallel multi-token write would clobber
+# live rows once the windowed ring wraps mid-verify, and the rglru state
+# integrates every token it sees; instead each step snapshots (the attn
+# row it is about to overwrite, the recurrent state) so `cache_rollback`
+# can restore the rejected suffix bit-exactly.  One weight read per token:
+# speculation on hybrid buys acceptance-driven emission (and scheduler
+# conformance), not the packed-weight-bandwidth win (serve/README.md).
+SPEC_VERIFY = "sequential"
+
+
+def cache_position(cfg, cache):
+    pattern = cfg.block_pattern or ("rec", "rec", "attn")
+    return cache[pattern.index("attn")]["pos"][0]
+
+
+def _spec_snapshot(cfg, cache):
+    """Per-stack pre-step snapshot: the attn row the next write hits, or a
+    copy of the O(1) recurrent state."""
+    win = bool(cfg.window)
+
+    def one(c):
+        if "k" in c:  # paged or stripe attention stack
+            return paging.snapshot_attn_row(c, window=win)
+        return {k: c[k] for k in c}  # rglru h/conv (O(1) per slot)
+
+    return tuple(one(c) for c in cache)
+
+
+def verify_step(params, cfg, tokens, cache):
+    """Sequential speculative verify: replay ``tokens (B, S)`` through S
+    exact single-token decode steps inside one jit, collecting per-step
+    logits and undo snapshots.  Returns (logits (B, S, vocab), cache,
+    undo) with undo leaves step-stacked (S, ...)."""
+
+    def step(carry, tok_i):
+        c = carry
+        snap = _spec_snapshot(cfg, c)
+        logits, c = decode_step(params, cfg, tok_i[:, None], c)
+        return c, (logits, snap)
+
+    new_cache, (lg, snaps) = jax.lax.scan(
+        step, cache, jnp.moveaxis(tokens, 1, 0))
+    return jnp.moveaxis(lg, 0, 1), new_cache, snaps
+
+
+def cache_rollback(cfg, cache, undo, pos0, keep, n_written):
+    """Restore the rejected suffix: attn rows return to their pre-step
+    snapshots (reverse step order), recurrent state rewinds to the state
+    after exactly ``keep`` accepted tokens."""
+    win = bool(cfg.window)
+    out = []
+    for c, u in zip(cache, undo):
+        if "k" in c:
+            out.append(paging.restore_attn_rows(c, u, pos0, keep, n_written,
+                                                window=win))
+        else:
+            out.append({k: paging.select_state(u[k], c[k], keep) for k in c})
+    return tuple(out)
+
+
 def hinm_plan(cfg) -> list[PruneSpec]:
     """Plan is resolved per pattern-position stack by the pruning walker."""
     plans = {}

@@ -235,6 +235,7 @@ def attention(
                                   #          "pos" (B,), "kpos" (B,Smax)}
     kv_block: int = 1024,
     bidirectional: bool = False,
+    spec: bool = False,           # multi-token speculative verify write
 ) -> tuple[jax.Array, dict | None]:
     """GQA attention with RoPE. Returns (out (B,S,D), updated cache)."""
     b, s, _ = x.shape
@@ -262,7 +263,7 @@ def attention(
         # to the scratch page, which no block table ever references.
         from repro.models import paging
 
-        if s != 1:
+        if s != 1 and not spec:
             raise ValueError("paged KV caches only support single-token decode"
                              " (prefill runs on a stripe template)")
         pos = cache["pos"]                                  # (B,) int32
@@ -270,21 +271,30 @@ def attention(
         n_bt = bt.shape[1]
         page = cache["k"].shape[1]                          # (n_pages, page, KV, hd)
         view_len = n_bt * page
-        vpos = jax.lax.rem(pos, view_len) if cfg.window else pos
-        logical = jnp.clip(vpos // page, 0, n_bt - 1)
-        off = jax.lax.rem(vpos, page)
-        valid = (vpos // page) < alloc
-        phys = jnp.take_along_axis(bt, logical[:, None], axis=1)[:, 0]
-        phys_w = jnp.where(valid, phys, paging.SCRATCH_PAGE)
-        ck = cache["k"].at[phys_w, off].set(k[:, 0].astype(cache["k"].dtype))
-        cv = cache["v"].at[phys_w, off].set(v[:, 0].astype(cache["v"].dtype))
-        ckpos = cache["kpos"].at[phys_w, off].set(positions[:, 0].astype(jnp.int32))
+        if s > 1 and cfg.window:
+            # a wrapped multi-token write would clobber rows earlier
+            # queries still need (hybrid verifies sequentially instead)
+            raise ValueError("multi-token spec write cannot wrap a "
+                             "windowed ring; use sequential verify")
+        # single-token decode and speculative verify share one addressing
+        # (also the sweep addressing of paging.rollback_attn_paged): all s
+        # rows land through the block table in one dispatch, rows past the
+        # allocation redirected to scratch.  For s > 1 the causal mask then
+        # hides each row's future rows exactly, so one attend sees the same
+        # KV set — in the same layout order, hence bitwise the same online
+        # softmax — as s sequential single-token steps would.
+        phys_s, off, valid = paging.spec_row_locations(
+            bt, alloc, pos, s, page, window=bool(cfg.window))
+        phys_w = jnp.where(valid, phys_s, paging.SCRATCH_PAGE)
+        ck = cache["k"].at[phys_w, off].set(k.astype(cache["k"].dtype))
+        cv = cache["v"].at[phys_w, off].set(v.astype(cache["v"].dtype))
+        ckpos = cache["kpos"].at[phys_w, off].set(positions.astype(jnp.int32))
         k_view = jnp.take(ck, bt, axis=0).reshape(b, view_len, kvh, hd)
         v_view = jnp.take(cv, bt, axis=0).reshape(b, view_len, kvh, hd)
         kpos_view = jnp.take(ckpos, bt, axis=0).reshape(b, view_len)
         out = _attn_chunked(q, k_view, v_view, positions, kpos_view, True,
                             cfg.window, kv_block)
-        new_cache = {"k": ck, "v": cv, "kpos": ckpos, "pos": pos + 1,
+        new_cache = {"k": ck, "v": cv, "kpos": ckpos, "pos": pos + s,
                      "bt": bt, "alloc": alloc}
     else:
         # Cache slots are a ring buffer when a sliding window bounds the
@@ -309,6 +319,24 @@ def attention(
                 v[:, -smax:].astype(cache["v"].dtype), shift)
             new_kpos = jax.vmap(jnp.roll)(
                 positions[:, -smax:].astype(jnp.int32), shift)
+        elif spec and s > 1:
+            # speculative verify on a stripe: scatter the s candidate rows
+            # at each lane's own offsets (rows past the stripe end are
+            # dropped by the scatter — they can only be over-reservation
+            # rows the acceptance cap already rejects), then attend once
+            # with causal masking.  Same bitwise-equivalence argument as
+            # the paged spec write; windowed rings verify sequentially.
+            if cfg.window:
+                raise ValueError("multi-token spec write cannot wrap a "
+                                 "windowed ring; use sequential verify")
+            idx = pos[:, None] + jnp.arange(s, dtype=jnp.int32)[None, :]
+            bidx = jnp.arange(b)[:, None]
+            ck = cache["k"].at[bidx, idx].set(k.astype(cache["k"].dtype))
+            cv = cache["v"].at[bidx, idx].set(v.astype(cache["v"].dtype))
+            new_kpos = cache["kpos"].at[bidx, idx].set(
+                positions.astype(jnp.int32))
+            out = _attn_chunked(q, ck, cv, positions, new_kpos, True,
+                                cfg.window, kv_block)
         else:
             slot = jax.lax.rem(pos, smax) if cfg.window else pos
             ck = jax.vmap(

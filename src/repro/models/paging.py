@@ -169,6 +169,144 @@ def release_attn(pool: dict, page_ids, slot) -> dict:
     return out
 
 
+# ---------------------------------------------------------------------------
+# speculative decoding: multi-token row addressing, commit/rollback
+# ---------------------------------------------------------------------------
+#
+# A verify step writes up to `n` speculative rows per slot starting at the
+# slot's current position (serve/spec).  Rows land through the exact same
+# addressing as single-token decode: logical page = vpos // page resolved
+# through the block table, writes outside the allocation redirected to the
+# scratch page.  Rollback keeps the accepted prefix and sweeps the rejected
+# suffix's `kpos` back to the sentinel — the K/V bytes stay (unreachable:
+# every future attend masks them exactly like an unwritten row) and the
+# next verify overwrites them in place, so no page ever moves: the free
+# list and pool bytes are untouched by accept/reject churn.
+
+
+def spec_row_locations(bt: jax.Array, alloc: jax.Array, pos0: jax.Array,
+                       n: int, page: int, window: bool):
+    """Physical (page, offset) of the `n` speculative rows written per slot
+    from ``pos0``.  bt (B, n_bt), alloc (B,), pos0 (B,).  Returns
+    (phys (B, n), off (B, n), valid (B, n)) — ``valid`` False where the row
+    falls outside the slot's allocation (those writes went to scratch)."""
+    n_bt = bt.shape[1]
+    view = n_bt * page
+    ar = jnp.arange(n, dtype=jnp.int32)
+    vpos = pos0[:, None] + ar[None, :]
+    if window:
+        vpos = jax.lax.rem(vpos, view)
+    logical = jnp.clip(vpos // page, 0, n_bt - 1)
+    off = jax.lax.rem(vpos, page)
+    valid = (vpos // page) < alloc[:, None]
+    phys = jnp.take_along_axis(bt, logical, axis=1)
+    return phys, off, valid
+
+
+def rollback_attn_paged(pool: dict, pos0: jax.Array, keep: jax.Array, n: int,
+                        window: bool) -> dict:
+    """Keep ``keep`` of the ``n`` speculative rows written from ``pos0`` in
+    a paged attention stack: the rejected suffix's kpos rows return to the
+    sentinel (k/v bytes stay — masked exactly like unwritten rows) and the
+    position counter rewinds to ``pos0 + keep``.  Sweeps of kept or
+    out-of-allocation rows are redirected to the scratch page (no-ops)."""
+    page = pool["k"].shape[2]
+    phys, off, valid = spec_row_locations(
+        pool["bt"][0], pool["alloc"][0], pos0, n, page, window)
+    drop = jnp.arange(n, dtype=jnp.int32)[None, :] >= keep[:, None]
+    phys_sw = jnp.where(valid & drop, phys, SCRATCH_PAGE)
+    out = dict(pool)
+    out["kpos"] = pool["kpos"].at[:, phys_sw, off].set(KPOS_SENTINEL)
+    out["pos"] = jnp.broadcast_to(
+        (pos0 + keep).astype(jnp.int32)[None, :], pool["pos"].shape)
+    return out
+
+
+def rollback_attn_stripe(cache: dict, pos0: jax.Array, keep: jax.Array, n: int,
+                         window: bool) -> dict:
+    """Stripe-layout twin of ``rollback_attn_paged``: rejected rows' kpos
+    back to the sentinel at their ring/stripe slots, pos rewound.  Writes
+    past the stripe end (over-reservation rows that a scatter already
+    dropped) are dropped again here by the same out-of-bounds rule."""
+    smax = cache["k"].shape[2]
+    b = pos0.shape[0]
+    ar = jnp.arange(n, dtype=jnp.int32)
+    idx = pos0[:, None] + ar[None, :]
+    if window:
+        idx = jax.lax.rem(idx, smax)
+    drop = ar[None, :] >= keep[:, None]
+    bidx = jnp.arange(b)[:, None]
+    cur = cache["kpos"][:, bidx, idx]                       # (L, B, n)
+    out = dict(cache)
+    out["kpos"] = cache["kpos"].at[:, bidx, idx].set(
+        jnp.where(drop[None], KPOS_SENTINEL, cur))
+    out["pos"] = jnp.broadcast_to(
+        (pos0 + keep).astype(jnp.int32)[None, :], cache["pos"].shape)
+    return out
+
+
+def _row_loc_at(cache: dict, pos: jax.Array, window: bool):
+    """Per-slot index pair of the cache row a single-token decode step at
+    position ``pos`` writes: (page, offset) for a paged stack, (lane, slot)
+    for a stripe (clamped at the stripe end, matching the write's clamp)."""
+    if is_paged(cache):
+        page = cache["k"].shape[2]
+        phys, off, valid = spec_row_locations(
+            cache["bt"][0], cache["alloc"][0], pos, 1, page, window)
+        return jnp.where(valid, phys, SCRATCH_PAGE)[:, 0], off[:, 0]
+    smax = cache["k"].shape[2]
+    idx = jax.lax.rem(pos, smax) if window else jnp.clip(pos, 0, smax - 1)
+    return jnp.arange(pos.shape[0]), idx
+
+
+def snapshot_attn_row(cache: dict, window: bool) -> dict:
+    """Copy the row the next decode step will overwrite (sequential spec
+    verify, see hybrid.verify_step): (L, B, ...) per k/v/kpos leaf."""
+    i, j = _row_loc_at(cache, cache["pos"][0], window)
+    return {name: cache[name][:, i, j] for name in ("k", "v", "kpos")}
+
+
+def restore_attn_rows(cache: dict, snaps: dict, pos0: jax.Array,
+                      keep: jax.Array, n: int, window: bool) -> dict:
+    """Undo the rejected suffix of ``n`` sequential decode writes: rows
+    ``i >= keep`` return to their pre-verify snapshot (``snaps`` leaves are
+    step-stacked ``(n, L, B, ...)``), pos rewinds to ``pos0 + keep``.
+    Restores run in reverse step order so a row written twice (stripe-end
+    clamping) recovers the content the FIRST write clobbered."""
+
+    def body(j, leaves):
+        i = n - 1 - j
+        ii, jj = _row_loc_at(cache, pos0 + i, window)
+        drop = i >= keep                                     # (B,)
+        out = {}
+        for nm in ("k", "v", "kpos"):
+            cur = leaves[nm][:, ii, jj]                      # (L, B, ...)
+            snap = jax.lax.dynamic_index_in_dim(snaps[nm], i, 0, False)
+            sel = jnp.where(
+                drop.reshape((1, -1) + (1,) * (cur.ndim - 2)), snap, cur)
+            out[nm] = leaves[nm].at[:, ii, jj].set(sel)
+        return out
+
+    leaves = {nm: cache[nm] for nm in ("k", "v", "kpos")}
+    leaves = jax.lax.fori_loop(0, n, body, leaves)
+    out = dict(cache, **leaves)
+    out["pos"] = jnp.broadcast_to(
+        (pos0 + keep).astype(jnp.int32)[None, :], cache["pos"].shape)
+    return out
+
+
+def select_state(snaps: jax.Array, final: jax.Array, keep: jax.Array) -> jax.Array:
+    """Rewind a per-slot recurrent state to ``keep`` accepted tokens.
+    ``snaps`` (n, L, B, ...) holds the state before each of the n verify
+    steps (snap[0] = pre-verify), ``final`` (L, B, ...) the state after all
+    n; returns the state after exactly ``keep[b]`` tokens per slot."""
+    states = jnp.concatenate([snaps, final[None]], axis=0)   # (n+1, L, B, ...)
+    states = jnp.moveaxis(states, 2, 0)                      # (B, n+1, L, ...)
+    idx = keep.reshape((-1,) + (1,) * (states.ndim - 1)).astype(jnp.int32)
+    out = jnp.take_along_axis(states, idx, axis=1)[:, 0]
+    return jnp.moveaxis(out, 0, 1)
+
+
 def copy_slot_row(dst: jax.Array, src: jax.Array, slot, row, axis: int) -> jax.Array:
     """Copy slot-row ``row`` of striped leaf ``src`` into row ``slot`` of
     ``dst`` along ``axis`` (the generic non-paged-leaf insert)."""

@@ -38,9 +38,10 @@ def init_block(key, cfg):
     return p
 
 
-def block(params, cfg, x, positions, cache=None):
+def block(params, cfg, x, positions, cache=None, spec=False):
     x = nn.constrain_batch(x)
-    h, new_cache = L.attention(params["attn"], L.norm(params["ln1"], x, cfg), positions, cfg, cache)
+    h, new_cache = L.attention(params["attn"], L.norm(params["ln1"], x, cfg),
+                               positions, cfg, cache, spec=spec)
     x = x + h
     if cfg.family == "moe":
         from repro.models import moe
@@ -64,7 +65,8 @@ def init(key, cfg):
     return p
 
 
-def _scan_blocks(params, cfg, x, positions, caches=None, remat: bool = True):
+def _scan_blocks(params, cfg, x, positions, caches=None, remat: bool = True,
+                 spec: bool = False):
     """Scan over stacked layer params (and stacked caches on decode)."""
 
     def body(carry, layer):
@@ -73,7 +75,7 @@ def _scan_blocks(params, cfg, x, positions, caches=None, remat: bool = True):
             y, _ = block(lp, cfg, carry, positions, None)
             return y, None
         lp, lc = layer
-        y, nc = block(lp, cfg, carry, positions, lc)
+        y, nc = block(lp, cfg, carry, positions, lc, spec=spec)
         return y, nc
 
     from repro.models import probe_mode
@@ -201,6 +203,42 @@ def decode_step(params, cfg, tokens, cache):
     x, new_cache = _scan_blocks(params, cfg, x, positions, caches=cache)
     x = L.norm(params["ln_f"], x, cfg)
     return logits_fn(params, x[:, 0]), new_cache
+
+
+# serve/spec: one parallel forward verifies all candidate rows (attention
+# is the only stateful block, and its causal mask makes the multi-token
+# write bitwise-equivalent to sequential steps on non-windowed caches)
+SPEC_VERIFY = "parallel"
+
+
+def cache_position(cfg, cache):
+    """Per-slot cache write position (B,) int32 (serve/spec rollback)."""
+    return cache["pos"][0]
+
+
+def verify_step(params, cfg, tokens, cache):
+    """Speculative verify: one forward over ``tokens (B, S)`` — the pending
+    token plus S-1 draft candidates per slot — writing all S cache rows
+    through the normal decode write path.  Returns (logits (B, S, vocab),
+    cache, undo); rejected rows are swept back by `cache_rollback`."""
+    b, s = tokens.shape
+    x = nn.embed(params["embed"], tokens)
+    pos = cache["pos"][0]
+    positions = pos.astype(jnp.int32)[:, None] + jnp.arange(s, dtype=jnp.int32)[None, :]
+    x, new_cache = _scan_blocks(params, cfg, x, positions, caches=cache,
+                                spec=True)
+    x = L.norm(params["ln_f"], x, cfg)
+    return logits_fn(params, x), new_cache, None
+
+
+def cache_rollback(cfg, cache, undo, pos0, keep, n_written):
+    """Keep ``keep`` of the ``n_written`` speculative rows per slot: sweep
+    the rejected suffix's kpos to the sentinel and rewind pos."""
+    if paging.is_paged(cache):
+        return paging.rollback_attn_paged(cache, pos0, keep, n_written,
+                                          window=bool(cfg.window))
+    return paging.rollback_attn_stripe(cache, pos0, keep, n_written,
+                                       window=bool(cfg.window))
 
 
 def hinm_plan(cfg) -> list[PruneSpec]:

@@ -103,6 +103,38 @@ def decode_step(params, cfg, tokens, cache):
     return model_for(cfg).decode_step(params, cfg, tokens, cache)
 
 
+def supports_spec_decode(cfg) -> bool:
+    """Whether the family implements the speculative verify/rollback pair
+    (serve/spec).  Parallel verifiers (pure-attention stacks) are excluded
+    on windowed configs — a wrapped multi-token write would clobber live
+    ring rows; sequential verifiers (hybrid) snapshot-and-restore instead.
+    Pure-recurrent families (xlstm) have no verify path."""
+    mode = getattr(model_for(cfg), "SPEC_VERIFY", None)
+    if mode is None:
+        return False
+    return mode == "sequential" or not cfg.window
+
+
+def verify_step(params, cfg, tokens, cache):
+    """Speculative verify: forward `tokens (B, S)` (pending token + S-1
+    draft candidates per slot), writing all S cache rows.  Returns
+    (logits (B, S, vocab_padded), cache, undo)."""
+    return model_for(cfg).verify_step(params, cfg, tokens, cache)
+
+
+def cache_rollback(cfg, cache, undo, pos0, keep, n_written):
+    """Commit/rollback after a verify: keep `keep (B,)` of the `n_written`
+    speculative rows per slot (sweep or snapshot-restore the rejected
+    suffix) and rewind the position counters to `pos0 + keep`."""
+    return model_for(cfg).cache_rollback(cfg, cache, undo, pos0, keep,
+                                         n_written)
+
+
+def cache_position(cfg, cache):
+    """Per-slot cache write position (B,) int32."""
+    return model_for(cfg).cache_position(cfg, cache)
+
+
 def hinm_plan(cfg):
     return model_for(cfg).hinm_plan(cfg)
 

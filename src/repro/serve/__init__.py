@@ -3,9 +3,12 @@ from repro.serve.engine import ServeEngine
 from repro.serve.kv import SlotKVCache
 from repro.serve.request import Request, RequestState, SamplingParams, ServeStats
 from repro.serve.scheduler import Scheduler, param_bytes
+from repro.serve.spec import ModelDrafter, NgramDrafter, SpecConfig
 
 __all__ = [
     "sampler",
+    "ModelDrafter",
+    "NgramDrafter",
     "Request",
     "RequestState",
     "SamplingParams",
@@ -13,5 +16,6 @@ __all__ = [
     "ServeEngine",
     "ServeStats",
     "SlotKVCache",
+    "SpecConfig",
     "param_bytes",
 ]

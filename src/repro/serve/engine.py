@@ -23,18 +23,20 @@ __all__ = ["ServeEngine", "ServeStats"]
 
 class ServeEngine:
     def __init__(self, cfg, params, max_seq: int = 512, temperature: float = 0.0,
-                 top_k: int = 0, decode_chunk: int = 8,
+                 top_k: int = 0, top_p: float = 0.0, decode_chunk: int = 8,
                  page: int | None = 64, n_pages: int | str | None = "auto",
-                 mesh=None):
+                 mesh=None, spec=None):
         self.cfg = cfg
         self.params = params
         self.max_seq = max_seq
         self.temperature = temperature
         self.top_k = top_k
+        self.top_p = top_p
         self.decode_chunk = decode_chunk
         self.page = page
         self.n_pages = n_pages
         self.mesh = mesh
+        self.spec = spec
         self._sched: Scheduler | None = None
 
     def packed_bytes(self) -> tuple[int, int]:
@@ -45,7 +47,8 @@ class ServeEngine:
             self._sched = Scheduler(
                 self.cfg, self.params, max_slots=batch, max_seq=self.max_seq,
                 decode_chunk=self.decode_chunk, rng_seed=rng_seed,
-                page=self.page, n_pages=self.n_pages, mesh=self.mesh)
+                page=self.page, n_pages=self.n_pages, mesh=self.mesh,
+                spec=self.spec)
         else:
             self._sched.reset(rng_seed)
         return self._sched
@@ -65,7 +68,7 @@ class ServeEngine:
                 prompt=np.asarray(prompts[i], np.int32),
                 params=SamplingParams(max_new_tokens=max_new_tokens,
                                       temperature=self.temperature,
-                                      top_k=self.top_k),
+                                      top_k=self.top_k, top_p=self.top_p),
                 embeds=None if embeds is None else np.asarray(embeds[i]),
             )
             for i in range(b)

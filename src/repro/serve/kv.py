@@ -142,6 +142,8 @@ class SlotKVCache:
         # host mirror of each slot's cache-row count and row reservation
         self.slot_len = np.zeros((n_slots,), np.int64)
         self._slot_cap = np.zeros((n_slots,), np.int64)
+        # speculative commit/rollback jits, one per verify width (n_written)
+        self._rollback_jits: dict[int, object] = {}
 
     def _constrain(self, tree):
         """Pin a jitted cache update's output to the pool layout."""
@@ -273,6 +275,36 @@ class SlotKVCache:
         self.slot_len[slot] = 0
         self._slot_cap[slot] = 0
         self._free.append(slot)
+
+    def rollback(self, pos0, keep, n_written: int, undo=None) -> None:
+        """Speculative commit/rollback (serve/spec): of the ``n_written``
+        candidate rows a verify step wrote per slot starting at ``pos0``
+        (B,), keep the accepted ``keep`` (B,) and rewind the rest — kpos
+        swept back to the sentinel (paged: rejected rows become exactly
+        as unreachable as unwritten ones; the sweep of a row that went to
+        the scratch page is redirected there and is a no-op) or restored
+        from undo snapshots (sequential verifiers), with every position
+        counter rewound to ``pos0 + keep``.
+
+        No page moves: rejected rows sit inside the slot's existing
+        reservation, so the (per-shard) free list, ``pool_bytes`` and the
+        ``slot_len``/``slot_capacity`` accounting are untouched — the
+        caller advances ``slot_len`` by the emitted count it harvests,
+        which equals ``keep`` by construction.  One donated dispatch,
+        pinned back to the pool layout under a mesh."""
+        jit = self._rollback_jits.get(n_written)
+        if jit is None:
+            cfg = self.cfg
+
+            def rollback_fn(cache, undo, pos0, keep):
+                out = zoo.cache_rollback(cfg, cache, undo, pos0, keep,
+                                         n_written)
+                return self._constrain(out)
+
+            jit = self._rollback_jits[n_written] = jax.jit(
+                rollback_fn, donate_argnums=(0,))
+        self.cache = jit(self.cache, undo, jnp.asarray(pos0, jnp.int32),
+                         jnp.asarray(keep, jnp.int32))
 
     def reset_all(self) -> None:
         if self.paged:

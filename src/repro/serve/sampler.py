@@ -8,6 +8,16 @@ Temperature sampling feeds raw scaled logits to `jax.random.categorical`
 (which is softmax-invariant); the former `log(softmax(x) + 1e-9)`
 round-trip both wasted work and biased low-probability tokens (the +1e-9
 floor inflates the tail relative to the true distribution).
+
+RNG discipline: every draw uses a **per-slot, per-position** key —
+``fold_in(fold_in(base, request_seed), token_index)`` via `fold_keys` —
+so a request's sampled stream depends only on its own seed and how many
+tokens it has generated, never on which slot it landed in, who its
+co-residents are, or how many scheduler steps the pool has run.  That
+determinism is what lets speculative decoding assert spec == non-spec
+token identity on stochastic requests (serve/spec): the verify step can
+recompute the exact token the non-speculative path would have drawn at
+each position.
 """
 from __future__ import annotations
 
@@ -20,19 +30,49 @@ def greedy(logits: jax.Array) -> jax.Array:
     return jnp.argmax(logits, axis=-1).astype(jnp.int32)
 
 
-def sample(key, logits: jax.Array, temperature: jax.Array, top_k: jax.Array) -> jax.Array:
-    """Per-slot sampling. logits (B, V) float32; temperature (B,) float32
-    (<= 0 -> greedy); top_k (B,) int32 (<= 0 -> full vocab).
-    Returns token ids (B,) int32."""
-    v = logits.shape[-1]
-    pick = greedy(logits)
+def fold_keys(base_key, seeds: jax.Array, gens: jax.Array) -> jax.Array:
+    """Per-slot draw keys: fold `base_key` by request seed, then by the
+    token index the slot is about to sample. seeds/gens (B,) int32."""
+    def one(s, g):
+        return jax.random.fold_in(jax.random.fold_in(base_key, s), g)
 
-    # per-slot top-k: threshold at each row's k-th largest logit
+    return jax.vmap(one)(seeds, gens)
+
+
+def mask_logits(logits: jax.Array, top_k: jax.Array, top_p: jax.Array) -> jax.Array:
+    """Per-slot top-k then top-p (nucleus) masking.  logits (B, V) f32
+    (already temperature-scaled); top_k (B,) int32 (<= 0 -> full vocab);
+    top_p (B,) f32 (<= 0 or >= 1 -> disabled).  Nucleus keeps the smallest
+    prefix of the descending distribution whose mass reaches top_p (the
+    first token always survives); ties at the cutoff probability are kept.
+    """
+    v = logits.shape[-1]
+
     k = jnp.clip(top_k, 0, v)
     sorted_desc = jnp.flip(jnp.sort(logits, axis=-1), axis=-1)
     kth = jnp.take_along_axis(sorted_desc, jnp.maximum(k - 1, 0)[:, None], axis=1)
     masked = jnp.where((k[:, None] > 0) & (logits < kth), -jnp.inf, logits)
 
+    # nucleus on the top-k survivors: -inf rows softmax to exactly 0
+    probs = jax.nn.softmax(masked, axis=-1)
+    p_desc = jnp.flip(jnp.sort(probs, axis=-1), axis=-1)
+    cum = jnp.cumsum(p_desc, axis=-1)
+    keep = (cum - p_desc) < top_p[:, None]          # exclusive prefix mass
+    cutoff = jnp.min(jnp.where(keep, p_desc, jnp.inf), axis=-1)
+    on = (top_p > 0.0) & (top_p < 1.0)
+    return jnp.where(on[:, None] & (probs < cutoff[:, None]), -jnp.inf, masked)
+
+
+def sample(keys, logits: jax.Array, temperature: jax.Array, top_k: jax.Array,
+           top_p: jax.Array | None = None) -> jax.Array:
+    """Per-slot sampling. keys (B,) per-slot PRNG keys (see `fold_keys`);
+    logits (B, V) float32; temperature (B,) float32 (<= 0 -> greedy);
+    top_k (B,) int32 (<= 0 -> full vocab); top_p (B,) float32 (<= 0 ->
+    disabled). Returns token ids (B,) int32."""
+    pick = greedy(logits)
+    if top_p is None:
+        top_p = jnp.zeros(logits.shape[:1], jnp.float32)
     t = jnp.maximum(temperature, 1e-6)[:, None]
-    drawn = jax.random.categorical(key, masked / t, axis=-1).astype(jnp.int32)
+    masked = mask_logits(logits / t, top_k, top_p)
+    drawn = jax.vmap(jax.random.categorical)(keys, masked).astype(jnp.int32)
     return jnp.where(temperature > 0.0, drawn, pick)

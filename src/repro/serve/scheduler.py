@@ -21,11 +21,23 @@ Inactive lanes keep stepping inside a chunk (fixed-shape batch); their
 cache writes land under their own lane's `kpos` mask and are wiped by the
 slot reset on reuse, so they can never leak into a later request.
 
+Sampling draws use per-slot, per-position keys (`sampler.fold_keys`): a
+request's stochastic stream depends only on its seed and token index,
+never on slot assignment or co-residents.
+
+With `spec=SpecConfig(...)` the decode phase runs draft/verify cycles
+instead of single-token chunks (`serve/spec`): a drafter proposes `k`
+tokens per slot, one multi-token verify forward scores them all (one
+packed-weight read for up to k+1 emitted tokens per slot), and
+`SlotKVCache.rollback` commits the accepted prefix while sweeping the
+rejected rows.  Greedy and "match"-mode stochastic requests emit the
+exact non-speculative stream.
+
 With `mesh=...` the same loop runs sharded: the paged pool shards its
 page axis and the block tables their slot axis (`sharding.cache_specs`),
 params and per-slot decode state ride along replicated, and every jitted
 cache update pins its output back to the pool layout — admission and
-release stay host-side, page writes stay device-resident.  `n_pages`
+release stay host-side while page writes stay device-resident.  `n_pages`
 defaults to `"auto"` (occupancy-derived provisioning) so admission
 actually gates on free pages; pass `None` for full stripe capacity.
 """
@@ -41,6 +53,7 @@ import numpy as np
 from repro.core.types import PackedHiNM
 from repro.models import zoo
 from repro.serve import sampler
+from repro.serve import spec as spec_mod
 from repro.serve.kv import SlotKVCache
 from repro.serve.request import Request, RequestState, SamplingParams, ServeStats
 
@@ -64,7 +77,8 @@ class Scheduler:
                  decode_chunk: int = 8, rng_seed: int = 0,
                  policy: str = "continuous", cache_kw: dict | None = None,
                  page: int | None = 64, n_pages: int | str | None = "auto",
-                 bucket: bool | None = None, bucket_min: int = 8, mesh=None):
+                 bucket: bool | None = None, bucket_min: int = 8, mesh=None,
+                 spec: "spec_mod.SpecConfig | None" = None):
         if policy not in ("continuous", "static"):
             raise ValueError(f"unknown admission policy {policy!r}")
         self.cfg = cfg
@@ -101,6 +115,46 @@ class Scheduler:
         # column in benchmarks/serve_bench.py)
         self.prefill_traces = 0
 
+        # --- speculative decoding (serve/spec) ---
+        self.spec = spec
+        self.drafter = None
+        self.draft_kv = None
+        self._draft_params = None
+        if spec is not None:
+            if not zoo.supports_spec_decode(cfg):
+                raise ValueError(
+                    f"{cfg.family!r} (window={cfg.window}) has no "
+                    "speculative verify path")
+            if spec.k < 1:
+                raise ValueError("SpecConfig.k must be >= 1")
+            if spec.k + 1 > max_seq:
+                raise ValueError("SpecConfig.k + 1 exceeds max_seq")
+            if spec.cycles is not None and spec.cycles < 1:
+                raise ValueError("SpecConfig.cycles must be >= 1 (or None "
+                                 "for the decode_chunk-derived default)")
+            d = spec.drafter
+            if d == "ngram":
+                d = spec_mod.NgramDrafter(spec.ngram)
+            elif d == "model":
+                d = spec_mod.ModelDrafter.from_zoo(cfg, rng_seed)
+            if getattr(d, "kind", None) not in ("ngram", "model"):
+                raise ValueError(
+                    f"unknown drafter {d!r}: pass \"ngram\", \"model\", or a "
+                    "Drafter instance with kind in ('ngram', 'model')")
+            self.drafter = d
+            if d.kind == "model":
+                dparams = d.params
+                if mesh is not None:
+                    dparams = jax.device_put(
+                        dparams, jax.sharding.NamedSharding(
+                            mesh, jax.sharding.PartitionSpec()))
+                self._draft_params = dparams
+                # the draft model keeps its own stripe pool, rolled back in
+                # lockstep with the target so both caches always hold the
+                # same committed token stream
+                self.draft_kv = SlotKVCache(d.cfg, max_slots, max_seq,
+                                            mesh=mesh)
+
         self.kv = SlotKVCache(cfg, max_slots, max_seq, page=page,
                               n_pages=n_pages, mesh=mesh, **(cache_kw or {}))
         # enc-dec pools cache the encoder output at fixed width t_enc
@@ -109,6 +163,8 @@ class Scheduler:
         self._queue: collections.deque[Request] = collections.deque()
         self._running: dict[int, Request] = {}
         self._active_host = np.zeros((max_slots,), bool)
+        # host mirror of each slot's draft cap (spec stats accounting)
+        self._keff_host = np.zeros((max_slots,), np.int64)
         self._build()
         self._reset_state(rng_seed)
         pb, db = param_bytes(params)
@@ -120,41 +176,48 @@ class Scheduler:
         cfg, vocab, chunk = self.cfg, self._vocab, self.decode_chunk
 
         # `stochastic` is a static flag: all-greedy batches compile to a
-        # plain argmax and skip the per-step top-k sort / categorical draw
-        # (O(V log V) per lane — real money at full-tokenizer vocabs). The
-        # RNG key advances identically in both variants so the stream does
-        # not depend on which one is live.
+        # plain argmax and skip the per-step top-k/top-p sort / categorical
+        # draw (O(V log V) per lane — real money at full-tokenizer vocabs).
+        # Every draw folds (request seed, token index) into the base key,
+        # so streams are slot- and co-resident-independent.
 
-        def prefill_fn(params, tokens, cache, embeds, key, temp, topk, n_rows,
-                       stochastic):
+        def prefill_fn(params, tokens, cache, embeds, base_key, seeds, temp,
+                       topk, topp, n_rows, stochastic):
             self.prefill_traces += 1  # runs at trace time only
             last, cache = zoo.prefill(params, cfg, tokens, cache,
                                       embeds=embeds, n_rows=n_rows)
             logits = zoo.logits_fn(params, cfg, last)[:, :vocab].astype(jnp.float32)
-            first = (sampler.sample(key, logits, temp, topk) if stochastic
-                     else sampler.greedy(logits))
+            if stochastic:
+                keys = sampler.fold_keys(base_key, seeds,
+                                         jnp.zeros_like(seeds))
+                first = sampler.sample(keys, logits, temp, topk, topp)
+            else:
+                first = sampler.greedy(logits)
             return first, cache
 
         self._prefill = jax.jit(prefill_fn, static_argnames=("stochastic",))
 
-        def chunk_fn(params, cache, tok, active, rem, temp, topk, eos, key,
-                     stochastic):
+        def chunk_fn(params, cache, tok, active, rem, temp, topk, topp, eos,
+                     seeds, gens, base_key, stochastic):
             def step(carry, _):
-                cache, tok, active, rem, key = carry
+                cache, tok, active, rem, gens = carry
                 logits, cache = zoo.decode_step(params, cfg, tok, cache)
                 logits = logits[:, :vocab].astype(jnp.float32)
-                key, sub = jax.random.split(key)
-                nxt = (sampler.sample(sub, logits, temp, topk) if stochastic
-                       else sampler.greedy(logits))
+                if stochastic:
+                    keys = sampler.fold_keys(base_key, seeds, gens)
+                    nxt = sampler.sample(keys, logits, temp, topk, topp)
+                else:
+                    nxt = sampler.greedy(logits)
                 emit = jnp.where(active, nxt, -1)
+                gens = gens + active.astype(jnp.int32)
                 rem = rem - active.astype(jnp.int32)
                 hit_eos = active & (eos >= 0) & (nxt == eos)
                 active = active & ~hit_eos & (rem > 0)
                 tok = jnp.where(active, nxt, tok[:, 0])[:, None]
-                return (cache, tok, active, rem, key), emit
+                return (cache, tok, active, rem, gens), emit
 
             carry, emits = jax.lax.scan(
-                step, (cache, tok, active, rem, key), None, length=chunk)
+                step, (cache, tok, active, rem, gens), None, length=chunk)
             if self.kv.shardings is not None:
                 # pin the scanned cache back to its page/slot-axis layout so
                 # chunked decode can't drift the pool off its shards
@@ -162,15 +225,87 @@ class Scheduler:
                     carry[0], self.kv.shardings),) + carry[1:]
             return carry + (emits,)
 
-        self._chunk = jax.jit(chunk_fn, donate_argnums=(1, 2, 3, 4, 8),
+        self._chunk = jax.jit(chunk_fn, donate_argnums=(1, 2, 3, 4, 10),
                               static_argnames=("stochastic",))
 
-        def set_slot(tok, active, rem, temp, topk, eos, slot, first, r, t, k, e):
+        def set_slot(tok, active, rem, temp, topk, topp, eos, seeds, gens,
+                     keff, match, hist, hlen, slot, first, r, t, k, p, e, sd,
+                     ke, mf, prow, plen):
             return (tok.at[slot, 0].set(first), active.at[slot].set(True),
                     rem.at[slot].set(r), temp.at[slot].set(t),
-                    topk.at[slot].set(k), eos.at[slot].set(e))
+                    topk.at[slot].set(k), topp.at[slot].set(p),
+                    eos.at[slot].set(e), seeds.at[slot].set(sd),
+                    gens.at[slot].set(1), keff.at[slot].set(ke),
+                    match.at[slot].set(mf), hist.at[slot].set(prow),
+                    hlen.at[slot].set(plen))
 
-        self._set_slot = jax.jit(set_slot, donate_argnums=(0, 1, 2, 3, 4, 5))
+        self._set_slot = jax.jit(
+            set_slot, donate_argnums=tuple(range(13)))
+
+        if self.spec is None:
+            return
+
+        s_width = self.spec.k + 1
+
+        def verify_fn(params, cache, drafts, tok, active, rem, temp, topk,
+                      topp, eos, seeds, gens, keff, match, hist, hlen,
+                      base_key, stochastic, any_reject):
+            pos0 = zoo.cache_position(cfg, cache)
+            tokens = jnp.concatenate([tok, drafts], axis=1)
+            logits, cache, undo = zoo.verify_step(params, cfg, tokens, cache)
+            logits = logits[..., :vocab].astype(jnp.float32)
+            emits, cnt, judged, tok, active, rem, gens = spec_mod.acceptance(
+                logits, drafts, tok, base_key=base_key, seeds=seeds,
+                gens=gens, temp=temp, topk=topk, topp=topp, eos=eos, rem=rem,
+                active=active, k_eff=keff, match=match, stochastic=stochastic,
+                any_reject=any_reject)
+            hist, hlen = spec_mod.append_history(hist, hlen, emits, cnt)
+            return (self.kv._constrain(cache), undo, pos0, emits, cnt, judged,
+                    tok, active, rem, gens, hist, hlen)
+
+        self._verify = jax.jit(verify_fn, donate_argnums=(1, 3, 4, 5, 11, 14, 15),
+                               static_argnames=("stochastic", "any_reject"))
+
+        if self.drafter.kind == "ngram":
+            n = self.drafter.n
+
+            def propose_fn(hist, hlen, tok):
+                return spec_mod.ngram_propose(hist, hlen, tok,
+                                              self.spec.k, n=n)
+
+            self._propose = jax.jit(propose_fn)
+        else:
+            dcfg = self.drafter.cfg
+            vcap = min(dcfg.vocab, vocab)
+            k_draft = self.spec.k
+
+            def draft_propose_fn(dparams, dcache, tok):
+                dpos0 = zoo.cache_position(dcfg, dcache)
+
+                def stp(carry, _):
+                    dc, t = carry
+                    lg, dc = zoo.decode_step(dparams, dcfg, t, dc)
+                    nxt = jnp.argmax(
+                        lg[:, :vcap], axis=-1).astype(jnp.int32)[:, None]
+                    return (dc, nxt), nxt[:, 0]
+
+                # s_width steps: the extra step writes the last draft's own
+                # KV row, so the draft cache tracks the target row-for-row
+                # and the same accept count rolls both back
+                (dc, _), ds = jax.lax.scan(stp, (dcache, tok), None,
+                                           length=s_width)
+                return (jnp.moveaxis(ds, 0, 1)[:, :k_draft], dpos0,
+                        self.draft_kv._constrain(dc))
+
+            self._draft_propose = jax.jit(draft_propose_fn,
+                                          donate_argnums=(1,))
+
+            def draft_prefill_fn(dparams, tokens, dcache, n_rows):
+                _, dc = zoo.prefill(dparams, dcfg, tokens, dcache,
+                                    n_rows=n_rows)
+                return dc
+
+            self._draft_prefill = jax.jit(draft_prefill_fn)
 
     def _reset_state(self, rng_seed: int) -> None:
         s = self.max_slots
@@ -179,7 +314,18 @@ class Scheduler:
         self._rem = jnp.zeros((s,), jnp.int32)
         self._temp = jnp.zeros((s,), jnp.float32)
         self._topk = jnp.zeros((s,), jnp.int32)
+        self._topp = jnp.zeros((s,), jnp.float32)
         self._eos = jnp.full((s,), -1, jnp.int32)
+        self._seeds = jnp.zeros((s,), jnp.int32)
+        self._gens = jnp.zeros((s,), jnp.int32)
+        self._keff = jnp.zeros((s,), jnp.int32)
+        self._match = jnp.ones((s,), bool)
+        # per-slot token history (prompt + emitted): the n-gram drafter's
+        # lookup corpus; sized for prompt + max_new, which max_seq bounds
+        self._hist = jnp.zeros((s, self.max_seq), jnp.int32)
+        self._hlen = jnp.zeros((s,), jnp.int32)
+        # base PRNG key: never split — every draw folds in (request seed,
+        # token index), so streams are reproducible per request
         self._key = jax.random.PRNGKey(rng_seed)
         if self.mesh is not None:
             # per-slot decode state rides along replicated: the chunk jit
@@ -187,16 +333,21 @@ class Scheduler:
             rep = jax.sharding.NamedSharding(self.mesh,
                                              jax.sharding.PartitionSpec())
             (self._tok, self._active, self._rem, self._temp, self._topk,
-             self._eos, self._key) = jax.device_put(
+             self._topp, self._eos, self._seeds, self._gens, self._keff,
+             self._match, self._hist, self._hlen, self._key) = jax.device_put(
                 (self._tok, self._active, self._rem, self._temp, self._topk,
-                 self._eos, self._key), rep)
+                 self._topp, self._eos, self._seeds, self._gens, self._keff,
+                 self._match, self._hist, self._hlen, self._key), rep)
         self._active_host[:] = False
+        self._keff_host[:] = 0
 
     def reset(self, rng_seed: int = 0) -> None:
         """Drop all queued/running requests and restore pristine state."""
         self._queue.clear()
         self._running.clear()
         self.kv.reset_all()
+        if self.draft_kv is not None:
+            self.draft_kv.reset_all()
         self._reset_state(rng_seed)
         self.stats = ServeStats(
             0.0, 0.0, 0, self.stats.packed_param_bytes, self.stats.dense_param_bytes)
@@ -244,6 +395,10 @@ class Scheduler:
             raise ValueError(
                 f"request {req.rid}: {req.embeds.shape[0]} encoder frames "
                 f"exceed the pool's t_enc {self._t_enc}")
+        if req.params.spec_accept not in ("match", "reject"):
+            raise ValueError(
+                f"request {req.rid}: unknown spec_accept "
+                f"{req.params.spec_accept!r}")
         req.state = RequestState.QUEUED
         req.submit_time = time.perf_counter()
         self._queue.append(req)
@@ -252,6 +407,15 @@ class Scheduler:
         if req.params.eos_id is not None:
             return req.params.eos_id if 0 <= req.params.eos_id < self._vocab else -1
         return self.default_eos
+
+    def _eff_seed(self, req: Request) -> int:
+        return req.params.seed if req.params.seed is not None else req.rid
+
+    def _eff_keff(self, req: Request) -> int:
+        if self.spec is None:
+            return 0
+        k = req.params.spec_k
+        return self.spec.k if k is None else max(0, min(k, self.spec.k))
 
     def _finish(self, req: Request, finished: list[Request]) -> None:
         req.state = RequestState.FINISHED
@@ -317,12 +481,15 @@ class Scheduler:
                 k_b *= 2
             tokens = np.zeros((k_b, s_b), np.int32)
             n_rows = np.zeros((k_b,), np.int32)
+            d_rows = np.zeros((k_b,), np.int32)
             for i in range(k_b):
                 r = group[min(i, k - 1)]
                 tokens[i, : len(r.prompt)] = r.prompt
                 n_rows[i] = self._cache_rows(r)
+                d_rows[i] = len(r.prompt)
             tokens = jnp.asarray(tokens)
             n_rows_dev = jnp.asarray(n_rows)
+            d_rows_dev = jnp.asarray(d_rows)
             def pad(a):
                 return (np.concatenate([a, np.repeat(a[-1:], k_b - k, axis=0)])
                         if k_b > k else a)
@@ -332,20 +499,32 @@ class Scheduler:
             temps = pad(np.asarray([r.params.temperature for r in group],
                                    np.float32))
             topks = pad(np.asarray([r.params.top_k for r in group], np.int32))
+            topps = pad(np.asarray([r.params.top_p for r in group], np.float32))
+            seeds = pad(np.asarray([self._eff_seed(r) for r in group], np.int32))
         else:
             k_b = k
             tokens = jnp.asarray(np.stack([r.prompt for r in group]), jnp.int32)
             n_rows_dev = None
+            d_rows_dev = None
             embeds = (None if group[0].embeds is None
                       else jnp.asarray(np.stack([r.embeds for r in group])))
             temps = np.asarray([r.params.temperature for r in group], np.float32)
             topks = np.asarray([r.params.top_k for r in group], np.int32)
-        self._key, sub = jax.random.split(self._key)
+            topps = np.asarray([r.params.top_p for r in group], np.float32)
+            seeds = np.asarray([self._eff_seed(r) for r in group], np.int32)
         t0 = time.perf_counter()
         first, cache_k = self._prefill(
-            self.params, tokens, self.kv.template(k_b), embeds, sub,
-            jnp.asarray(temps), jnp.asarray(topks), n_rows_dev,
+            self.params, tokens, self.kv.template(k_b), embeds, self._key,
+            jnp.asarray(seeds), jnp.asarray(temps), jnp.asarray(topks),
+            jnp.asarray(topps), n_rows_dev,
             stochastic=bool((temps[:k] > 0).any()))
+        draft_cache_k = None
+        if self.draft_kv is not None:
+            # the draft model prefills the same prompts into its own pool
+            # (token rows only: a modality frontend is the target's)
+            draft_cache_k = self._draft_prefill(
+                self._draft_params, tokens, self.draft_kv.template(k_b),
+                d_rows_dev)
         first_np = np.asarray(first)  # one sync per admitted group (= TTFT)
         now = time.perf_counter()
         self.stats.prefill_seconds += now - t0
@@ -365,25 +544,53 @@ class Scheduler:
             slot = self.kv.acquire()
             self.kv.insert(slot, cache_k, self._cache_rows(req), row=row,
                            reserve=self._reserve_rows(req))
+            if self.draft_kv is not None:
+                dslot = self.draft_kv.acquire()
+                assert dslot == slot, "draft pool diverged from target pool"
+                self.draft_kv.insert(slot, draft_cache_k, len(req.prompt),
+                                     row=row,
+                                     reserve=len(req.prompt) + p.max_new_tokens)
+            keff = self._eff_keff(req)
+            prow = np.zeros((self.max_seq,), np.int32)
+            plen = min(len(req.prompt), self.max_seq - 1)
+            prow[:plen] = req.prompt[:plen]
+            prow[plen] = first_i
             (self._tok, self._active, self._rem, self._temp, self._topk,
-             self._eos) = self._set_slot(
+             self._topp, self._eos, self._seeds, self._gens, self._keff,
+             self._match, self._hist, self._hlen) = self._set_slot(
                 self._tok, self._active, self._rem, self._temp, self._topk,
-                self._eos, slot, first_i, p.max_new_tokens - 1,
-                p.temperature, p.top_k, eos)
+                self._topp, self._eos, self._seeds, self._gens, self._keff,
+                self._match, self._hist, self._hlen, slot, first_i,
+                p.max_new_tokens - 1, p.temperature, p.top_k, p.top_p, eos,
+                self._eff_seed(req), keff, p.spec_accept == "match",
+                jnp.asarray(prow), plen + 1)
             self._active_host[slot] = True
+            self._keff_host[slot] = keff
             req.state = RequestState.DECODING
             req.slot = slot
             self._running[slot] = req
 
+    def _release_slot(self, slot: int) -> None:
+        self.kv.release(slot)
+        if self.draft_kv is not None:
+            self.draft_kv.release(slot)
+        self._running.pop(slot)
+        self._active_host[slot] = False
+        self._keff_host[slot] = 0
+
     def _decode_and_harvest(self, finished: list[Request]) -> None:
         if not self._active_host.any():
             return
+        if self.spec is not None:
+            self._spec_decode_and_harvest(finished)
+            return
         stochastic = any(r.params.temperature > 0 for r in self._running.values())
         t0 = time.perf_counter()
-        (self.kv.cache, self._tok, self._active, self._rem, self._key,
+        (self.kv.cache, self._tok, self._active, self._rem, self._gens,
          emits) = self._chunk(
             self.params, self.kv.cache, self._tok, self._active, self._rem,
-            self._temp, self._topk, self._eos, self._key, stochastic=stochastic)
+            self._temp, self._topk, self._topp, self._eos, self._seeds,
+            self._gens, self._key, stochastic=stochastic)
         emits = np.asarray(emits)                 # (chunk, slots) — one sync
         active_np = np.asarray(self._active)
         self.stats.decode_seconds += time.perf_counter() - t0
@@ -410,9 +617,88 @@ class Scheduler:
                 f"corrupt a neighbor page")
             if not active_np[slot]:
                 self._finish(req, finished)
-                self.kv.release(slot)
-                self._running.pop(slot)
-                self._active_host[slot] = False
+                self._release_slot(slot)
+
+    def _spec_decode_and_harvest(self, finished: list[Request]) -> None:
+        """Draft/verify decode: each cycle proposes k draft tokens per slot,
+        verifies all of them with ONE target forward, commits the accepted
+        prefix and rolls the rejected rows back — up to k+1 tokens per slot
+        per packed-weight read.  Like the chunk loop, the only host sync is
+        the stacked emit matrix once per step."""
+        s_width = self.spec.k + 1
+        cycles = (self.spec.cycles if self.spec.cycles is not None
+                  else max(1, self.decode_chunk // s_width))
+        stochastic = any(r.params.temperature > 0 for r in self._running.values())
+        # static specialization: the rejection-sampling pipeline only
+        # compiles in when some stochastic lane actually opted into it
+        any_reject = any(r.params.temperature > 0
+                         and r.params.spec_accept == "reject"
+                         for r in self._running.values())
+        t0 = time.perf_counter()
+        emits_dev, cnts_dev, judged_dev = [], [], []
+        for _ in range(cycles):
+            if self.draft_kv is not None:
+                drafts, dpos0, self.draft_kv.cache = self._draft_propose(
+                    self._draft_params, self.draft_kv.cache, self._tok)
+            else:
+                drafts = self._propose(self._hist, self._hlen, self._tok)
+                dpos0 = None
+            (self.kv.cache, undo, pos0, emits, cnt, judged, self._tok,
+             self._active, self._rem, self._gens, self._hist,
+             self._hlen) = self._verify(
+                self.params, self.kv.cache, drafts, self._tok, self._active,
+                self._rem, self._temp, self._topk, self._topp, self._eos,
+                self._seeds, self._gens, self._keff, self._match, self._hist,
+                self._hlen, self._key, stochastic=stochastic,
+                any_reject=any_reject)
+            self.kv.rollback(pos0, cnt, s_width, undo=undo)
+            if dpos0 is not None:
+                self.draft_kv.rollback(dpos0, cnt, s_width)
+            emits_dev.append(emits)
+            cnts_dev.append(cnt)
+            judged_dev.append(judged)
+        emits_np = np.asarray(jnp.stack(emits_dev))   # (cycles, slots, k+1)
+        cnts_np = np.asarray(jnp.stack(cnts_dev))     # (cycles, slots)
+        judged_np = np.asarray(jnp.stack(judged_dev))  # (cycles, slots)
+        active_np = np.asarray(self._active)
+        self.stats.decode_seconds += time.perf_counter() - t0
+        self.stats.decode_steps += cycles
+        self.stats.verify_steps += cycles
+
+        # lanes that emitted in a cycle share that cycle's weight read
+        width = np.maximum((cnts_np > 0).sum(axis=1), 1)
+        for slot, req in list(self._running.items()):
+            cnts = cnts_np[:, slot]
+            rode = cnts > 0
+            col = emits_np[:, slot, :].reshape(-1)
+            new = col[col >= 0].tolist()
+            # acceptance accounting counts only draft verdicts that reached
+            # the stream (accepted drafts + an emitted correction's
+            # rejection): drafts past an EOS or budget cut were never
+            # judgeable, so counting them would misreport truncated cycles
+            # as rejections (`judged` from spec.acceptance)
+            proposed = int(judged_np[:, slot].sum())
+            req.tokens.extend(new)
+            req.shared_decode_steps += float((1.0 / width)[rode].sum())
+            accepted = int(np.maximum(cnts - 1, 0).sum())
+            req.spec_verify_steps += int(rode.sum())
+            req.spec_proposed += proposed
+            req.spec_accepted += accepted
+            self.stats.lane_verify_steps += int(rode.sum())
+            self.stats.draft_proposed += proposed
+            self.stats.draft_accepted += accepted
+            self.stats.tokens_generated += len(new)
+            self.stats.decode_tokens += len(new)
+            # one committed cache row per emitted token, same invariant as
+            # the chunk loop (rollback already rewound the rejected rows)
+            self.kv.slot_len[slot] += len(new)
+            cap = self.kv.slot_capacity(slot)
+            assert self.kv.slot_len[slot] <= cap, (
+                f"slot {slot}: {self.kv.slot_len[slot]} cache rows exceed "
+                f"the {cap}-row reservation — speculative rollback drifted")
+            if not active_np[slot]:
+                self._finish(req, finished)
+                self._release_slot(slot)
 
     def step(self) -> list[Request]:
         """One scheduler iteration: admit into free slots, run one decode

@@ -1,0 +1,55 @@
+"""Speculative decoding for the serving runtime (`Scheduler(spec=...)`).
+
+Decode is weight-bandwidth-bound: every non-speculative step reads the
+whole packed model to emit ONE token per slot.  Speculation flips the
+ratio — a drafter guesses ``k`` tokens per slot (`drafter.py`), one
+multi-token verify forward scores all of them against the target model
+(`verify.py` + `zoo.verify_step`), and the paged slot pool commits the
+accepted prefix while rolling the rejected suffix back
+(`serve.kv.SlotKVCache.rollback`).  Each verify is one packed-weight
+read that can emit up to ``k + 1`` tokens per slot, so the HiNM packed
+format's bytes-per-token win multiplies by the acceptance-weighted
+tokens-per-verify — without changing a single emitted token (greedy and
+"match"-mode stochastic decode are token-identical to the
+non-speculative stream; `tests/serve_conformance.py` pins it across
+family x layout x sharding).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.serve.spec.drafter import (Drafter, ModelDrafter, NgramDrafter,
+                                      append_history, ngram_propose)
+from repro.serve.spec.verify import acceptance, position_keys
+
+__all__ = [
+    "Drafter",
+    "ModelDrafter",
+    "NgramDrafter",
+    "SpecConfig",
+    "acceptance",
+    "append_history",
+    "ngram_propose",
+    "position_keys",
+]
+
+
+@dataclasses.dataclass
+class SpecConfig:
+    """Pool-level speculative-decoding configuration.
+
+    ``k`` — draft tokens per verify step (verify width is k + 1); requests
+    can lower their own cap via `SamplingParams.spec_k` (0 = off for that
+    request; it still rides the verify batch at one token per step).
+    ``drafter`` — "ngram" (host-free prompt lookup), "model" (resolve the
+    target's `draft_arch` pairing with random init), or a `Drafter`
+    instance (the way to supply real draft weights or a reduced config).
+    ``ngram`` — lookup n-gram order for the ngram drafter.
+    ``cycles`` — draft/verify cycles per scheduler step (None -> about
+    one non-speculative chunk's worth: max(1, decode_chunk // (k + 1))).
+    """
+
+    k: int = 4
+    drafter: object = "ngram"
+    ngram: int = 2
+    cycles: int | None = None

@@ -1,0 +1,129 @@
+"""Draft-token proposal sources for speculative decoding.
+
+A drafter guesses the next ``k`` tokens of every active slot; the verify
+step then scores all guesses with ONE packed-weight read (`spec/verify`).
+Two implementations:
+
+``NgramDrafter`` — host-free self-speculative prompt lookup.  The
+scheduler keeps a device-resident per-slot token history (prompt +
+emitted tokens); `ngram_propose` finds the most recent earlier occurrence
+of the trailing n-gram in that history and proposes the tokens that
+followed it.  No extra model, no extra weight traffic: acceptance is high
+exactly when the output re-walks its own context (templated/repetitive
+prompts, code infilling, summaries quoting the source).
+
+``ModelDrafter`` — a paired small model (e.g. qwen2_0_5b drafting for
+qwen2_5_14b, declared as ``ArchConfig.draft_arch`` and resolved via
+`from_zoo`).  The scheduler runs it autoregressively for ``k + 1`` greedy
+steps per cycle in its own stripe `SlotKVCache`; the extra step writes
+the last draft's own KV row so the draft cache tracks the target cache
+row-for-row and the SAME accept count rolls both back (`serve/kv.py`).
+Costs draft-model weight reads and prefill; wins when the draft actually
+predicts the target (trained pairs), loses to the free n-gram drafter
+when it cannot (see serve/README.md).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ngram_propose(hist: jax.Array, hlen: jax.Array, tok: jax.Array,
+                  k: int, n: int = 2) -> jax.Array:
+    """Prompt-lookup proposals.  hist (B, H) int32 token history (prompt +
+    emitted, the pending token last); hlen (B,) valid rows; tok (B, 1) the
+    pending token (== hist[hlen-1]).  Finds the latest j < hlen - n with
+    ``hist[j:j+n] == hist[hlen-n:hlen]`` and proposes
+    ``hist[j+n : j+n+k]``; positions with no match (or past the history)
+    fall back to repeating the pending token — a cheap guess the verify
+    step simply rejects."""
+    b, h = hist.shape
+    ar = jnp.arange(h, dtype=jnp.int32)
+    # trailing n-gram per slot (clamped reads are masked by the hlen check)
+    gram = jnp.stack([
+        jnp.take_along_axis(
+            hist, jnp.clip(hlen - n + i, 0, h - 1)[:, None], axis=1)[:, 0]
+        for i in range(n)], axis=1)                          # (B, n)
+    ok = jnp.ones((b, h - n + 1), bool)
+    for i in range(n):
+        ok &= hist[:, i: h - n + 1 + i] == gram[:, i][:, None]
+    j_ar = jnp.arange(h - n + 1, dtype=jnp.int32)
+    cand = jnp.where(ok & (j_ar[None, :] < (hlen - n)[:, None]), j_ar[None, :], -1)
+    jbest = jnp.max(cand, axis=1)                            # (B,) -1 = none
+    start = jbest + n
+    idx = start[:, None] + jnp.arange(k, dtype=jnp.int32)[None, :]
+    guess = jnp.take_along_axis(hist, jnp.clip(idx, 0, h - 1), axis=1)
+    usable = (jbest[:, None] >= 0) & (idx < hlen[:, None])
+    return jnp.where(usable, guess, tok).astype(jnp.int32)
+
+
+def append_history(hist: jax.Array, hlen: jax.Array, emits: jax.Array,
+                   cnt: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Append each slot's ``cnt`` emitted tokens (``emits (B, S)``, -1 pad)
+    to its history.  Writes past the buffer are dropped (the buffer is
+    sized for prompt + max_new, so that only pads)."""
+    b, s = emits.shape
+    h = hist.shape[1]
+    ar = jnp.arange(s, dtype=jnp.int32)
+    idx = hlen[:, None] + ar[None, :]
+    bidx = jnp.arange(b)[:, None]
+    live = ar[None, :] < cnt[:, None]
+    cur = hist[bidx, jnp.clip(idx, 0, h - 1)]
+    new = jnp.where(live, emits, cur)
+    hist = hist.at[bidx, jnp.clip(idx, 0, h - 1)].set(new)
+    return hist, hlen + cnt
+
+
+class Drafter:
+    """Interface: `kind` tags how the scheduler wires proposals."""
+
+    kind = ""
+
+
+class NgramDrafter(Drafter):
+    """Self-speculative prompt-lookup drafter (no draft model)."""
+
+    kind = "ngram"
+
+    def __init__(self, n: int = 2):
+        if n < 1:
+            raise ValueError("n-gram order must be >= 1")
+        self.n = n
+
+
+class ModelDrafter(Drafter):
+    """Paired small draft model with its own stripe KV pool."""
+
+    kind = "model"
+
+    def __init__(self, cfg, params):
+        if cfg.family not in ("dense", "moe"):
+            raise ValueError(
+                f"draft model family {cfg.family!r} is not supported: the "
+                "drafter decodes plain token prompts (no embeds frontend)")
+        self.cfg = cfg
+        self.params = params
+
+    @classmethod
+    def from_zoo(cls, target_cfg, rng_seed: int = 0, reduced: dict | None = None):
+        """Resolve ``target_cfg.draft_arch`` via configs and init params.
+        ``reduced`` overrides shrink the draft to match a `.reduced()`
+        target (vocabularies must line up: drafts are ids the target
+        scores).  Params are randomly initialised — plug checkpointed
+        weights in via the constructor for a real deployment."""
+        from repro.configs.base import load_arch
+        from repro.models import zoo
+
+        arch = getattr(target_cfg, "draft_arch", "")
+        if not arch:
+            raise ValueError(
+                f"{target_cfg.name}: no draft_arch pairing declared")
+        cfg = load_arch(arch)
+        if reduced is not None:
+            cfg = cfg.reduced(**reduced)
+        if cfg.vocab > target_cfg.vocab:
+            raise ValueError(
+                f"draft vocab {cfg.vocab} exceeds target vocab "
+                f"{target_cfg.vocab}: drafts would be unscorable ids")
+        params = zoo.init(jax.random.PRNGKey(rng_seed), cfg)
+        return cls(cfg, params)

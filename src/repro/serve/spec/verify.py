@@ -1,0 +1,151 @@
+"""Acceptance logic for the multi-token verify step.
+
+One verify forward scores ``S = k + 1`` input tokens per slot — the
+pending token followed by k draft candidates — producing ``logits[:, i]``
+= the target model's distribution for the token AFTER input i.  From
+those distributions `acceptance` decides, fully vectorized per slot:
+
+* **greedy slots** (temperature <= 0): accept the leading run of drafts
+  matching the argmax chain, then emit the argmax at the first mismatch
+  (the "correction") or after a full run (the "bonus").  Because an
+  accepted draft IS the argmax of its prefix, the emitted tokens are
+  exactly the non-speculative greedy stream.
+
+* **stochastic slots, "match"** (default): identical scheme, but the
+  per-position target token is the one `sampler.sample` draws with the
+  slot's per-position key (`sampler.fold_keys`) — i.e. the exact token
+  the non-speculative loop would have sampled at that stream index, so
+  spec decode is token-identical even under temperature/top-k/top-p.
+  Acceptance = P(draft guesses the sampled token).
+
+* **stochastic slots, "reject"**: classic speculative rejection sampling
+  against the delta proposal of a greedy drafter — accept draft d_i with
+  probability p_i(d_i); on the first rejection draw the replacement from
+  p_i masked at d_i (the residual of p - delta_d), after a full run draw
+  the bonus from p_K.  Unbiased (each emitted token is distributed
+  exactly as non-speculative sampling) with strictly higher acceptance
+  than "match", but a different stream.
+
+Emission is then capped by the slot's remaining token budget and cut at
+the first EOS; the count doubles as the cache-row ``keep`` for
+`SlotKVCache.rollback` (every emitted token has exactly one committed
+row: the pending token's row plus one per accepted draft — the newest
+emitted token's row is, as everywhere in this runtime, not yet written).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.serve import sampler
+
+
+def position_keys(base_key, seeds: jax.Array, gens: jax.Array, s: int):
+    """(B, S) draw keys: key[b, i] is exactly the key the non-speculative
+    loop uses for slot b's token index gens[b] + i."""
+    def row(seed, g0):
+        kb = jax.random.fold_in(base_key, seed)
+        return jax.vmap(lambda i: jax.random.fold_in(kb, g0 + i))(
+            jnp.arange(s, dtype=jnp.int32))
+
+    return jax.vmap(row)(seeds, gens)
+
+
+def acceptance(logits, drafts, tok, *, base_key, seeds, gens, temp, topk,
+               topp, eos, rem, active, k_eff, match, stochastic: bool,
+               any_reject: bool = True):
+    """Vectorized accept/emit for one verify step.
+
+    logits (B, S, V) f32; drafts (B, S-1) int32; tok (B, 1) pending token.
+    Per-slot vectors: temp/topp f32, topk/eos/rem/gens/seeds/k_eff int32,
+    active/match bool.  `stochastic` is the usual static all-greedy
+    specialization flag; `any_reject` statically elides the rejection-
+    sampling pipeline (probs, uniform and residual draws) when every
+    stochastic lane uses the default "match" rule — there its outputs
+    would all be discarded by the use_match select.  Returns (emits
+    (B, S) int32 with -1 padding, cnt (B,) emitted == cache rows kept,
+    judged (B,) drafts whose verdict reached the stream (the
+    acceptance-rate denominator), tok', active', rem', gens')."""
+    b, s, v = logits.shape
+    k = s - 1
+    ar = jnp.arange(s, dtype=jnp.int32)
+
+    g_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)    # (B, S)
+    use_reject = stochastic and any_reject
+    if stochastic:
+        keys = position_keys(base_key, seeds, gens, s)       # (B, S) keys
+        kflat = lambda ks, m: ks.reshape((m,) + ks.shape[2:])  # noqa: E731
+        flat = lambda a: jnp.repeat(a, s)                    # noqa: E731
+        lg_flat = logits.reshape(b * s, v)
+        keys_flat = kflat(keys, b * s)
+        samp = sampler.sample(keys_flat, lg_flat, flat(temp), flat(topk),
+                              flat(topp)).reshape(b, s)
+        tgt = jnp.where((temp > 0)[:, None], samp, g_tok)
+    else:
+        tgt = g_tok
+    if use_reject:
+        # rejection sampling against the drafter's delta proposal
+        t = jnp.maximum(temp, 1e-6)
+        masked = sampler.mask_logits(
+            lg_flat / flat(t)[:, None], flat(topk), flat(topp)).reshape(b, s, v)
+        probs = jax.nn.softmax(masked, axis=-1)
+        p_draft = jnp.take_along_axis(
+            probs[:, :k], drafts[..., None], axis=-1)[..., 0]  # (B, k)
+        def fold_tag(ks, tag):
+            return jax.vmap(lambda kk: jax.random.fold_in(kk, tag))(ks)
+
+        u = jax.vmap(jax.random.uniform)(
+            fold_tag(keys_flat, 1)).reshape(b, s)[:, :k]
+        rs_accept = u < p_draft
+        # residual draw: p with the rejected draft removed (delta proposal)
+        res_logits = jnp.where(
+            jax.nn.one_hot(drafts, v, dtype=bool), -jnp.inf, masked[:, :k])
+        res = jax.vmap(jax.random.categorical)(
+            fold_tag(kflat(keys[:, :k], b * k), 2),
+            res_logits.reshape(b * k, v)).astype(jnp.int32).reshape(b, k)
+    else:
+        rs_accept = jnp.zeros((b, k), bool)
+        res = jnp.zeros((b, k), jnp.int32)
+
+    use_match = match | (temp <= 0)
+    hit = jnp.where(use_match[:, None], drafts == tgt[:, :k], rs_accept)
+    hit &= ar[None, :k] < k_eff[:, None]       # per-request draft-len cap
+    n_acc = jnp.cumprod(hit.astype(jnp.int32), axis=1).sum(axis=1)  # (B,)
+
+    # token emitted at position i: accepted draft (i < n), else the
+    # correction/bonus (i == n): match mode -> the target token; reject
+    # mode -> residual draw (mismatch) or plain sample (full run)
+    corr = tgt
+    if use_reject:
+        corr_rej = jnp.concatenate([res, tgt[:, k:]], axis=1)
+        corr = jnp.where(use_match[:, None], tgt, corr_rej)
+    pad_drafts = jnp.concatenate(
+        [drafts, jnp.zeros((b, 1), jnp.int32)], axis=1)
+    emits0 = jnp.where(ar[None, :] < n_acc[:, None], pad_drafts,
+                       jnp.where(ar[None, :] == n_acc[:, None], corr, -1))
+
+    cnt = jnp.minimum(n_acc + 1, rem)
+    is_eos = (eos[:, None] >= 0) & (emits0 == eos[:, None]) & (
+        ar[None, :] < cnt[:, None])
+    first_eos = jnp.argmax(is_eos, axis=1).astype(jnp.int32)
+    cnt = jnp.where(is_eos.any(axis=1), jnp.minimum(cnt, first_eos + 1), cnt)
+    cnt = jnp.where(active, cnt, 0)
+
+    emits = jnp.where(ar[None, :] < cnt[:, None], emits0, -1)
+    last = jnp.take_along_axis(
+        emits0, jnp.maximum(cnt - 1, 0)[:, None], axis=1)[:, 0]
+    hit_eos = is_eos.any(axis=1) & active
+    rem2 = rem - cnt
+    active2 = active & ~hit_eos & (rem2 > 0)
+    tok2 = jnp.where(active2, last, tok[:, 0])[:, None]
+    gens2 = gens + cnt
+    # judged draft count for the acceptance-rate stats: the cnt-1 accepted
+    # drafts that reached the stream, plus the one draft whose REJECTION
+    # reached it (its correction was the emitted token: cnt ran to
+    # n_acc+1 with the run stopped by a mismatch, not by the k_eff cap).
+    # Drafts beyond an EOS or budget cut were never judgeable in the true
+    # stream and are not counted against the drafter.
+    judged = jnp.maximum(cnt - 1, 0) + (
+        (cnt == n_acc + 1) & (n_acc < k_eff)).astype(jnp.int32)
+    judged = jnp.where(cnt > 0, judged, 0)
+    return emits, cnt, judged, tok2, active2, rem2, gens2

@@ -41,7 +41,8 @@ except ImportError:  # `python tests/serve_conformance.py <mode>` driver
 from repro import compat
 from repro.configs.base import load_arch
 from repro.models import paging, zoo
-from repro.serve import Request, SamplingParams, Scheduler, SlotKVCache
+from repro.serve import (ModelDrafter, Request, SamplingParams, Scheduler,
+                         SlotKVCache, SpecConfig)
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 N_DEVICES = 4
@@ -119,10 +120,11 @@ def _workload(family):
 
 
 def scheduler_tokens(family, layout, mesh=None, n_pages="auto",
-                     max_slots=4, decode_chunk=4):
+                     max_slots=4, decode_chunk=4, spec=None):
     """Drive the family workload through a Scheduler; returns (tokens list
     per request, scheduler).  layout: "paged" | "stripe" ("stripe" is the
-    PR 2 baseline: exact-length admission, per-slot max_seq stripes)."""
+    PR 2 baseline: exact-length admission, per-slot max_seq stripes);
+    spec: a SpecConfig for speculative draft/verify decode."""
     c = _CASES[family]
     cfg, params = _model(family)
     prompts, embeds = _workload(family)
@@ -132,7 +134,7 @@ def scheduler_tokens(family, layout, mesh=None, n_pages="auto",
     else:
         kw.update(page=None, bucket=False)
     sched = Scheduler(cfg, params, max_slots=max_slots, max_seq=MAX_SEQ,
-                      decode_chunk=decode_chunk, mesh=mesh, **kw)
+                      decode_chunk=decode_chunk, mesh=mesh, spec=spec, **kw)
     reqs = [Request(rid=i, prompt=p, params=SamplingParams(max_new_tokens=c["max_new"]),
                     embeds=None if embeds is None else embeds[i], arrival=i)
             for i, p in enumerate(prompts)]
@@ -192,15 +194,63 @@ def assert_conformance(family, mesh=None):
         assert st.kv.n_free_pages == st.kv.n_alloc_pages
 
 
+def assert_spec_conformance(family, mesh=None):
+    """Speculative greedy decode must be token-identical to non-speculative
+    decode: the n-gram drafter guesses, the multi-token verify scores, and
+    the commit/rollback keeps exactly the accepted prefix — on both cache
+    layouts (and sharded pools when `mesh` is given)."""
+    iso = isolated_tokens(family)
+    for layout in ("paged", "stripe"):
+        toks, sp = scheduler_tokens(family, layout, mesh=mesh,
+                                    spec=SpecConfig(k=3))
+        assert toks == iso, \
+            f"{family}/{layout}: speculative decode diverged from isolated"
+        assert sp.stats.verify_steps > 0          # the spec path actually ran
+        assert sp.stats.decode_tokens > 0
+        if layout == "paged":
+            assert sp.kv.paged
+            # accept/reject churn must leave page accounting exact
+            assert sp.kv.n_free_pages == sp.kv.n_alloc_pages
+        if mesh is not None:
+            assert sp.kv.specs is not None
+
+
+def run_self_draft(family="transformer"):
+    """A draft model identical to the target must have its every greedy
+    proposal accepted: the strongest end-to-end pin of the draft-model
+    path (draft prefill, K+1-step propose, lockstep cache rollback) —
+    acceptance 1.0 and k+1 tokens per ridden verify, token-identically."""
+    cfg, params = _model(family)
+    iso = isolated_tokens(family)
+    k = 3
+    toks, sp = scheduler_tokens(family, "paged",
+                                spec=SpecConfig(k=k, drafter=ModelDrafter(cfg, params)))
+    assert toks == iso
+    st = sp.stats
+    assert st.acceptance_rate == 1.0, st.acceptance_rate
+    assert st.draft_proposed > 0
+    # every ridden verify emits its full k+1 tokens (max_new - 1 decode
+    # tokens per request arrive in ceil((max_new - 1) / (k + 1)) verifies)
+    for n_gen in (len(t) for t in toks):
+        assert n_gen == _CASES[family]["max_new"]
+    assert st.tokens_per_verify_step > 1.0
+    # the whole draft pool drained alongside the target pool
+    assert sp.draft_kv.n_free == sp.draft_kv.n_slots
+    assert (sp.draft_kv.slot_len == 0).all()
+
+
 # ---------------------------------------------------------------------------
 # churn property: random admit/release against the (sharded) paged pool
 # ---------------------------------------------------------------------------
 
 
 def run_churn(seed, mesh=None, n_ops=40):
-    """Random admit/finish/release churn against a paged SlotKVCache: page
-    accounting must stay exact at every step, no page may leak rows after
-    drain, and pool bytes never move (the pool never reallocates)."""
+    """Random admit/rollback/release churn against a paged SlotKVCache:
+    page accounting must stay exact at every step, speculative rollbacks
+    (random accept/reject prefixes over a slot's trailing rows) must keep
+    byte/page/slot_len accounting untouched and sweep the rejected rows
+    exactly, no page may leak rows after drain, and pool bytes never move
+    (the pool never reallocates)."""
     cfg, _ = _model("transformer")
     # n_pages=10 -> 12 with the reserved pair: already divides a 4-way mesh,
     # so sharded and unsharded pools are byte-identical
@@ -210,17 +260,48 @@ def run_churn(seed, mesh=None, n_ops=40):
     tpl = kv.template(1)
     ar = jnp.arange(MAX_SEQ, dtype=jnp.int32)
     rng = np.random.default_rng(seed)
-    live: dict[int, int] = {}  # slot -> reserved rows
+    live: dict[int, list[int]] = {}  # slot -> [current rows, reserved rows]
 
     def check():
-        used = sum(kv.pages_needed(r) for r in live.values())
+        used = sum(kv.pages_needed(r) for _, r in live.values())
         assert kv.n_free_pages == kv.n_alloc_pages - used, \
             f"free-list drift: {kv.n_free_pages} free, {used} pages live"
         assert kv.pool_bytes() == bytes0  # the pool never reallocates
 
+    def slot_rows_on_device(slot):
+        """Real (non-sentinel) kpos rows of `slot`, via its block table."""
+        kpos = np.asarray(kv.cache["kpos"])[0]
+        bt = np.asarray(kv.cache["bt"])[0, slot]
+        alloc = int(np.asarray(kv.cache["alloc"])[0, slot])
+        rows = [kpos[bt[p // kv.page], p % kv.page]
+                for p in range(alloc * kv.page)]
+        return [i for i, r in enumerate(rows) if r != paging.KPOS_SENTINEL]
+
     for _ in range(n_ops):
-        admit = kv.n_free > 0 and (not live or rng.random() < 0.55)
-        if admit:
+        roll = rng.random()
+        can_roll = [s for s in sorted(live) if live[s][0] >= 1]
+        if can_roll and roll < 0.25:
+            # speculative commit/rollback: treat the slot's last n_spec
+            # rows as verify-written candidates and keep a random prefix
+            slot = int(rng.choice(can_roll))
+            rows_now = live[slot][0]
+            n_spec = int(rng.integers(1, min(rows_now, 6) + 1))
+            keep_n = int(rng.integers(0, n_spec + 1))
+            pos0 = np.zeros((kv.n_slots,), np.int32)
+            keep = np.zeros((kv.n_slots,), np.int32)
+            for s, (r, _) in live.items():  # untouched slots: empty window
+                pos0[s] = r
+            pos0[slot], keep[slot] = rows_now - n_spec, keep_n
+            free_before = kv.n_free_pages
+            kv.rollback(pos0, keep, n_spec)
+            live[slot][0] = rows_now - n_spec + keep_n
+            kv.slot_len[slot] = live[slot][0]
+            # rollback moves no pages and reallocates nothing
+            assert kv.n_free_pages == free_before
+            assert kv.slot_capacity(slot) == live[slot][1]
+            # the device pos counter rewound with the sweep
+            assert int(np.asarray(kv.cache["pos"])[0, slot]) == live[slot][0]
+        elif kv.n_free > 0 and (not live or roll < 0.65):
             rows = int(rng.integers(1, 33))
             reserve = min(MAX_SEQ, rows + int(rng.integers(0, 16)))
             if not kv.can_admit(reserve):
@@ -235,16 +316,21 @@ def run_churn(seed, mesh=None, n_ops=40):
                                paging.KPOS_SENTINEL),
                 pos=jnp.full_like(tpl["pos"], rows))
             kv.insert(slot, stripe, rows, reserve=reserve)
-            live[slot] = reserve
+            live[slot] = [rows, reserve]
             assert kv.slot_len[slot] == rows
             assert kv.slot_capacity(slot) == reserve
-        else:
+        elif live:
             slot = int(rng.choice(sorted(live)))
             kv.release(slot)
             live.pop(slot)
             assert kv.slot_len[slot] == 0 and kv.slot_capacity(slot) == 0
         check()
 
+    # before draining: every live slot holds exactly its tracked rows —
+    # rollbacks swept the rejected suffixes and nothing else
+    for slot, (rows_now, _) in live.items():
+        assert slot_rows_on_device(slot) == list(range(rows_now)), \
+            f"slot {slot}: device rows diverged after rollback churn"
     for slot in sorted(live):
         kv.release(slot)
     assert kv.n_free_pages == kv.n_alloc_pages, "leaked pages after drain"
@@ -302,6 +388,8 @@ def _sharded_case(mode: str) -> None:
 def _drive(mode: str, mesh) -> None:
     if mode.startswith("conformance:"):
         assert_conformance(mode.split(":", 1)[1], mesh=mesh)
+    elif mode.startswith("spec:"):
+        assert_spec_conformance(mode.split(":", 1)[1], mesh=mesh)
     elif mode == "churn":
         for seed in (0, 1, 2):
             run_churn(seed, mesh=mesh)
@@ -323,6 +411,23 @@ if pytest is not None:
     @pytest.mark.parametrize("family", FAMILIES)
     def test_conformance_sharded(family):
         _sharded_case(f"conformance:{family}")
+
+    @pytest.mark.parametrize("family", FAMILIES)
+    def test_spec_conformance_unsharded(family):
+        assert_spec_conformance(family, mesh=None)
+
+    @pytest.mark.parametrize("family", FAMILIES)
+    def test_spec_conformance_sharded(family):
+        _sharded_case(f"spec:{family}")
+
+    def test_spec_self_draft_model():
+        run_self_draft("transformer")
+
+    def test_spec_unsupported_family():
+        cfg, params = _model("ssm")
+        with pytest.raises(ValueError, match="no\\s+speculative"):
+            Scheduler(cfg, params, max_slots=2, max_seq=MAX_SEQ,
+                      spec=SpecConfig(k=2))
 
     from _hypothesis_compat import given, integers, settings
 

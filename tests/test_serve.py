@@ -13,8 +13,8 @@ from serve_conformance import greedy_isolated
 
 from repro.configs.base import load_arch
 from repro.models import zoo
-from repro.serve import (Request, RequestState, SamplingParams, Scheduler,
-                         ServeEngine, SlotKVCache, sampler)
+from repro.serve import (ModelDrafter, Request, RequestState, SamplingParams,
+                         Scheduler, ServeEngine, SlotKVCache, sampler)
 from repro.train import pruning
 
 
@@ -361,22 +361,221 @@ def test_sampler_greedy_topk_temperature():
     logits = jnp.asarray([[0.1, 3.0, 0.2, -1.0],
                           [9.0, 0.0, 0.0, 0.0]], jnp.float32)
     zero = jnp.zeros((2,))
+    keys2 = jax.random.split(key, 2)
     # temperature <= 0 -> greedy, regardless of top_k
-    out = sampler.sample(key, logits, zero, jnp.asarray([0, 2], jnp.int32))
+    out = sampler.sample(keys2, logits, zero, jnp.asarray([0, 2], jnp.int32))
     assert out.tolist() == [1, 0]
     # top_k=1 sampling == greedy even at high temperature
-    out = sampler.sample(key, logits, jnp.full((2,), 5.0),
+    out = sampler.sample(keys2, logits, jnp.full((2,), 5.0),
                          jnp.ones((2,), jnp.int32))
     assert out.tolist() == [1, 0]
     # temperature sampling stays inside the top-k set, per slot
     keys = jax.random.split(jax.random.PRNGKey(1), 64)
-    draws = np.asarray([sampler.sample(k, logits, jnp.full((2,), 1.0),
+    draws = np.asarray([sampler.sample(jax.random.split(k, 2), logits,
+                                       jnp.full((2,), 1.0),
                                        jnp.asarray([2, 3], jnp.int32))
                         for k in keys])
     assert set(draws[:, 0]) <= {1, 2}
     assert set(draws[:, 1]) <= {0, 1, 2}
     # low temperature concentrates on the mode
-    draws_cold = np.asarray([sampler.sample(k, logits, jnp.full((2,), 0.05),
+    draws_cold = np.asarray([sampler.sample(jax.random.split(k, 2), logits,
+                                            jnp.full((2,), 0.05),
                                             zero.astype(jnp.int32))
                              for k in keys])
     assert (draws_cold[:, 0] == 1).mean() > 0.9
+
+
+def test_sampler_top_p():
+    """Nucleus sampling: draws stay inside the smallest prefix of the
+    descending distribution whose mass reaches top_p, per slot; <= 0
+    disables; composes with top-k."""
+    # probs per slot ~ [0.636, 0.234, 0.086, 0.032, 0.012] (distinct ranks)
+    logits = jnp.asarray([[4.0, 3.0, 2.0, 1.0, 0.0],
+                          [2.0, 1.0, 0.0, -1.0, -2.0]], jnp.float32)
+    # top_p=0.7 on slot 0 keeps {0, 1} (0.636 alone < 0.7); slot 1 disabled
+    masked = sampler.mask_logits(logits, jnp.zeros((2,), jnp.int32),
+                                 jnp.asarray([0.7, 0.0], jnp.float32))
+    assert np.isfinite(np.asarray(masked[0])).tolist() == [True, True, False,
+                                                           False, False]
+    assert np.isfinite(np.asarray(masked[1])).all()
+    # the first token always survives, however small top_p is
+    tiny = sampler.mask_logits(logits, jnp.zeros((2,), jnp.int32),
+                               jnp.full((2,), 1e-6, jnp.float32))
+    assert np.isfinite(np.asarray(tiny)).sum(axis=1).tolist() == [1, 1]
+    # composes with top-k: k=4 survivors renormalized, then the nucleus —
+    # slot 0 keeps {0, 1, 2} (mass 0.881 < 0.95), slot 1 only the mode
+    both = sampler.mask_logits(logits, jnp.full((2,), 4, jnp.int32),
+                               jnp.asarray([0.95, 0.5], jnp.float32))
+    assert np.isfinite(np.asarray(both[0])).tolist() == [True, True, True,
+                                                         False, False]
+    assert np.isfinite(np.asarray(both[1])).sum() == 1
+    # sampled draws respect the nucleus (slot 1 disabled: full vocab legal)
+    keys = jax.random.split(jax.random.PRNGKey(3), 64)
+    draws = np.asarray([sampler.sample(jax.random.split(k, 2), logits,
+                                       jnp.full((2,), 1.0),
+                                       jnp.zeros((2,), jnp.int32),
+                                       jnp.asarray([0.7, 0.0], jnp.float32))
+                        for k in keys])
+    assert set(draws[:, 0]) <= {0, 1}
+    assert len(set(draws[:, 1])) >= 2  # slot 1 keeps sampling freely
+
+
+def test_per_slot_rng_stream_independence(pruned_model):
+    """A stochastic request's sampled stream must depend only on its seed
+    and token index — identical whether it decodes alone or staggered into
+    a busy pool (the old per-chunk key split made streams depend on slot
+    assignment and co-residents)."""
+    cfg, _, _, packed = pruned_model
+    rng = np.random.default_rng(41)
+    prompt = rng.integers(0, cfg.vocab, (8,)).astype(np.int32)
+    others = [rng.integers(0, cfg.vocab, (n,)).astype(np.int32)
+              for n in (5, 11, 6)]
+    mk = lambda: SamplingParams(max_new_tokens=10, temperature=0.8, top_k=20,
+                                top_p=0.9, seed=123)
+    alone = Scheduler(cfg, packed, max_slots=1, max_seq=64, decode_chunk=4)
+    r_alone = Request(rid=0, prompt=prompt, params=mk())
+    alone.run([r_alone])
+
+    busy = Scheduler(cfg, packed, max_slots=3, max_seq=64, decode_chunk=4)
+    reqs = [Request(rid=0, prompt=prompt, params=mk(), arrival=2)]
+    reqs += [Request(rid=i + 1, prompt=o, arrival=i,
+                     params=SamplingParams(max_new_tokens=8, temperature=0.5,
+                                           seed=50 + i))
+             for i, o in enumerate(others)]
+    busy.run(reqs)
+    assert reqs[0].tokens == r_alone.tokens, \
+        "sampled stream depends on co-residents/slot assignment"
+
+
+# ---------------------------------------------------------------------------
+# speculative decoding (serve/spec) — request-level behavior; the
+# cross-family token-identity matrix lives in serve_conformance.py
+# ---------------------------------------------------------------------------
+
+
+def _spec_workload(cfg, rng, n=4):
+    lens = (8, 5, 11, 6)[:n]
+    return [rng.integers(0, cfg.vocab, (l,)).astype(np.int32) for l in lens]
+
+
+def test_spec_stochastic_match_is_stream_identical(pruned_model):
+    """"match" acceptance + per-position RNG keys: a speculative stochastic
+    request emits the EXACT tokens the non-speculative sampler would —
+    temperature, top-k and top-p included."""
+    from repro.serve import SpecConfig
+
+    cfg, _, _, packed = pruned_model
+    prompts = _spec_workload(cfg, np.random.default_rng(43))
+    mk = lambda i: SamplingParams(max_new_tokens=9, temperature=0.7,
+                                  top_k=30, top_p=0.9, seed=100 + i)
+
+    def run(spec):
+        sched = Scheduler(cfg, packed, max_slots=2, max_seq=64,
+                          decode_chunk=4, page=16, spec=spec)
+        reqs = [Request(rid=i, prompt=p, params=mk(i), arrival=i)
+                for i, p in enumerate(prompts)]
+        sched.run(reqs)
+        return [r.tokens for r in reqs]
+
+    assert run(SpecConfig(k=3)) == run(None)
+
+
+def test_spec_rejection_sampling_valid(pruned_model):
+    """"reject" acceptance: unbiased rejection sampling emits a different
+    (but valid) stream — right count, in-vocab, and the residual draw can
+    never re-emit a rejected draft token at its own position."""
+    from repro.serve import SpecConfig
+
+    cfg, _, _, packed = pruned_model
+    rng = np.random.default_rng(47)
+    prompt = rng.integers(0, cfg.vocab, (8,)).astype(np.int32)
+    p = SamplingParams(max_new_tokens=12, temperature=0.9, top_k=0,
+                       seed=7, spec_accept="reject")
+    sched = Scheduler(cfg, packed, max_slots=2, max_seq=64, decode_chunk=4,
+                      page=16, spec=SpecConfig(k=3))
+    req = Request(rid=0, prompt=prompt, params=p)
+    sched.run([req])
+    assert len(req.tokens) == 12
+    assert all(0 <= t < cfg.vocab for t in req.tokens)
+    assert req.spec_verify_steps > 0
+
+
+def test_spec_per_request_opt_out(pruned_model):
+    """spec_k=0 disables speculation for one request inside a speculative
+    pool: it rides the verify batch one token at a time and still matches
+    non-speculative decode; its neighbors keep speculating."""
+    from repro.serve import SpecConfig
+    from serve_conformance import greedy_isolated
+
+    cfg, _, _, packed = pruned_model
+    rng = np.random.default_rng(53)
+    p_off = rng.integers(0, cfg.vocab, (8,)).astype(np.int32)
+    p_on = rng.integers(0, cfg.vocab, (6,)).astype(np.int32)
+    sched = Scheduler(cfg, packed, max_slots=2, max_seq=64, decode_chunk=4,
+                      page=16, spec=SpecConfig(k=3))
+    r_off = Request(rid=0, prompt=p_off,
+                    params=SamplingParams(max_new_tokens=7, spec_k=0))
+    r_on = Request(rid=1, prompt=p_on,
+                   params=SamplingParams(max_new_tokens=7))
+    sched.run([r_off, r_on])
+    assert r_off.tokens == greedy_isolated(cfg, packed, p_off, 7, 64)
+    assert r_on.tokens == greedy_isolated(cfg, packed, p_on, 7, 64)
+    assert r_off.spec_proposed == 0 and r_off.acceptance_rate == 0.0
+    assert r_off.spec_verify_steps > 0  # it rode the verify batch
+    assert r_on.spec_proposed > 0
+
+
+def test_spec_eos_inside_accepted_run(pruned_model):
+    """An EOS accepted mid-verify must truncate the emit (tokens after it
+    are dropped even if accepted) and finish the request with its rows
+    rolled back cleanly."""
+    from repro.serve import SpecConfig
+    from serve_conformance import greedy_isolated
+
+    cfg, _, _, packed = pruned_model
+    rng = np.random.default_rng(59)
+    prompt = rng.integers(0, cfg.vocab, (8,)).astype(np.int32)
+    free = greedy_isolated(cfg, packed, prompt, 8, 64)
+    eos = free[3]
+    sched = Scheduler(cfg, packed, max_slots=1, max_seq=64, decode_chunk=4,
+                      page=16, spec=SpecConfig(k=3, drafter=ModelDrafter(cfg, packed)))
+    req = Request(rid=0, prompt=prompt,
+                  params=SamplingParams(max_new_tokens=8, eos_id=eos))
+    sched.run([req])
+    assert req.tokens == free[: free.index(eos) + 1]
+    assert req.finish_reason == "eos"
+    assert sched.kv.n_free_pages == sched.kv.n_alloc_pages
+
+
+def test_spec_stats_accounting(pruned_model):
+    """Self-drafting (draft == target) pins the stats algebra: acceptance
+    1.0, k+1 tokens per ridden verify, and the packed-weight bytes per
+    token shrink by the same factor vs the chunked baseline."""
+    from repro.serve import SpecConfig
+
+    cfg, _, _, packed = pruned_model
+    prompts = _spec_workload(cfg, np.random.default_rng(61), n=2)
+    k = 3
+
+    def run(spec):
+        sched = Scheduler(cfg, packed, max_slots=2, max_seq=64,
+                          decode_chunk=4, page=16, spec=spec)
+        reqs = [Request(rid=i, prompt=p,
+                        params=SamplingParams(max_new_tokens=13))
+                for i, p in enumerate(prompts)]
+        sched.run(reqs)
+        return reqs, sched.stats
+
+    reqs, st = run(SpecConfig(k=k, drafter=ModelDrafter(cfg, packed)))
+    base_reqs, base = run(None)
+    assert [r.tokens for r in reqs] == [r.tokens for r in base_reqs]
+    assert st.acceptance_rate == 1.0
+    assert st.tokens_per_verify_step == k + 1  # 12 decode tokens = 3 rides
+    for r in reqs:
+        assert r.acceptance_rate == 1.0
+        assert r.tokens_per_verify_step == k + 1
+    # one packed read per verify vs one per chunk step: bytes/token drops
+    # by exactly the ratio of forwards executed
+    assert st.weight_bytes_per_accepted_token < base.weight_bytes_per_token
+    ratio = st.weight_bytes_per_accepted_token / base.weight_bytes_per_token
+    assert ratio == pytest.approx(st.verify_steps / base.decode_steps)
