@@ -179,6 +179,85 @@ def model_flops(cfg, shape_name) -> float:
     return 2.0 * n_total * batch + attn_flops()  # decode: one token per seq
 
 
+def serve_decode_roofline(arch, batch: int = 64, ctx: int = 2048):
+    """Analytic roofline rows for the serving decode inner loop.
+
+    Two memory-bound comparisons on the TPU hardware model (decode moves
+    bytes, not FLOPs — both rows are pure HBM-traffic terms):
+
+    - **paged-attention**: per decode step the gather path reads the live
+      KV pool AND materialises the `pool[bt]` contiguous view (one extra
+      full write of the live rows) before attending; the Pallas kernel
+      (kernels/paged_attn) streams pool pages through VMEM once. The
+      saving is exactly the materialised copy's traffic.
+    - **packed-decode**: weight bytes per step with every planned
+      projection served dense vs PackedHiNM (exact packed sizes via
+      eval_shape of `packing.pack`, metadata included) — the paper's
+      weight-bandwidth win that `Scheduler(packed=...)` realises.
+
+    Windowed (hybrid) configs cap the live context at the window; pure
+    recurrent families have no paged-attention row. Cross-attention KV
+    (encdec) is excluded — it is cached per slot, not paged.
+    """
+    import jax
+    import numpy as np
+
+    from repro.configs.base import load_arch
+    from repro.core import packing
+    from repro.models import module as mnn
+    from repro.models import zoo
+    from repro.train.abstract import _planned_paths, _get_container
+
+    cfg = load_arch(arch)
+    out = {"status": "ok", "arch": arch, "kind": "serve_decode",
+           "batch": batch, "ctx": ctx}
+
+    if zoo.supports_paged_attn_kernel(cfg):
+        kvh, hd = cfg.n_kv_heads, cfg.head_dim
+        itemsize = 2  # bf16 pools
+        ctx_eff = min(ctx, cfg.window) if cfg.window else ctx
+        if cfg.family == "hybrid" and cfg.block_pattern:
+            n_attn = sum(1 for k in cfg.block_pattern if k == "attn")
+            l_attn = cfg.n_layers * n_attn // len(cfg.block_pattern)
+        else:
+            l_attn = cfg.n_layers
+        row_bytes = kvh * hd * 2 * itemsize + 4          # K + V + kpos
+        kv_bytes = l_attn * batch * ctx_eff * row_bytes  # live rows, 1 pass
+        gather_bytes = 2 * kv_bytes                      # + the copy write
+        out["paged_attn"] = {
+            "attn_layers": l_attn, "ctx_effective": ctx_eff,
+            "kernel_bytes_per_step": kv_bytes,
+            "gather_bytes_per_step": gather_bytes,
+            "memory_term_kernel_s": kv_bytes / HBM_BW,
+            "memory_term_gather_s": gather_bytes / HBM_BW,
+            "traffic_saving": 1.0 - kv_bytes / gather_bytes,
+        }
+
+    pshape = jax.eval_shape(lambda: zoo.init(jax.random.PRNGKey(0), cfg))
+    total = sum(int(np.prod(l.shape)) * l.dtype.itemsize
+                for l in jax.tree_util.tree_leaves(pshape))
+    planned_dense = planned_packed = 0
+    for key, sel, spec in _planned_paths(cfg):
+        w = mnn.get_path(_get_container(pshape, key, sel), spec.path)["w"]
+        stack = int(np.prod(w.shape[:-2], dtype=np.int64)) if w.ndim > 2 else 1
+        planned_dense += int(np.prod(w.shape)) * w.dtype.itemsize
+        w2 = jax.ShapeDtypeStruct(w.shape[:-3:-1], w.dtype)  # (n_out, n_in)
+        pk = jax.eval_shape(lambda a: packing.pack(a, cfg.hinm), w2)
+        planned_packed += stack * sum(
+            int(np.prod(l.shape)) * l.dtype.itemsize
+            for l in jax.tree_util.tree_leaves(pk))
+    dense_bytes = total
+    packed_bytes = total - planned_dense + planned_packed
+    out["packed_decode"] = {
+        "dense_weight_bytes": dense_bytes,
+        "packed_weight_bytes": packed_bytes,
+        "bytes_ratio": packed_bytes / max(dense_bytes, 1),
+        "memory_term_dense_s": dense_bytes / HBM_BW,
+        "memory_term_packed_s": packed_bytes / HBM_BW,
+    }
+    return out
+
+
 def _artifact_memory_bytes(arch, shape, dryrun_dir="experiments/dryrun"):
     """HBM traffic estimate from the REAL compiled artifact's buffers:
     every argument/output crosses HBM once, every temp twice (write+read).
@@ -289,6 +368,28 @@ def main():
                       f"{r['useful_fraction']:7.3f}", flush=True)
             elif r["status"] == "skipped":
                 print(f"{tag:44s} SKIP ({r['reason'][:40]})", flush=True)
+
+    # serving decode rows: analytic memory terms for the paged-attention
+    # kernel vs the gather path, and packed vs dense weight reads
+    print(f"\n{'serve decode cell':44s} {'gather_s':>10s} {'kernel_s':>10s} "
+          f"{'dense_s':>10s} {'packed_s':>10s} {'pack_ratio':>10s}")
+    for arch in archs:
+        tag = f"{arch}__serve_decode"
+        try:
+            r = serve_decode_roofline(arch)
+        except Exception as e:  # noqa: BLE001
+            r = {"status": "failed", "error": repr(e)}
+            print(f"{tag:44s} FAILED: {e!r}", flush=True)
+        with open(os.path.join(args.out, tag + ".json"), "w") as fh:
+            json.dump(r, fh, indent=1)
+        if r["status"] == "ok":
+            pa, pd = r.get("paged_attn"), r["packed_decode"]
+            print(f"{tag:44s} "
+                  f"{pa['memory_term_gather_s'] if pa else float('nan'):10.2e} "
+                  f"{pa['memory_term_kernel_s'] if pa else float('nan'):10.2e} "
+                  f"{pd['memory_term_dense_s']:10.2e} "
+                  f"{pd['memory_term_packed_s']:10.2e} "
+                  f"{pd['bytes_ratio']:10.3f}", flush=True)
 
 
 if __name__ == "__main__":

@@ -304,6 +304,15 @@ def _cache_leaf_spec(role: str, leaf, mesh: Mesh, dp) -> P:
         elif _fits(leaf.shape[2], mesh, "model"):
             sp[2] = "model"
     elif role == "page":  # (L, n_pages, page[, KV, hd])
+        from repro.perf_knobs import KNOBS
+
+        if KNOBS.paged_attn_sharded:
+            # kernel-compatible layout: the paged-attention kernel is a
+            # single-device program, so the shared pools replicate (every
+            # device walks the full block table) while slot leaves keep
+            # their dp sharding — an opt-in trade of pool memory for
+            # gather-free decode under the mesh
+            return P(*sp)
         if nd >= 2 and _fits(leaf.shape[1], mesh, dp):
             sp[1] = dp
         if nd == 5 and _fits(leaf.shape[3], mesh, "model"):

@@ -79,16 +79,17 @@ def pick_bblk(n_in: int, k: int, b: int, itemsize: int = 2, *, v: int = 32,
 
     Only the first two and the accumulator scale with bblk; the weight and
     decompress terms are a fixed per-cell cost subtracted from the budget.
+    The halving search itself is the shared ``ops.pick_tile`` (batch blocks
+    need no divisibility — the wrapper pads the remainder).
     """
+    from repro.kernels import ops
+
     kn = k // mm * nn
     fixed = (v * kn * (itemsize + 1) + k * 4
              + v * kn * mm * itemsize + v * k * itemsize)
     per_col = (n_in + k) * itemsize + v * 4
-    bblk = DEFAULT_BBLK
-    while bblk > 8:
-        if fixed + per_col * bblk <= VMEM_BUDGET_BYTES:
-            break
-        bblk //= 2
+    bblk = ops.pick_tile(DEFAULT_BBLK, fixed, per_col,
+                         budget=VMEM_BUDGET_BYTES, floor=8, divide=False)
     return max(8, min(bblk, max(8, b)))
 
 

@@ -20,6 +20,60 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+# conservative half of v5e VMEM — shared by every kernel's tile picker
+VMEM_BUDGET_BYTES = 8 * 1024 * 1024
+
+
+def pick_tile(n_units: int, fixed_bytes: int, per_unit_bytes: int, *,
+              budget: int = VMEM_BUDGET_BYTES, start: int | None = None,
+              floor: int = 1, divide: bool = True) -> int:
+    """Largest tile with ``fixed + per_unit * tile`` under the VMEM budget.
+
+    The shared discipline behind ``hinm_spmm.pick_bblk`` and
+    ``paged_attn.pick_pp``: start from ``min(start, n_units)`` and halve
+    until the working set fits (and, when ``divide``, the tile divides
+    ``n_units`` so the grid needs no remainder handling). Never returns
+    less than ``floor`` — a single minimal tile must fit by construction.
+    """
+    t = max(floor, int(n_units) if start is None else min(int(start), int(n_units)))
+    while t > floor and (fixed_bytes + per_unit_bytes * t > budget
+                        or (divide and n_units % t)):
+        t = max(floor, t // 2)
+    return t
+
+
+def paged_attention(
+    q: jax.Array,          # (B, s, H, hd)
+    k_pool: jax.Array,     # (n_pages, page, KV, hd)
+    v_pool: jax.Array,     # (n_pages, page, KV, hd)
+    kpos_pool: jax.Array,  # (n_pages, page) int32
+    bt: jax.Array,         # (B, n_bt) int32
+    q_pos: jax.Array,      # (B, s) int32
+    *,
+    window: int = 0,
+    backend: str = "auto",
+) -> jax.Array | None:
+    """Block-table-resolved decode attention over a paged KV pool.
+
+    Returns (B, s, H, hd), or None when the chosen backend defers to the
+    caller's jnp ``pool[bt]`` gather path ("off", or "auto" off-TPU —
+    interpret mode is a correctness harness, not a CPU fast path).
+    """
+    if backend in ("off", "gather"):
+        return None
+    if backend == "auto":
+        if not _on_tpu():
+            return None
+        backend = "pallas"
+    if backend not in ("pallas", "on", "interpret"):
+        raise ValueError(f"unknown paged-attention backend {backend!r}")
+    from repro.kernels import paged_attn as _pattn
+
+    return _pattn.paged_decode_attn(
+        q, k_pool, v_pool, kpos_pool, bt, q_pos, window=window,
+        interpret=(backend == "interpret") or not _on_tpu())
+
+
 def hinm_matmul(
     x: jax.Array,
     p: PackedHiNM,

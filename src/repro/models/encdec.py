@@ -18,6 +18,9 @@ from repro.models.module import PruneSpec
 # the decoder is pure attention (self + cross), so decoder-prompt rows can
 # be bucketed with sentinel-position masking; encoder frames stay exact
 BUCKETED_PREFILL = True
+# decoder self-attention pages into the shared pool (cross-attention reads
+# the fixed enc_out stripe), so the paged-attention kernel applies
+PAGED_ATTN_KERNEL = True
 
 
 def init_enc_layer(key, cfg):

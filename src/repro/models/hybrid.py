@@ -19,6 +19,10 @@ from repro.models.module import PruneSpec
 # recurrent blocks integrate padded rows into their state — prompt-length
 # bucketing would corrupt the rglru/conv carries, so admission stays exact
 BUCKETED_PREFILL = False
+# attention layers page their windowed ring into the shared pool; the
+# paged-attention kernel folds the sliding window into its kpos mask, so
+# the ring resolves through the same block-table walk as a full cache
+PAGED_ATTN_KERNEL = True
 
 
 def _layer_kinds(cfg) -> list[str]:

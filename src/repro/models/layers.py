@@ -264,13 +264,14 @@ def attention(
         from repro.models import paging
 
         if s != 1 and not spec:
-            raise ValueError("paged KV caches only support single-token decode"
-                             " (prefill runs on a stripe template)")
+            raise ValueError(
+                "paged KV caches only support single-token decode here; "
+                "multi-token writes go through the speculative verify "
+                "branch (zoo.verify_step passes spec=True) and prefill "
+                "runs on a stripe template")
         pos = cache["pos"]                                  # (B,) int32
         bt, alloc = cache["bt"], cache["alloc"]
-        n_bt = bt.shape[1]
         page = cache["k"].shape[1]                          # (n_pages, page, KV, hd)
-        view_len = n_bt * page
         if s > 1 and cfg.window:
             # a wrapped multi-token write would clobber rows earlier
             # queries still need (hybrid verifies sequentially instead)
@@ -289,11 +290,25 @@ def attention(
         ck = cache["k"].at[phys_w, off].set(k.astype(cache["k"].dtype))
         cv = cache["v"].at[phys_w, off].set(v.astype(cache["v"].dtype))
         ckpos = cache["kpos"].at[phys_w, off].set(positions.astype(jnp.int32))
-        k_view = jnp.take(ck, bt, axis=0).reshape(b, view_len, kvh, hd)
-        v_view = jnp.take(cv, bt, axis=0).reshape(b, view_len, kvh, hd)
-        kpos_view = jnp.take(ckpos, bt, axis=0).reshape(b, view_len)
-        out = _attn_chunked(q, k_view, v_view, positions, kpos_view, True,
-                            cfg.window, kv_block)
+        from repro.perf_knobs import KNOBS
+
+        out = None
+        if KNOBS.paged_attn != "off":
+            # Pallas kernel: resolves the block table inside the grid —
+            # sentinel pages and swept rows mask through the same kpos
+            # comparisons, so no gather copy is ever built. Returns None
+            # when the backend defers to the gather path (auto off-TPU).
+            from repro.kernels import ops as kops
+
+            out = kops.paged_attention(q, ck, cv, ckpos, bt, positions,
+                                       window=cfg.window,
+                                       backend=KNOBS.paged_attn)
+        if out is None:
+            k_view = paging.gather_view(ck, bt)
+            v_view = paging.gather_view(cv, bt)
+            kpos_view = paging.gather_view(ckpos, bt)
+            out = _attn_chunked(q, k_view, v_view, positions, kpos_view,
+                                True, cfg.window, kv_block)
         new_cache = {"k": ck, "v": cv, "kpos": ckpos, "pos": pos + s,
                      "bt": bt, "alloc": alloc}
     else:

@@ -88,6 +88,18 @@ def make_tables(n_stack: int, batch: int, n_bt: int) -> dict:
     }
 
 
+def gather_view(pool: jax.Array, bt: jax.Array) -> jax.Array:
+    """Resolve a slot's logical view through its block table: ``pool``
+    ``(n_pages, page, ...)`` gathered by ``bt (B, n_bt)`` into a contiguous
+    ``(B, n_bt * page, ...)`` lane view — the jnp reference realisation of
+    the block-table walk (``kernels/paged_attn`` streams the same pages
+    in-grid without materialising this copy)."""
+    b, n_bt = bt.shape
+    page = pool.shape[1]
+    return jnp.take(pool, bt, axis=0).reshape(
+        (b, n_bt * page) + pool.shape[2:])
+
+
 def is_paged(cache) -> bool:
     """True for a (per-layer slice of a) paged attention cache dict."""
     return isinstance(cache, dict) and "bt" in cache

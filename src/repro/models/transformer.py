@@ -20,6 +20,9 @@ from repro.models.module import PruneSpec
 # pure-attention prefill: padded rows are exactly masked (sentinel kpos),
 # so prompts can be bucketed to power-of-two lengths (serve admission)
 BUCKETED_PREFILL = True
+# the paged decode cache is the shared (n_pages, page, KV, hd) pool, so
+# the Pallas paged-attention kernel can resolve it (kernels/paged_attn)
+PAGED_ATTN_KERNEL = True
 
 
 def init_block(key, cfg):

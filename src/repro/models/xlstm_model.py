@@ -11,8 +11,10 @@ from repro.models import xlstm as X
 from repro.models.module import PruneSpec
 
 
-# fully recurrent: no paged KV (state is O(1)) and no bucketed prefill
+# fully recurrent: no paged KV (state is O(1)) and no bucketed prefill,
+# hence nothing for the paged-attention kernel to resolve
 BUCKETED_PREFILL = False
+PAGED_ATTN_KERNEL = False
 
 
 def _pattern(cfg):

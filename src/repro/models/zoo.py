@@ -135,6 +135,77 @@ def cache_position(cfg, cache):
     return model_for(cfg).cache_position(cfg, cache)
 
 
+def supports_paged_attn_kernel(cfg) -> bool:
+    """Whether the family's paged decode cache can be resolved by the
+    Pallas paged-attention kernel (kernels/paged_attn): true for every
+    family whose pool is the shared (n_pages, page, KV, hd) layout —
+    windowed rings included, the window folds into the kernel's mask —
+    false for pure-recurrent families that never page at all."""
+    return getattr(model_for(cfg), "PAGED_ATTN_KERNEL", False)
+
+
+def pack_params(cfg, params):
+    """Pack every planned projection's dense weight into PackedHiNM —
+    the serve-time packing hook (one-time, at engine construction), after
+    which ``hinm_spmm`` is the q/k/v/o and MLP projection path for
+    prefill, decode and spec-verify via ``nn.linear``'s dispatch.
+
+    Already-packed leaves pass through untouched.  A weight that is not
+    already HiNM-sparse is magnitude-pruned by the packing itself; that
+    is lossless only when the weight's sparsity pattern matches the
+    default ascending-column grouping (packing here applies no gyro/ICP
+    permutation, so re-packing a masked-dense weight from a *permuted*
+    ``prune_model`` packing regroups columns and is lossy — keep the
+    original PackedHiNM leaves for those; ``unpack_params`` is the exact
+    direction)."""
+    import jax as _jax
+
+    from repro.core import packing
+    from repro.core.types import PackedHiNM
+    from repro.models import module as nn
+    from repro.perm.graph import get_container, set_container
+
+    for key, sel, spec in perm_graph(cfg).instances():
+        container = get_container(params, key, sel)
+        node = dict(nn.get_path(container, spec.path))
+        w = node["w"]
+        if isinstance(w, PackedHiNM):
+            continue
+        fn = lambda w2: packing.pack(w2.T, cfg.hinm)  # stored (n_in, n_out)
+        for _ in range(w.ndim - 2):                   # layer / expert stacks
+            fn = _jax.vmap(fn)
+        node["w"] = fn(w)
+        container = nn.set_path(container, spec.path, node)
+        params = set_container(params, key, sel, container)
+    return params
+
+
+def unpack_params(cfg, params):
+    """Dense fallback for the packed serving mode: every planned
+    projection's PackedHiNM weight back to its masked-dense (n_in, n_out)
+    stored form, so ``nn.linear`` runs plain matmuls on the same numbers."""
+    import jax as _jax
+
+    from repro.core import packing
+    from repro.core.types import PackedHiNM
+    from repro.models import module as nn
+    from repro.perm.graph import get_container, set_container
+
+    for key, sel, spec in perm_graph(cfg).instances():
+        container = get_container(params, key, sel)
+        node = dict(nn.get_path(container, spec.path))
+        w = node["w"]
+        if not isinstance(w, PackedHiNM):
+            continue
+        fn = lambda p: packing.unpack(p).T
+        for _ in range(w.vals.ndim - 3):              # layer / expert stacks
+            fn = _jax.vmap(fn)
+        node["w"] = fn(w)
+        container = nn.set_path(container, spec.path, node)
+        params = set_container(params, key, sel, container)
+    return params
+
+
 def hinm_plan(cfg):
     return model_for(cfg).hinm_plan(cfg)
 

@@ -33,6 +33,16 @@ class Knobs:
     # attends over its local cache slice; only O(B*H*hd) softmax stats are
     # psum'd — replaces the per-layer full-cache all-gather.
     seq_parallel_decode: bool = True
+    # Paged-attention decode kernel (kernels/paged_attn): "auto" = Pallas
+    # on TPU, jnp pool[bt] gather elsewhere; "interpret" = the kernel under
+    # the Pallas interpreter (CPU CI correctness mode); "pallas"/"on" =
+    # force the compiled kernel; "off" = always the gather path.
+    paged_attn: str = "auto"
+    # Run the paged-attention kernel under a >1-shard mesh by replicating
+    # the page pools (distributed/sharding "page" role). Off by default:
+    # the kernel is a single-device program, so a page-sharded pool makes
+    # the Scheduler fall back to the SPMD gather path instead.
+    paged_attn_sharded: bool = False
     # Cross-entropy chunk length (sequence positions per logits chunk).
     xent_chunk: int = 512
     # Attention block sizes (train/prefill flash-style scan).

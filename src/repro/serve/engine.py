@@ -25,9 +25,10 @@ class ServeEngine:
     def __init__(self, cfg, params, max_seq: int = 512, temperature: float = 0.0,
                  top_k: int = 0, top_p: float = 0.0, decode_chunk: int = 8,
                  page: int | None = 64, n_pages: int | str | None = "auto",
-                 mesh=None, spec=None):
+                 mesh=None, spec=None, packed: bool | str = "auto"):
         self.cfg = cfg
         self.params = params
+        self.packed = packed
         self.max_seq = max_seq
         self.temperature = temperature
         self.top_k = top_k
@@ -48,7 +49,7 @@ class ServeEngine:
                 self.cfg, self.params, max_slots=batch, max_seq=self.max_seq,
                 decode_chunk=self.decode_chunk, rng_seed=rng_seed,
                 page=self.page, n_pages=self.n_pages, mesh=self.mesh,
-                spec=self.spec)
+                spec=self.spec, packed=self.packed)
         else:
             self._sched.reset(rng_seed)
         return self._sched

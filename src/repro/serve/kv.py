@@ -205,6 +205,23 @@ class SlotKVCache:
         """Total allocatable pages (excludes the two reserved pages)."""
         return self.n_pages - paging.N_RESERVED if self.paged else 1 << 62
 
+    @property
+    def page_sharded(self) -> bool:
+        """True when the shared pool leaves are actually split on their
+        page axis.  The paged-attention kernel is a single-device program,
+        so the Scheduler defers to the SPMD gather path on a page-sharded
+        pool — unless ``KNOBS.paged_attn_sharded`` opted the layout into
+        replication (then this is False and the kernel runs everywhere)."""
+        if not self.paged or self.specs is None:
+            return False
+        import jax.sharding
+
+        is_spec = lambda x: isinstance(x, jax.sharding.PartitionSpec)
+        roles = jax.tree.leaves(zoo.cache_shard_roles(self.cfg, self.cache))
+        specs = jax.tree.leaves(self.specs, is_leaf=is_spec)
+        return any(r == "page" and len(s) > 1 and s[1] is not None
+                   for r, s in zip(roles, specs))
+
     def can_admit(self, reserve_rows: int) -> bool:
         """Would a request needing `reserve_rows` cache rows fit right now?"""
         if not self._free:

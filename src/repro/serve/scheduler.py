@@ -44,6 +44,7 @@ actually gates on free pages; pass `None` for full stripe capacity.
 from __future__ import annotations
 
 import collections
+import os
 import time
 
 import jax
@@ -56,6 +57,26 @@ from repro.serve import sampler
 from repro.serve import spec as spec_mod
 from repro.serve.kv import SlotKVCache
 from repro.serve.request import Request, RequestState, SamplingParams, ServeStats
+
+
+def resolve_packed_mode(arg="auto") -> str:
+    """Resolve the serving weight-format knob to pack | dense | auto.
+
+    ``REPRO_SERVE_PACKED`` (env) overrides the constructor argument:
+    "1"/"pack"/"packed" packs every planned projection at engine
+    construction (hinm_spmm becomes the projection path), "0"/"dense"
+    unpacks PackedHiNM weights back to masked-dense (the fallback knob),
+    "auto"/unset serves the params exactly as handed in."""
+    env = os.environ.get("REPRO_SERVE_PACKED")
+    if env is not None and env != "":
+        arg = env
+    if arg in (True, 1, "1", "pack", "packed", "true"):
+        return "pack"
+    if arg in (False, 0, "0", "dense", "false"):
+        return "dense"
+    if arg in (None, "", "auto"):
+        return "auto"
+    raise ValueError(f"unknown packed-weights mode {arg!r}")
 
 
 def param_bytes(params) -> tuple[int, int]:
@@ -78,11 +99,21 @@ class Scheduler:
                  policy: str = "continuous", cache_kw: dict | None = None,
                  page: int | None = 64, n_pages: int | str | None = "auto",
                  bucket: bool | None = None, bucket_min: int = 8, mesh=None,
-                 spec: "spec_mod.SpecConfig | None" = None):
+                 spec: "spec_mod.SpecConfig | None" = None,
+                 packed: bool | str = "auto"):
         if policy not in ("continuous", "static"):
             raise ValueError(f"unknown admission policy {policy!r}")
         self.cfg = cfg
         self.mesh = mesh
+        # serve-time weight packing (one-time, here at construction):
+        # "pack" routes every planned q/k/v/o + MLP projection through
+        # hinm_spmm for prefill, decode and spec-verify; "dense" is the
+        # fallback knob (PackedHiNM unpacked to masked-dense matmuls)
+        self.packed_mode = resolve_packed_mode(packed)
+        if self.packed_mode == "pack":
+            params = zoo.pack_params(cfg, params)
+        elif self.packed_mode == "dense":
+            params = zoo.unpack_params(cfg, params)
         if mesh is not None:
             # decode runs data-parallel over the mesh with replicated
             # weights (page/slot-axis sharding is the cache's job; tensor-
@@ -157,6 +188,18 @@ class Scheduler:
 
         self.kv = SlotKVCache(cfg, max_slots, max_seq, page=page,
                               n_pages=n_pages, mesh=mesh, **(cache_kw or {}))
+        # paged-attention kernel routing, resolved once per scheduler: the
+        # family must expose the shared pool layout, and a page-sharded
+        # pool defers to the SPMD gather path (the kernel is a single-
+        # device program) unless KNOBS.paged_attn_sharded replicated the
+        # pool. The jitted closures below trace under this resolved mode.
+        from repro.perf_knobs import KNOBS
+
+        self.paged_attn = KNOBS.paged_attn
+        if not (self.kv.paged and zoo.supports_paged_attn_kernel(cfg)):
+            self.paged_attn = "off"
+        elif self.kv.page_sharded and not KNOBS.paged_attn_sharded:
+            self.paged_attn = "off"
         # enc-dec pools cache the encoder output at fixed width t_enc
         # (pass cache_kw={"t_enc": ...} to right-size it for the workload)
         self._t_enc = (cache_kw or {}).get("t_enc") or max_seq
@@ -216,8 +259,11 @@ class Scheduler:
                 tok = jnp.where(active, nxt, tok[:, 0])[:, None]
                 return (cache, tok, active, rem, gens), emit
 
-            carry, emits = jax.lax.scan(
-                step, (cache, tok, active, rem, gens), None, length=chunk)
+            from repro.perf_knobs import knobs
+
+            with knobs(paged_attn=self.paged_attn):  # applies at trace time
+                carry, emits = jax.lax.scan(
+                    step, (cache, tok, active, rem, gens), None, length=chunk)
             if self.kv.shardings is not None:
                 # pin the scanned cache back to its page/slot-axis layout so
                 # chunked decode can't drift the pool off its shards
@@ -250,9 +296,13 @@ class Scheduler:
         def verify_fn(params, cache, drafts, tok, active, rem, temp, topk,
                       topp, eos, seeds, gens, keff, match, hist, hlen,
                       base_key, stochastic, any_reject):
+            from repro.perf_knobs import knobs
+
             pos0 = zoo.cache_position(cfg, cache)
             tokens = jnp.concatenate([tok, drafts], axis=1)
-            logits, cache, undo = zoo.verify_step(params, cfg, tokens, cache)
+            with knobs(paged_attn=self.paged_attn):  # applies at trace time
+                logits, cache, undo = zoo.verify_step(params, cfg, tokens,
+                                                      cache)
             logits = logits[..., :vocab].astype(jnp.float32)
             emits, cnt, judged, tok, active, rem, gens = spec_mod.acceptance(
                 logits, drafts, tok, base_key=base_key, seeds=seeds,

@@ -194,6 +194,50 @@ def assert_conformance(family, mesh=None):
         assert st.kv.n_free_pages == st.kv.n_alloc_pages
 
 
+def assert_kernel_conformance(family, mesh=None, replicate=False):
+    """The Pallas paged-attention kernel must be token-invisible.
+
+    Runs the paged workload with ``knobs(paged_attn="interpret")`` — the
+    kernel resolving KV tiles through the block table, under the Pallas
+    interpreter so CPU CI executes the real kernel logic — and asserts
+    token identity with the gather-path/isolated reference, for plain
+    decode and for speculative verify (the s = k+1 multi-token branch).
+
+    On a >1-device mesh the pool is page-sharded and the single-device
+    kernel must auto-downgrade to the SPMD gather path (tokens still
+    identical); with ``replicate=True`` (knob ``paged_attn_sharded``) the
+    pools replicate instead and the kernel stays engaged under the mesh.
+    """
+    from repro.perf_knobs import knobs
+
+    iso = isolated_tokens(family)
+    kn = dict(paged_attn="interpret", paged_attn_sharded=replicate)
+    with knobs(**kn):
+        toks, sp = scheduler_tokens(family, "paged", mesh=mesh)
+    assert sp.kv.paged, f"{family}: paged layout did not engage"
+    if mesh is not None and _mesh_size(mesh) > 1 and not replicate:
+        # page-sharded pool: the kernel cannot address a split pool, the
+        # Scheduler must fall back to the gather path rather than crash
+        assert sp.paged_attn == "off", sp.paged_attn
+        assert sp.kv.page_sharded
+    else:
+        assert sp.paged_attn == "interpret", sp.paged_attn
+        if replicate and mesh is not None and _mesh_size(mesh) > 1:
+            # the knob replicated the pools (kernel-compatible layout);
+            # this is the one sanctioned exception to the page-sharding
+            # assertion in assert_conformance
+            assert _pool_leaf(sp.kv.cache).sharding.is_fully_replicated
+            assert not sp.kv.page_sharded
+    assert toks == iso, f"{family}: kernel decode diverged from isolated"
+
+    with knobs(**kn):
+        stoks, ss = scheduler_tokens(family, "paged", mesh=mesh,
+                                     spec=SpecConfig(k=3))
+    assert stoks == iso, \
+        f"{family}: kernel speculative decode diverged from isolated"
+    assert ss.stats.verify_steps > 0
+
+
 def assert_spec_conformance(family, mesh=None):
     """Speculative greedy decode must be token-identical to non-speculative
     decode: the n-gram drafter guesses, the multi-token verify scores, and
@@ -388,6 +432,11 @@ def _sharded_case(mode: str) -> None:
 def _drive(mode: str, mesh) -> None:
     if mode.startswith("conformance:"):
         assert_conformance(mode.split(":", 1)[1], mesh=mesh)
+    elif mode.startswith("kernel:"):
+        assert_kernel_conformance(mode.split(":", 1)[1], mesh=mesh)
+    elif mode.startswith("kernelrepl:"):
+        assert_kernel_conformance(mode.split(":", 1)[1], mesh=mesh,
+                                  replicate=True)
     elif mode.startswith("spec:"):
         assert_spec_conformance(mode.split(":", 1)[1], mesh=mesh)
     elif mode == "churn":
@@ -411,6 +460,18 @@ if pytest is not None:
     @pytest.mark.parametrize("family", FAMILIES)
     def test_conformance_sharded(family):
         _sharded_case(f"conformance:{family}")
+
+    @pytest.mark.parametrize("family", FAMILIES)
+    def test_conformance_kernel_unsharded(family):
+        assert_kernel_conformance(family, mesh=None)
+
+    def test_conformance_kernel_sharded_downgrade():
+        # page-sharded pool on a real 4-device mesh: kernel -> gather
+        _sharded_case("kernel:transformer")
+
+    def test_conformance_kernel_sharded_replicated():
+        # paged_attn_sharded knob: replicated pools, kernel under the mesh
+        _sharded_case("kernelrepl:transformer")
 
     @pytest.mark.parametrize("family", FAMILIES)
     def test_spec_conformance_unsharded(family):
