@@ -9,6 +9,13 @@ weight-bytes-per-token plus aggregate throughput, and compares against
 the naive static-batching policy on the same workload.
 `--compare-dense` also serves the masked-dense model and verifies
 token-identical greedy outputs under batching.
+
+Observability: `--metrics-json PATH` serves with telemetry enabled and
+writes the metrics-registry snapshot (counters / gauges / latency
+histograms, kernel dispatch decisions included) as JSON; `--trace-out
+PATH` writes the request-lifecycle spans as Chrome trace-event JSON —
+open it at https://ui.perfetto.dev to see queued/prefill/decode phases
+per request alongside the scheduler's dispatch timeline.
 """
 import argparse
 import os
@@ -54,6 +61,12 @@ def main():
     ap.add_argument("--spec-k", type=int, default=3,
                     help="draft tokens per verify for the speculative rerun "
                          "(0 disables the comparison)")
+    ap.add_argument("--metrics-json", default=None, metavar="PATH",
+                    help="serve with telemetry on and dump the metrics "
+                         "registry snapshot (JSON) here")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="serve with telemetry on and dump the Chrome "
+                         "trace-event JSON here (open in Perfetto)")
     args = ap.parse_args()
 
     cfg = load_arch("qwen2_0_5b").reduced(n_layers=4, d_model=256, n_heads=4,
@@ -70,8 +83,13 @@ def main():
     rng = np.random.default_rng(0)
     workload = build_workload(cfg, args.requests, args.prompt_len, rng)
 
+    telemetry = None
+    if args.metrics_json or args.trace_out:
+        from repro.serve import Telemetry
+
+        telemetry = Telemetry(enabled=True)
     sched = Scheduler(cfg, packed, max_slots=args.slots, max_seq=max_seq,
-                      decode_chunk=args.decode_chunk)
+                      decode_chunk=args.decode_chunk, telemetry=telemetry)
     done = sched.run(workload)
     st = sched.stats
     pb = st.packed_param_bytes
@@ -89,6 +107,18 @@ def main():
           f"{st.finished_at_eos} finished at EOS")
     print(f"weight bytes: packed/dense = {st.weight_bytes_ratio:.3f} "
           f"(~{1 / st.weight_bytes_ratio:.1f}x less HBM traffic per read)")
+    print(f"latency: p50 ttft {1e3 * st.ttft_percentile(50):.1f}ms, "
+          f"p99 ttft {1e3 * st.ttft_percentile(99):.1f}ms, "
+          f"p99 decode step {1e6 * st.step_time_percentile(99):.0f}us")
+
+    if telemetry is not None:
+        if args.metrics_json:
+            telemetry.dump_metrics(args.metrics_json)
+            print(f"metrics snapshot -> {args.metrics_json}")
+        if args.trace_out:
+            telemetry.dump_trace(args.trace_out)
+            print(f"chrome trace -> {args.trace_out} "
+                  f"(open at https://ui.perfetto.dev)")
 
     static = Scheduler(cfg, packed, max_slots=args.slots, max_seq=max_seq,
                        decode_chunk=args.decode_chunk, policy="static")

@@ -42,6 +42,17 @@ def pick_tile(n_units: int, fixed_bytes: int, per_unit_bytes: int, *,
     return t
 
 
+def _count_dispatch(decision: str, reason: str) -> None:
+    """Tally a paged-attention backend decision in the global metrics
+    registry. Imported lazily: `repro.serve.telemetry` must not be a
+    module-level dependency of the kernel layer (the serve package sits
+    above it in the import graph)."""
+    from repro.serve.telemetry import metrics as _tm
+
+    _tm.GLOBAL.counter("paged_attn_dispatch",
+                       labels={"decision": decision, "reason": reason}).inc()
+
+
 def paged_attention(
     q: jax.Array,          # (B, s, H, hd)
     k_pool: jax.Array,     # (n_pages, page, KV, hd)
@@ -58,13 +69,25 @@ def paged_attention(
     Returns (B, s, H, hd), or None when the chosen backend defers to the
     caller's jnp ``pool[bt]`` gather path ("off", or "auto" off-TPU —
     interpret mode is a correctness harness, not a CPU fast path).
+
+    Every call lands a labeled count in the process-global telemetry
+    registry (decision + deferral reason).  This function runs at trace
+    time — once per XLA trace, not per decode step — so the counters
+    report *dispatch decisions*, exactly the attribution the serving
+    observability layer wants, at zero steady-state cost.
     """
     if backend in ("off", "gather"):
+        _count_dispatch("gather", "knob-off")
         return None
     if backend == "auto":
         if not _on_tpu():
+            _count_dispatch("gather", "auto-no-tpu")
             return None
         backend = "pallas"
+        _count_dispatch("pallas", "auto-tpu")
+    elif backend in ("pallas", "on", "interpret"):
+        _count_dispatch("interpret" if backend == "interpret" else "pallas",
+                        "forced")
     if backend not in ("pallas", "on", "interpret"):
         raise ValueError(f"unknown paged-attention backend {backend!r}")
     from repro.kernels import paged_attn as _pattn

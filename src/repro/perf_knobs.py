@@ -43,6 +43,12 @@ class Knobs:
     # the kernel is a single-device program, so a page-sharded pool makes
     # the Scheduler fall back to the SPMD gather path instead.
     paged_attn_sharded: bool = False
+    # Serving telemetry (serve/telemetry): False = trace-time instruments
+    # only (compile counts, kernel dispatch decisions — free per step);
+    # True = schedulers default to full wall-clock instrumentation +
+    # request-lifecycle tracing (<3% decode tok/s at bench shapes,
+    # CI-asserted). Per-scheduler override: Scheduler(telemetry=...).
+    telemetry: bool = False
     # Cross-entropy chunk length (sequence positions per logits chunk).
     xent_chunk: int = 512
     # Attention block sizes (train/prefill flash-style scan).

@@ -4,9 +4,15 @@ from repro.serve.kv import SlotKVCache
 from repro.serve.request import Request, RequestState, SamplingParams, ServeStats
 from repro.serve.scheduler import Scheduler, param_bytes
 from repro.serve.spec import ModelDrafter, NgramDrafter, SpecConfig
+from repro.serve.telemetry import (MetricsRegistry, Telemetry, TraceRecorder,
+                                   resolve_telemetry)
 
 __all__ = [
     "sampler",
+    "MetricsRegistry",
+    "Telemetry",
+    "TraceRecorder",
+    "resolve_telemetry",
     "ModelDrafter",
     "NgramDrafter",
     "Request",

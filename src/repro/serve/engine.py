@@ -25,7 +25,8 @@ class ServeEngine:
     def __init__(self, cfg, params, max_seq: int = 512, temperature: float = 0.0,
                  top_k: int = 0, top_p: float = 0.0, decode_chunk: int = 8,
                  page: int | None = 64, n_pages: int | str | None = "auto",
-                 mesh=None, spec=None, packed: bool | str = "auto"):
+                 mesh=None, spec=None, packed: bool | str = "auto",
+                 telemetry=None):
         self.cfg = cfg
         self.params = params
         self.packed = packed
@@ -38,6 +39,7 @@ class ServeEngine:
         self.n_pages = n_pages
         self.mesh = mesh
         self.spec = spec
+        self.telemetry = telemetry
         self._sched: Scheduler | None = None
 
     def packed_bytes(self) -> tuple[int, int]:
@@ -49,7 +51,7 @@ class ServeEngine:
                 self.cfg, self.params, max_slots=batch, max_seq=self.max_seq,
                 decode_chunk=self.decode_chunk, rng_seed=rng_seed,
                 page=self.page, n_pages=self.n_pages, mesh=self.mesh,
-                spec=self.spec, packed=self.packed)
+                spec=self.spec, packed=self.packed, telemetry=self.telemetry)
         else:
             self._sched.reset(rng_seed)
         return self._sched

@@ -60,7 +60,7 @@ from repro.models import paging, zoo
 class SlotKVCache:
     def __init__(self, cfg, n_slots: int, max_seq: int, dtype=None,
                  page: int | None = None, n_pages: int | str | None = None,
-                 mesh=None, **cache_kw):
+                 mesh=None, metrics=None, metrics_labels=None, **cache_kw):
         self.cfg = cfg
         self.n_slots = n_slots
         self.max_seq = max_seq
@@ -144,6 +144,32 @@ class SlotKVCache:
         self._slot_cap = np.zeros((n_slots,), np.int64)
         # speculative commit/rollback jits, one per verify width (n_written)
         self._rollback_jits: dict[int, object] = {}
+
+        # pool occupancy instruments (telemetry.MetricsRegistry): gauges
+        # track slots/pages in use on every host-side accounting change
+        # (the free-page gauge's `min` is the pool's low-water mark), a
+        # counter tallies speculative rollback sweeps. `metrics=None`
+        # (standalone pools) skips all of it.
+        self._m_slots = self._m_free_pages = self._m_used_pages = None
+        self._m_rollbacks = None
+        if metrics is not None:
+            lb = dict(metrics_labels or {})
+            self._m_slots = metrics.gauge("kv_slots_in_use", labels=lb)
+            self._m_rollbacks = metrics.counter("kv_rollback_sweeps", labels=lb)
+            metrics.gauge("kv_pool_bytes", labels=lb).set(self.pool_bytes())
+            if self.paged:
+                self._m_free_pages = metrics.gauge("kv_free_pages", labels=lb)
+                self._m_used_pages = metrics.gauge("kv_pages_in_use", labels=lb)
+            self._observe_occupancy()
+
+    def _observe_occupancy(self) -> None:
+        if self._m_slots is None:
+            return
+        self._m_slots.set(self.n_slots - len(self._free))
+        if self._m_free_pages is not None:
+            free = self.n_free_pages
+            self._m_free_pages.set(free)
+            self._m_used_pages.set(self.n_alloc_pages - free)
 
     def _constrain(self, tree):
         """Pin a jitted cache update's output to the pool layout."""
@@ -246,7 +272,9 @@ class SlotKVCache:
     def acquire(self) -> int:
         if not self._free:
             raise RuntimeError("no free slots")
-        return self._free.pop(0)
+        slot = self._free.pop(0)
+        self._observe_occupancy()
+        return slot
 
     def insert(self, slot: int, cache, length: int, row: int = 0,
                reserve: int | None = None) -> None:
@@ -276,6 +304,7 @@ class SlotKVCache:
         # within its pages, so `reserve` (not n_alloc * page) is the bound
         self._slot_cap[slot] = reserve
         self.slot_len[slot] = length
+        self._observe_occupancy()
 
     def release(self, slot: int) -> None:
         """Reset `slot` to pristine state and return it (and, in paged mode,
@@ -292,6 +321,7 @@ class SlotKVCache:
         self.slot_len[slot] = 0
         self._slot_cap[slot] = 0
         self._free.append(slot)
+        self._observe_occupancy()
 
     def rollback(self, pos0, keep, n_written: int, undo=None) -> None:
         """Speculative commit/rollback (serve/spec): of the ``n_written``
@@ -322,6 +352,8 @@ class SlotKVCache:
                 rollback_fn, donate_argnums=(0,))
         self.cache = jit(self.cache, undo, jnp.asarray(pos0, jnp.int32),
                          jnp.asarray(keep, jnp.int32))
+        if self._m_rollbacks is not None:
+            self._m_rollbacks.inc()
 
     def reset_all(self) -> None:
         if self.paged:
@@ -338,3 +370,4 @@ class SlotKVCache:
         self._free = list(range(self.n_slots))
         self.slot_len[:] = 0
         self._slot_cap[:] = 0
+        self._observe_occupancy()

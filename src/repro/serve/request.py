@@ -14,6 +14,8 @@ import enum
 
 import numpy as np
 
+from repro.serve.telemetry.metrics import NAN, Histogram
+
 
 class RequestState(enum.Enum):
     QUEUED = "queued"
@@ -62,6 +64,10 @@ class Request:
     admit_time: float = 0.0
     first_token_time: float = 0.0
     finish_time: float = 0.0
+    # lifecycle span events (telemetry.SpanEvent), populated when the
+    # scheduler serves with telemetry enabled: queued -> prefill[bucket]
+    # -> decode -> finish, exportable via TraceRecorder.chrome_trace
+    spans: list = dataclasses.field(default_factory=list, repr=False)
     # sum over this request's decode steps of 1/(active slots that step):
     # its share of the whole-model weight reads the batch amortises
     shared_decode_steps: float = 0.0
@@ -86,12 +92,32 @@ class Request:
 
     @property
     def ttft(self) -> float:
+        """Submit -> first token. NaN while no first token exists (queued,
+        prefilling, or cancelled requests) — a 0.0 `first_token_time` is
+        "never set", and subtracting it would fabricate a huge or negative
+        latency instead of an unmistakable sentinel."""
+        if not self.first_token_time or not self.submit_time:
+            return NAN
         return self.first_token_time - self.submit_time
 
     @property
     def tokens_per_second(self) -> float:
+        """Decode throughput (first token -> finish). NaN until the
+        request actually finished (same sentinel rule as `ttft`)."""
+        if not self.finish_time or not self.first_token_time:
+            return NAN
         span = self.finish_time - self.first_token_time
         return (self.n_generated - 1) / max(span, 1e-9)
+
+    @property
+    def tpot(self) -> float:
+        """Time per output token after the first (NaN until finished or
+        when only the first token was emitted)."""
+        if not self.finish_time or not self.first_token_time:
+            return NAN
+        if self.n_generated <= 1:
+            return NAN
+        return (self.finish_time - self.first_token_time) / (self.n_generated - 1)
 
     def weight_bytes_per_token(self, packed_param_bytes: int) -> float:
         """This request's share of packed-weight HBM reads per token."""
@@ -117,6 +143,28 @@ class ServeStats:
     lane_verify_steps: int = 0     # sum over slots of verifies they rode
     draft_proposed: int = 0
     draft_accepted: int = 0
+    # --- latency distributions (always populated: one observe per request
+    # or per decode chunk — the percentile columns in serve_bench do not
+    # depend on the telemetry knob) ---
+    ttft_hist: Histogram = dataclasses.field(
+        default_factory=lambda: Histogram("serve_ttft_seconds"))
+    tpot_hist: Histogram = dataclasses.field(
+        default_factory=lambda: Histogram("serve_tpot_seconds"))
+    step_time_hist: Histogram = dataclasses.field(
+        default_factory=lambda: Histogram("serve_decode_step_seconds"))
+
+    def observe_finish(self, req: "Request") -> None:
+        """Fold a finished request's latencies into the distributions."""
+        if req.ttft == req.ttft:  # NaN-safe: unset timestamps never land
+            self.ttft_hist.observe(req.ttft)
+        if req.tpot == req.tpot:
+            self.tpot_hist.observe(req.tpot)
+
+    def ttft_percentile(self, q: float) -> float:
+        return self.ttft_hist.percentile(q)
+
+    def step_time_percentile(self, q: float) -> float:
+        return self.step_time_hist.percentile(q)
 
     @property
     def decode_tokens_per_second(self) -> float:

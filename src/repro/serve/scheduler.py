@@ -57,6 +57,7 @@ from repro.serve import sampler
 from repro.serve import spec as spec_mod
 from repro.serve.kv import SlotKVCache
 from repro.serve.request import Request, RequestState, SamplingParams, ServeStats
+from repro.serve.telemetry import resolve_telemetry
 
 
 def resolve_packed_mode(arg="auto") -> str:
@@ -100,11 +101,26 @@ class Scheduler:
                  page: int | None = 64, n_pages: int | str | None = "auto",
                  bucket: bool | None = None, bucket_min: int = 8, mesh=None,
                  spec: "spec_mod.SpecConfig | None" = None,
-                 packed: bool | str = "auto"):
+                 packed: bool | str = "auto", telemetry=None):
         if policy not in ("continuous", "static"):
             raise ValueError(f"unknown admission policy {policy!r}")
         self.cfg = cfg
         self.mesh = mesh
+        # observability bundle (serve/telemetry): None/"auto" defers to
+        # KNOBS.telemetry (off by default). The registry is live either
+        # way — trace-time instruments (compile counts, kernel dispatch)
+        # are free per step; `enabled` gates the wall-clock histograms
+        # and request-lifecycle span recording on the hot path.
+        self.telemetry = resolve_telemetry(telemetry)
+        m = self.telemetry.registry
+        self._m_prefill_traces = m.counter("serve_prefill_traces")
+        self._m_admit_wait = m.histogram("serve_admission_wait_seconds")
+        self._m_step = m.histogram("serve_decode_step_seconds")
+        self._m_host_gap = m.histogram("serve_host_gap_seconds")
+        self._m_spec_draft = m.histogram("serve_spec_draft_seconds")
+        self._m_spec_verify = m.histogram("serve_spec_verify_seconds")
+        self._m_spec_accept = m.histogram(
+            "serve_spec_window_acceptance", lo=1e-4, growth=1.2, n_buckets=50)
         # serve-time weight packing (one-time, here at construction):
         # "pack" routes every planned q/k/v/o + MLP projection through
         # hinm_spmm for prefill, decode and spec-verify; "dense" is the
@@ -142,9 +158,6 @@ class Scheduler:
             raise ValueError(f"{cfg.family!r} prefill cannot be length-bucketed")
         self.bucket = can_bucket if bucket is None else bucket
         self.bucket_min = bucket_min
-        # distinct XLA traces of the admission prefill (the compile-count
-        # column in benchmarks/serve_bench.py)
-        self.prefill_traces = 0
 
         # --- speculative decoding (serve/spec) ---
         self.spec = spec
@@ -184,10 +197,14 @@ class Scheduler:
                 # lockstep with the target so both caches always hold the
                 # same committed token stream
                 self.draft_kv = SlotKVCache(d.cfg, max_slots, max_seq,
-                                            mesh=mesh)
+                                            mesh=mesh,
+                                            metrics=self.telemetry.registry,
+                                            metrics_labels={"pool": "draft"})
 
         self.kv = SlotKVCache(cfg, max_slots, max_seq, page=page,
-                              n_pages=n_pages, mesh=mesh, **(cache_kw or {}))
+                              n_pages=n_pages, mesh=mesh,
+                              metrics=self.telemetry.registry,
+                              **(cache_kw or {}))
         # paged-attention kernel routing, resolved once per scheduler: the
         # family must expose the shared pool layout, and a page-sharded
         # pool defers to the SPMD gather path (the kernel is a single-
@@ -196,10 +213,18 @@ class Scheduler:
         from repro.perf_knobs import KNOBS
 
         self.paged_attn = KNOBS.paged_attn
-        if not (self.kv.paged and zoo.supports_paged_attn_kernel(cfg)):
-            self.paged_attn = "off"
+        defer = None
+        if not self.kv.paged:
+            defer = "pool-not-paged"
+        elif not zoo.supports_paged_attn_kernel(cfg):
+            defer = "family-unsupported"
         elif self.kv.page_sharded and not KNOBS.paged_attn_sharded:
+            defer = "page-sharded-pool"
+        if defer is not None:
             self.paged_attn = "off"
+            if KNOBS.paged_attn != "off":  # an actual downgrade, not a knob
+                m.counter("serve_paged_attn_deferred",
+                          labels={"reason": defer}).inc()
         # enc-dec pools cache the encoder output at fixed width t_enc
         # (pass cache_kw={"t_enc": ...} to right-size it for the workload)
         self._t_enc = (cache_kw or {}).get("t_enc") or max_seq
@@ -226,7 +251,7 @@ class Scheduler:
 
         def prefill_fn(params, tokens, cache, embeds, base_key, seeds, temp,
                        topk, topp, n_rows, stochastic):
-            self.prefill_traces += 1  # runs at trace time only
+            self._m_prefill_traces.inc()  # runs at trace time only
             last, cache = zoo.prefill(params, cfg, tokens, cache,
                                       embeds=embeds, n_rows=n_rows)
             logits = zoo.logits_fn(params, cfg, last)[:, :vocab].astype(jnp.float32)
@@ -390,6 +415,9 @@ class Scheduler:
                  self._match, self._hist, self._hlen, self._key), rep)
         self._active_host[:] = False
         self._keff_host[:] = 0
+        # end timestamp of the last decode dispatch+sync: the gap until
+        # the next dispatch is pure host time (admission, harvest, python)
+        self._last_sync = None
 
     def reset(self, rng_seed: int = 0) -> None:
         """Drop all queued/running requests and restore pristine state."""
@@ -403,6 +431,19 @@ class Scheduler:
             0.0, 0.0, 0, self.stats.packed_param_bytes, self.stats.dense_param_bytes)
 
     # -- request lifecycle --------------------------------------------------
+
+    @property
+    def prefill_traces(self) -> int:
+        """Deprecated alias for the ``serve_prefill_traces`` registry
+        counter (distinct XLA traces of the admission prefill — the
+        compile-count column in benchmarks/serve_bench.py). Compile-count
+        tracking lives in `self.telemetry.registry` with the other
+        instruments; this property survives for existing callers."""
+        return int(self._m_prefill_traces.value)
+
+    def metrics_snapshot(self, include_global: bool = True) -> dict:
+        """JSON-able snapshot of every instrument this scheduler feeds."""
+        return self.telemetry.snapshot(include_global=include_global)
 
     @property
     def n_pending(self) -> int:
@@ -475,6 +516,11 @@ class Scheduler:
         self.stats.requests_finished += 1
         if req.finish_reason == "eos":
             self.stats.finished_at_eos += 1
+        self.stats.observe_finish(req)
+        if self.telemetry.enabled and req.first_token_time:
+            self.telemetry.tracer.request_span(
+                req, "decode", req.first_token_time, req.finish_time,
+                tokens=req.n_generated, reason=req.finish_reason)
         finished.append(req)
 
     def _admit(self, finished: list[Request]) -> None:
@@ -563,11 +609,12 @@ class Scheduler:
             topps = np.asarray([r.params.top_p for r in group], np.float32)
             seeds = np.asarray([self._eff_seed(r) for r in group], np.int32)
         t0 = time.perf_counter()
-        first, cache_k = self._prefill(
-            self.params, tokens, self.kv.template(k_b), embeds, self._key,
-            jnp.asarray(seeds), jnp.asarray(temps), jnp.asarray(topks),
-            jnp.asarray(topps), n_rows_dev,
-            stochastic=bool((temps[:k] > 0).any()))
+        with self.telemetry.annotation("serve_prefill"):
+            first, cache_k = self._prefill(
+                self.params, tokens, self.kv.template(k_b), embeds, self._key,
+                jnp.asarray(seeds), jnp.asarray(temps), jnp.asarray(topks),
+                jnp.asarray(topps), n_rows_dev,
+                stochastic=bool((temps[:k] > 0).any()))
         draft_cache_k = None
         if self.draft_kv is not None:
             # the draft model prefills the same prompts into its own pool
@@ -578,6 +625,18 @@ class Scheduler:
         first_np = np.asarray(first)  # one sync per admitted group (= TTFT)
         now = time.perf_counter()
         self.stats.prefill_seconds += now - t0
+        if self.telemetry.enabled:
+            blen = int(tokens.shape[1])
+            tr = self.telemetry.tracer
+            self.telemetry.registry.histogram(
+                "serve_prefill_seconds",
+                labels={"bucket": str(blen)}).observe(now - t0)
+            tr.span("scheduler", f"prefill[b{blen}]", t0, now,
+                    requests=k, bucket=blen)
+            for req in group:
+                self._m_admit_wait.observe(req.admit_time - req.submit_time)
+                tr.request_span(req, "queued", req.submit_time, req.admit_time)
+                tr.request_span(req, f"prefill[b{blen}]", t0, now)
         for row, req in enumerate(group):
             p = req.params
             eos = self._eff_eos(req)
@@ -636,15 +695,29 @@ class Scheduler:
             return
         stochastic = any(r.params.temperature > 0 for r in self._running.values())
         t0 = time.perf_counter()
-        (self.kv.cache, self._tok, self._active, self._rem, self._gens,
-         emits) = self._chunk(
-            self.params, self.kv.cache, self._tok, self._active, self._rem,
-            self._temp, self._topk, self._topp, self._eos, self._seeds,
-            self._gens, self._key, stochastic=stochastic)
-        emits = np.asarray(emits)                 # (chunk, slots) — one sync
-        active_np = np.asarray(self._active)
-        self.stats.decode_seconds += time.perf_counter() - t0
+        if self.telemetry.enabled and self._last_sync is not None:
+            self._m_host_gap.observe(t0 - self._last_sync)
+        with self.telemetry.annotation("serve_decode_chunk",
+                                       step=self.stats.decode_steps):
+            (self.kv.cache, self._tok, self._active, self._rem, self._gens,
+             emits) = self._chunk(
+                self.params, self.kv.cache, self._tok, self._active, self._rem,
+                self._temp, self._topk, self._topp, self._eos, self._seeds,
+                self._gens, self._key, stochastic=stochastic)
+            emits = np.asarray(emits)             # (chunk, slots) — one sync
+            active_np = np.asarray(self._active)
+        t1 = time.perf_counter()
+        self.stats.decode_seconds += t1 - t0
         self.stats.decode_steps += self.decode_chunk
+        self.stats.step_time_hist.observe((t1 - t0) / self.decode_chunk,
+                                          n=self.decode_chunk)
+        if self.telemetry.enabled:
+            self._m_step.observe((t1 - t0) / self.decode_chunk,
+                                 n=self.decode_chunk)
+            self.telemetry.tracer.span(
+                "scheduler", "decode_chunk", t0, t1, steps=self.decode_chunk,
+                lanes=int(self._active_host.sum()))
+        self._last_sync = t1
 
         width = np.maximum((emits >= 0).sum(axis=1), 1)  # active lanes/step
         for slot, req in list(self._running.items()):
@@ -684,26 +757,44 @@ class Scheduler:
         any_reject = any(r.params.temperature > 0
                          and r.params.spec_accept == "reject"
                          for r in self._running.values())
+        tele = self.telemetry.enabled
         t0 = time.perf_counter()
+        if tele and self._last_sync is not None:
+            self._m_host_gap.observe(t0 - self._last_sync)
+        dp0, da0 = self.stats.draft_proposed, self.stats.draft_accepted
         emits_dev, cnts_dev, judged_dev = [], [], []
         for _ in range(cycles):
-            if self.draft_kv is not None:
-                drafts, dpos0, self.draft_kv.cache = self._draft_propose(
-                    self._draft_params, self.draft_kv.cache, self._tok)
-            else:
-                drafts = self._propose(self._hist, self._hlen, self._tok)
-                dpos0 = None
-            (self.kv.cache, undo, pos0, emits, cnt, judged, self._tok,
-             self._active, self._rem, self._gens, self._hist,
-             self._hlen) = self._verify(
-                self.params, self.kv.cache, drafts, self._tok, self._active,
-                self._rem, self._temp, self._topk, self._topp, self._eos,
-                self._seeds, self._gens, self._keff, self._match, self._hist,
-                self._hlen, self._key, stochastic=stochastic,
-                any_reject=any_reject)
-            self.kv.rollback(pos0, cnt, s_width, undo=undo)
-            if dpos0 is not None:
-                self.draft_kv.rollback(dpos0, cnt, s_width)
+            # the draft/verify split is dispatch-side wall time: the only
+            # device sync stays the stacked emit matrix below, so these
+            # histograms attribute host/dispatch cost, with device compute
+            # folded into whichever dispatch first blocks on it
+            td0 = time.perf_counter() if tele else 0.0
+            with self.telemetry.annotation("serve_spec_draft"):
+                if self.draft_kv is not None:
+                    drafts, dpos0, self.draft_kv.cache = self._draft_propose(
+                        self._draft_params, self.draft_kv.cache, self._tok)
+                else:
+                    drafts = self._propose(self._hist, self._hlen, self._tok)
+                    dpos0 = None
+            td1 = time.perf_counter() if tele else 0.0
+            with self.telemetry.annotation("serve_spec_verify"):
+                (self.kv.cache, undo, pos0, emits, cnt, judged, self._tok,
+                 self._active, self._rem, self._gens, self._hist,
+                 self._hlen) = self._verify(
+                    self.params, self.kv.cache, drafts, self._tok, self._active,
+                    self._rem, self._temp, self._topk, self._topp, self._eos,
+                    self._seeds, self._gens, self._keff, self._match, self._hist,
+                    self._hlen, self._key, stochastic=stochastic,
+                    any_reject=any_reject)
+                self.kv.rollback(pos0, cnt, s_width, undo=undo)
+                if dpos0 is not None:
+                    self.draft_kv.rollback(dpos0, cnt, s_width)
+            if tele:
+                td2 = time.perf_counter()
+                self._m_spec_draft.observe(td1 - td0)
+                self._m_spec_verify.observe(td2 - td1)
+                self.telemetry.tracer.span("scheduler", "spec_draft", td0, td1)
+                self.telemetry.tracer.span("scheduler", "spec_verify", td1, td2)
             emits_dev.append(emits)
             cnts_dev.append(cnt)
             judged_dev.append(judged)
@@ -711,9 +802,17 @@ class Scheduler:
         cnts_np = np.asarray(jnp.stack(cnts_dev))     # (cycles, slots)
         judged_np = np.asarray(jnp.stack(judged_dev))  # (cycles, slots)
         active_np = np.asarray(self._active)
-        self.stats.decode_seconds += time.perf_counter() - t0
+        t1 = time.perf_counter()
+        self.stats.decode_seconds += t1 - t0
         self.stats.decode_steps += cycles
         self.stats.verify_steps += cycles
+        self.stats.step_time_hist.observe((t1 - t0) / cycles, n=cycles)
+        if tele:
+            self._m_step.observe((t1 - t0) / cycles, n=cycles)
+            self.telemetry.tracer.span(
+                "scheduler", "spec_cycles", t0, t1, cycles=cycles,
+                lanes=int(self._active_host.sum()))
+        self._last_sync = t1
 
         # lanes that emitted in a cycle share that cycle's weight read
         width = np.maximum((cnts_np > 0).sum(axis=1), 1)
@@ -749,6 +848,14 @@ class Scheduler:
             if not active_np[slot]:
                 self._finish(req, finished)
                 self._release_slot(slot)
+        if tele:
+            # per-window acceptance: this harvest's accepted/proposed ratio
+            # (a drifting distribution here flags drafter quality decaying
+            # over the workload, which the aggregate rate averages away)
+            dp = self.stats.draft_proposed - dp0
+            if dp:
+                self._m_spec_accept.observe(
+                    (self.stats.draft_accepted - da0) / dp)
 
     def step(self) -> list[Request]:
         """One scheduler iteration: admit into free slots, run one decode

@@ -1,0 +1,81 @@
+"""Serving observability: metrics registry + request-lifecycle tracing.
+
+`Telemetry` is the bundle the scheduler threads through the runtime — a
+`MetricsRegistry` (counters / gauges / log-bucketed histograms, see
+`metrics.py`) plus a `TraceRecorder` (Chrome-trace span export, see
+`tracing.py`) behind one `enabled` switch:
+
+- **disabled (the default)** — the registry still exists and trace-time
+  instruments (prefill compile counts, kernel dispatch decisions) still
+  record, because they cost nothing per decode step; but all hot-path
+  wall-clock instrumentation and span recording is skipped, so serving
+  runs at baseline speed (<1% decode tokens/s, asserted by the bench);
+- **enabled** — admission/prefill/decode/host-gap/spec phases are timed
+  into histograms, the KV pool's occupancy gauges update, and every
+  request accumulates lifecycle spans exported as Perfetto-loadable
+  trace JSON.  Budget: <3% decode tokens/s at bench shapes (CI-asserted
+  by `benchmarks/serve_bench.py`).
+
+Resolution order for `Scheduler(telemetry=...)`: a `Telemetry` instance
+is used as-is; `True`/`False` build a fresh enabled/disabled bundle;
+`None`/"auto" defer to `perf_knobs.KNOBS.telemetry` (off by default).
+"""
+from __future__ import annotations
+
+from repro.serve.telemetry.metrics import (GLOBAL, Counter, Gauge, Histogram,
+                                           MetricsRegistry, reset_global)
+from repro.serve.telemetry.tracing import SpanEvent, TraceRecorder
+
+__all__ = [
+    "GLOBAL",
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "SpanEvent",
+    "Telemetry",
+    "TraceRecorder",
+    "reset_global",
+    "resolve_telemetry",
+]
+
+
+class Telemetry:
+    def __init__(self, enabled: bool = True, annotate: bool = False,
+                 registry: MetricsRegistry | None = None,
+                 tracer: TraceRecorder | None = None):
+        self.enabled = bool(enabled)
+        self.registry = registry if registry is not None else MetricsRegistry()
+        self.tracer = tracer if tracer is not None else TraceRecorder(annotate)
+
+    def annotation(self, name: str, step: int | None = None):
+        return self.tracer.annotation(name, step)
+
+    def snapshot(self, include_global: bool = True) -> dict:
+        """JSON-able snapshot of this bundle's registry, with the
+        process-global instruments (kernel dispatch counters) merged in
+        under their own key so the two scopes stay distinguishable."""
+        snap = {"enabled": self.enabled, **self.registry.snapshot()}
+        if include_global:
+            snap["global"] = GLOBAL.snapshot()
+        return snap
+
+    def dump_metrics(self, path: str) -> None:
+        import json
+
+        with open(path, "w") as f:
+            json.dump(self.snapshot(), f, indent=1)
+
+    def dump_trace(self, path: str) -> None:
+        self.tracer.dump(path)
+
+
+def resolve_telemetry(arg) -> Telemetry:
+    """Resolve the `Scheduler(telemetry=...)` knob to a `Telemetry`."""
+    if isinstance(arg, Telemetry):
+        return arg
+    if arg is None or arg == "auto":
+        from repro.perf_knobs import KNOBS
+
+        return Telemetry(enabled=bool(KNOBS.telemetry))
+    return Telemetry(enabled=bool(arg))

@@ -1,0 +1,121 @@
+"""Request-lifecycle tracing: typed spans -> Chrome trace-event JSON.
+
+The scheduler records wall-clock spans on named tracks — one `scheduler`
+track for batched phases (admission prefill, decode chunks, spec
+draft/verify dispatch) and one `req<rid>` track per request for its
+lifecycle (queued -> prefill[bucket] -> decode -> finish).  Request spans
+are additionally accumulated on `Request.spans` as typed `SpanEvent`s so
+tests and callers can introspect a lifecycle without parsing the export.
+
+`chrome_trace()` emits the Trace Event Format (B/E duration pairs plus
+thread-name metadata) that `chrome://tracing` and Perfetto open directly:
+every track becomes a named thread, timestamps are microseconds relative
+to the recorder epoch, and events are sorted so B/E pairs nest correctly.
+
+The optional jax-profiler bridge (`annotation(...)`) wraps host phases in
+`jax.profiler.TraceAnnotation` (and decode chunks in
+`StepTraceAnnotation`) so the same span names line up with device traces
+when a jax profile is being captured; it is a no-op when the profiler is
+absent or the bridge is off.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import json
+import time
+
+
+@dataclasses.dataclass
+class SpanEvent:
+    """One closed host span: [t0, t1] in perf_counter seconds."""
+
+    name: str
+    t0: float
+    t1: float
+    track: str = "scheduler"
+    args: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def duration(self) -> float:
+        return self.t1 - self.t0
+
+
+class TraceRecorder:
+    def __init__(self, annotate: bool = False):
+        self.epoch = time.perf_counter()
+        self.events: list[SpanEvent] = []
+        self.annotate = annotate
+        self._tids: dict[str, int] = {}
+
+    def span(self, track: str, name: str, t0: float, t1: float,
+             **args) -> SpanEvent:
+        ev = SpanEvent(name, t0, t1, track=track, args=args)
+        self.events.append(ev)
+        return ev
+
+    def request_span(self, req, name: str, t0: float, t1: float,
+                     **args) -> SpanEvent:
+        """Record a lifecycle span on the request's own track AND on the
+        request object itself (`Request.spans`)."""
+        ev = self.span(f"req{req.rid}", name, t0, t1, rid=req.rid, **args)
+        req.spans.append(ev)
+        return ev
+
+    @contextlib.contextmanager
+    def timed(self, track: str, name: str, **args):
+        t0 = time.perf_counter()
+        try:
+            yield
+        finally:
+            self.span(track, name, t0, time.perf_counter(), **args)
+
+    def annotation(self, name: str, step: int | None = None):
+        """jax-profiler bridge: a TraceAnnotation (StepTraceAnnotation when
+        `step` is given) context when the bridge is on, else a null
+        context.  Host spans then share names with device-trace slices."""
+        if not self.annotate:
+            return contextlib.nullcontext()
+        try:
+            from jax import profiler
+        except ImportError:  # pragma: no cover - jax is a hard dep here
+            return contextlib.nullcontext()
+        if step is not None and hasattr(profiler, "StepTraceAnnotation"):
+            return profiler.StepTraceAnnotation(name, step_num=step)
+        return profiler.TraceAnnotation(name)
+
+    # -- export ----------------------------------------------------------
+
+    def _tid(self, track: str) -> int:
+        return self._tids.setdefault(track, len(self._tids) + 1)
+
+    def chrome_trace(self) -> dict:
+        """Chrome Trace Event Format dict (Perfetto-loadable).
+
+        B/E pairs per span, microsecond timestamps relative to the
+        recorder epoch, one named thread per track.  Events are sorted by
+        (ts, E-before-B) so back-to-back spans whose edges share a
+        timestamp still nest; negative-duration spans are clamped to
+        zero-width rather than emitting an unmatched pair.
+        """
+        raw = []
+        for ev in self.events:
+            tid = self._tid(ev.track)
+            ts0 = max(0.0, (ev.t0 - self.epoch) * 1e6)
+            ts1 = max(ts0, (ev.t1 - self.epoch) * 1e6)
+            args = {k: v for k, v in ev.args.items()}
+            raw.append({"name": ev.name, "cat": "serve", "ph": "B",
+                        "ts": ts0, "pid": 0, "tid": tid, "args": args})
+            raw.append({"name": ev.name, "cat": "serve", "ph": "E",
+                        "ts": ts1, "pid": 0, "tid": tid})
+        raw.sort(key=lambda e: (e["ts"], 0 if e["ph"] == "E" else 1))
+        meta = [{"name": "process_name", "ph": "M", "pid": 0, "tid": 0,
+                 "args": {"name": "repro.serve"}}]
+        for track, tid in sorted(self._tids.items(), key=lambda kv: kv[1]):
+            meta.append({"name": "thread_name", "ph": "M", "pid": 0,
+                         "tid": tid, "args": {"name": track}})
+        return {"traceEvents": meta + raw, "displayTimeUnit": "ms"}
+
+    def dump(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump(self.chrome_trace(), f)

@@ -1,0 +1,360 @@
+"""Serving telemetry: metrics registry math, trace export, scheduler wiring.
+
+Covers the observability contracts the serving layer now leans on:
+histogram percentiles vs a numpy reference (log-bucket edge cases and
+empty histograms included), registry snapshot -> JSON -> restore
+round-trips, Chrome-trace structural validity (monotonic timestamps,
+matched B/E pairs — the committed bench trace too, so the artifact that
+claims to open in Perfetto actually parses), and the conformance rule
+that telemetry on vs off yields bit-identical tokens."""
+import json
+import math
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import load_arch
+from repro.models import zoo
+from repro.serve import (Request, SamplingParams, Scheduler, SpecConfig,
+                         Telemetry)
+from repro.serve.telemetry import (GLOBAL, MetricsRegistry, TraceRecorder,
+                                   metrics as tm)
+
+
+# ---------------------------------------------------------------------------
+# histogram percentile math
+
+
+@pytest.mark.parametrize("dist", ["lognormal", "uniform", "constant"])
+def test_histogram_percentiles_match_numpy(dist):
+    rng = np.random.default_rng(0)
+    if dist == "lognormal":
+        xs = rng.lognormal(mean=-7, sigma=2.0, size=500)  # us..s latencies
+    elif dist == "uniform":
+        xs = rng.uniform(1e-5, 1e-2, size=500)
+    else:
+        xs = np.full(100, 3.14e-3)
+    h = tm.Histogram("t")
+    for x in xs:
+        h.observe(float(x))
+    assert h.exact
+    for q in (0, 10, 50, 90, 99, 100):
+        assert h.percentile(q) == pytest.approx(np.percentile(xs, q), rel=1e-12)
+    assert h.mean == pytest.approx(xs.mean())
+    assert h.count == len(xs)
+    assert h.min == pytest.approx(xs.min()) and h.max == pytest.approx(xs.max())
+
+
+def test_histogram_empty_and_single():
+    h = tm.Histogram("t")
+    assert math.isnan(h.percentile(50)) and math.isnan(h.mean)
+    assert h.count == 0
+    h.observe(0.25)
+    assert h.percentile(50) == 0.25 == h.percentile(99)
+
+
+def test_histogram_log_bucket_edges():
+    h = tm.Histogram("t", lo=1e-6, growth=2.0, n_buckets=10)
+    # underflow (<= lo, including 0 and negatives) lands in bucket 0
+    for v in (0.0, -1.0, 1e-9, 1e-6):
+        assert h._bucket(v) == 0
+    # beyond the top bound -> overflow bucket, never out of range
+    assert h._bucket(1e6) == h.n_buckets
+    # every observed value lies within its bucket's (lower, upper] range
+    rng = np.random.default_rng(1)
+    for v in np.concatenate([rng.lognormal(-10, 4, 200),
+                             1e-6 * 2.0 ** np.arange(12)]):  # exact bounds
+        v = float(v)
+        i = h._bucket(v)
+        down, up = h.bucket_bounds(i)
+        assert v <= up and (i == 0 or v > down * (1 - 1e-12))
+    h2 = tm.Histogram("t2")
+    for v in (1e-5, 3e-4, 0.1):
+        h2.observe(v)
+    assert sum(h2.counts) == h2.count == 3
+
+
+def test_histogram_bucket_estimate_beyond_cap():
+    rng = np.random.default_rng(2)
+    xs = rng.lognormal(mean=-6, sigma=1.5, size=2000)
+    h = tm.Histogram("t", sample_cap=64)  # force the estimate path
+    for x in xs:
+        h.observe(float(x))
+    assert not h.exact
+    for q in (50, 90, 99):
+        true = np.percentile(xs, q)
+        est = h.percentile(q)
+        # bounded by the bucket's geometric width around the true value
+        assert true / h.growth ** 2 <= est <= true * h.growth ** 2
+        assert h.min <= est <= h.max
+
+
+def test_histogram_weighted_observe():
+    h = tm.Histogram("t")
+    h.observe(2e-3, n=5)
+    h.observe(8e-3)
+    assert h.count == 6
+    assert h.sum == pytest.approx(5 * 2e-3 + 8e-3)
+    assert h.percentile(50) == pytest.approx(2e-3)
+
+
+# ---------------------------------------------------------------------------
+# registry snapshot / restore / exposition
+
+
+def _populated_registry() -> MetricsRegistry:
+    reg = MetricsRegistry()
+    reg.counter("reqs").inc(7)
+    reg.counter("dispatch", labels={"backend": "pallas"}).inc()
+    reg.counter("dispatch", labels={"backend": "gather"}).inc(3)
+    g = reg.gauge("free_pages")
+    for v in (10, 3, 8):
+        g.set(v)
+    h = reg.histogram("lat", labels={"phase": "decode"})
+    for v in (1e-4, 5e-4, 2e-3):
+        h.observe(v)
+    reg.histogram("empty")
+    return reg
+
+
+def test_registry_snapshot_json_restore_roundtrip():
+    reg = _populated_registry()
+    snap = reg.snapshot()
+    restored = MetricsRegistry.from_snapshot(json.loads(json.dumps(snap)))
+    assert restored.snapshot() == snap
+    # restored instruments stay live, not just readable
+    assert restored.counter("reqs").value == 7
+    g = restored.gauge("free_pages")
+    assert (g.value, g.min, g.max) == (8, 3, 10)  # low-water mark survives
+    h = restored.histogram("lat", labels={"phase": "decode"})
+    assert h.percentile(50) == pytest.approx(5e-4)
+    e = restored.histogram("empty")
+    assert e.count == 0 and math.isnan(e.min)
+
+
+def test_registry_identity_and_kind_conflicts():
+    reg = MetricsRegistry()
+    assert reg.counter("a") is reg.counter("a")
+    assert reg.counter("a", {"x": "1"}) is not reg.counter("a", {"x": "2"})
+    with pytest.raises(ValueError):
+        reg.gauge("a")  # same name, different kind
+
+
+def test_prometheus_exposition():
+    text = _populated_registry().render_prometheus()
+    assert "# TYPE reqs counter" in text
+    assert "reqs 7" in text
+    assert 'dispatch{backend="pallas"} 1' in text
+    assert "# TYPE free_pages gauge" in text
+    assert 'lat_count{phase="decode"} 3' in text
+    assert 'le="+Inf"' in text
+    # cumulative buckets end at the total count
+    last_bucket = [l for l in text.splitlines() if 'lat_bucket' in l][-1]
+    assert last_bucket.endswith(" 3")
+
+
+# ---------------------------------------------------------------------------
+# chrome trace export
+
+
+def _validate_chrome_trace(doc: dict) -> None:
+    evs = doc["traceEvents"]
+    assert evs, "empty trace"
+    spans = [e for e in evs if e["ph"] in ("B", "E")]
+    last_ts = -1.0
+    stacks: dict[tuple, list] = {}
+    for e in spans:
+        assert e["ts"] >= 0
+        assert e["ts"] >= last_ts, "timestamps not monotonic"
+        last_ts = e["ts"]
+        key = (e["pid"], e["tid"])
+        if e["ph"] == "B":
+            stacks.setdefault(key, []).append(e["name"])
+        else:
+            assert stacks.get(key), f"E without open B on {key}"
+            stacks[key].pop()
+    assert all(not s for s in stacks.values()), "unclosed B events"
+    for e in evs:
+        assert e["ph"] in ("B", "E", "M")
+
+
+def test_trace_recorder_export_valid(tmp_path):
+    tr = TraceRecorder()
+    t = tr.epoch
+    tr.span("scheduler", "prefill[b8]", t + 0.001, t + 0.004, requests=2)
+    tr.span("scheduler", "decode_chunk", t + 0.004, t + 0.009, steps=4)
+    req = Request(rid=3, prompt=np.arange(4, dtype=np.int32))
+    tr.request_span(req, "queued", t + 0.0005, t + 0.001)
+    tr.request_span(req, "decode", t + 0.004, t + 0.009)
+    assert [s.name for s in req.spans] == ["queued", "decode"]
+    assert req.spans[0].duration == pytest.approx(0.0005)
+    doc = tr.chrome_trace()
+    _validate_chrome_trace(doc)
+    names = {e["args"]["name"] for e in doc["traceEvents"] if e["ph"] == "M"
+             and e["name"] == "thread_name"}
+    assert {"scheduler", "req3"} <= names
+    p = tmp_path / "trace.json"
+    tr.dump(str(p))
+    _validate_chrome_trace(json.loads(p.read_text()))
+
+
+def test_committed_bench_trace_is_perfetto_valid():
+    """The trace JSON serve_bench commits must stay structurally loadable."""
+    path = os.path.join(os.path.dirname(__file__), "..",
+                        "BENCH_serve_trace.json")
+    if not os.path.exists(path):
+        pytest.skip("no committed bench trace")
+    with open(path) as f:
+        doc = json.load(f)
+    _validate_chrome_trace(doc)
+    tracks = {e["args"]["name"] for e in doc["traceEvents"]
+              if e["ph"] == "M" and e["name"] == "thread_name"}
+    assert "scheduler" in tracks
+    assert any(t.startswith("req") for t in tracks)
+
+
+# ---------------------------------------------------------------------------
+# scheduler wiring
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = load_arch("qwen2_0_5b").reduced(n_layers=2, d_model=64, n_heads=4,
+                                          n_kv_heads=2, d_ff=128, vocab=128,
+                                          head_dim=16)
+    return cfg, zoo.init(jax.random.PRNGKey(0), cfg)
+
+
+def _workload(cfg, n=6, max_new=6):
+    rng = np.random.default_rng(7)
+    return [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab, (8,)).astype(np.int32),
+                    params=SamplingParams(max_new_tokens=max_new), arrival=i)
+            for i in range(n)]
+
+
+def test_telemetry_on_off_tokens_identical(small_model):
+    cfg, params = small_model
+    runs = {}
+    for mode in (False, True):
+        sched = Scheduler(cfg, params, max_slots=2, max_seq=64,
+                          decode_chunk=4, telemetry=mode)
+        reqs = _workload(cfg)
+        sched.run(reqs)
+        runs[mode] = [r.tokens for r in reqs]
+    assert runs[True] == runs[False]
+
+
+def test_telemetry_default_off_and_knob(small_model):
+    cfg, params = small_model
+    assert Scheduler(cfg, params, max_slots=2, max_seq=64).telemetry.enabled \
+        is False
+    from repro.perf_knobs import knobs
+
+    with knobs(telemetry=True):
+        assert Scheduler(cfg, params, max_slots=2,
+                         max_seq=64).telemetry.enabled is True
+
+
+def test_scheduler_instruments_populate(small_model):
+    cfg, params = small_model
+    tele = Telemetry(enabled=True)
+    sched = Scheduler(cfg, params, max_slots=2, max_seq=64, decode_chunk=4,
+                      telemetry=tele)
+    reqs = _workload(cfg)
+    sched.run(reqs)
+    reg = tele.registry
+    assert reg.histogram("serve_admission_wait_seconds").count == len(reqs)
+    assert reg.histogram("serve_decode_step_seconds").count \
+        == sched.stats.decode_steps
+    assert reg.histogram("serve_host_gap_seconds").count > 0
+    # per-bucket prefill histograms carry the bucket label
+    assert reg.get("serve_prefill_seconds", {"bucket": "8"}) is not None
+    # pool gauges: everything released at drain, low-water mark below start
+    assert reg.gauge("kv_slots_in_use").value == 0
+    assert reg.gauge("kv_slots_in_use").max == 2
+    free = reg.gauge("kv_free_pages")
+    assert free.value == free.max and free.min < free.max
+    assert reg.gauge("kv_pool_bytes").value == sched.kv.pool_bytes()
+    # stats histograms fill regardless of the knob; spans landed per request
+    assert sched.stats.ttft_hist.count == len(reqs)
+    assert all(any(s.name == "decode" for s in r.spans) for r in reqs)
+    snap = sched.metrics_snapshot()
+    assert {"metrics", "global", "enabled"} <= set(snap)
+
+
+def test_spec_loop_instruments_and_rollback_counter(small_model):
+    cfg, params = small_model
+    tele = Telemetry(enabled=True)
+    sched = Scheduler(cfg, params, max_slots=2, max_seq=64, decode_chunk=4,
+                      spec=SpecConfig(k=2, drafter="ngram"), telemetry=tele)
+    sched.run(_workload(cfg, n=4, max_new=8))
+    reg = tele.registry
+    draft = reg.histogram("serve_spec_draft_seconds")
+    verify = reg.histogram("serve_spec_verify_seconds")
+    assert draft.count == verify.count == sched.stats.verify_steps
+    assert reg.counter("kv_rollback_sweeps").value == sched.stats.verify_steps
+    acc = reg.histogram("serve_spec_window_acceptance")
+    assert acc.count > 0
+    assert 0.0 <= acc.percentile(99) <= 1.0
+
+
+def test_kernel_dispatch_counters(small_model):
+    cfg, params = small_model
+    from repro.perf_knobs import knobs
+
+    tm.reset_global()
+    with knobs(paged_attn="interpret"):
+        sched = Scheduler(cfg, params, max_slots=2, max_seq=64, decode_chunk=4)
+        sched.run(_workload(cfg, n=2))
+    forced = GLOBAL.value("paged_attn_dispatch",
+                          {"decision": "interpret", "reason": "forced"})
+    assert forced and forced >= 1  # once per XLA trace, not per step
+    tm.reset_global()
+    with knobs(paged_attn="off"):
+        sched = Scheduler(cfg, params, max_slots=2, max_seq=64, decode_chunk=4)
+        sched.run(_workload(cfg, n=2))
+    # scheduler resolved "off" itself -> layers never even ask the kernel
+    assert GLOBAL.value("paged_attn_dispatch",
+                        {"decision": "gather", "reason": "knob-off"}) is None
+
+
+def test_paged_attn_deferral_reasons(small_model):
+    cfg, params = small_model
+    from repro.perf_knobs import knobs
+
+    with knobs(paged_attn="interpret"):
+        sched = Scheduler(cfg, params, max_slots=2, max_seq=64, page=None)
+    assert sched.paged_attn == "off"
+    assert sched.telemetry.registry.value(
+        "serve_paged_attn_deferred", {"reason": "pool-not-paged"}) == 1
+
+
+# ---------------------------------------------------------------------------
+# satellite pins: NaN sentinels + prefill_traces alias
+
+
+def test_unfinished_request_stats_are_nan():
+    req = Request(rid=0, prompt=np.arange(4, dtype=np.int32))
+    req.submit_time = 123.0  # submitted but never prefilled (cancelled)
+    assert math.isnan(req.ttft)
+    assert math.isnan(req.tokens_per_second)
+    assert math.isnan(req.tpot)
+    req.first_token_time = 124.0  # first token but never finished
+    assert req.ttft == pytest.approx(1.0)
+    assert math.isnan(req.tokens_per_second)
+    req.finish_time = 125.0
+    req.tokens = [1, 2, 3]
+    assert req.tokens_per_second == pytest.approx(2.0)
+    assert req.tpot == pytest.approx(0.5)
+
+
+def test_prefill_traces_alias_tracks_registry(small_model):
+    cfg, params = small_model
+    sched = Scheduler(cfg, params, max_slots=2, max_seq=64, decode_chunk=4)
+    sched.run(_workload(cfg, n=3))
+    n = sched.telemetry.registry.counter("serve_prefill_traces").value
+    assert n >= 1
+    assert sched.prefill_traces == n  # deprecated alias, same instrument
