@@ -33,6 +33,7 @@ def main() -> None:
         "permgraph": permgraph_bench.run,
         "serve": serve_bench.run,
         "serve_spec": serve_bench.run_spec,
+        "serve_replay": serve_bench.run_replay,
     }
     pattern = sys.argv[1] if len(sys.argv) > 1 else ""
     print("name,us_per_call,derived")

@@ -10,6 +10,13 @@ the naive static-batching policy on the same workload.
 `--compare-dense` also serves the masked-dense model and verifies
 token-identical greedy outputs under batching.
 
+Prefix sharing: `--shared-prefix N` prepends one N-token system prompt to
+every request — full pages of it are cached once in the paged pool and
+refcount-mapped into later slots (copy-on-write for divergent tails), and
+the run reports the prefix hit rate and pages shared. `--prefill-chunk C`
+splits each admission's unshared suffix into C-row chunks interleaved
+with decode steps (long prompts stop spiking co-resident latency).
+
 Observability: `--metrics-json PATH` serves with telemetry enabled and
 writes the metrics-registry snapshot (counters / gauges / latency
 histograms, kernel dispatch decisions included) as JSON; `--trace-out
@@ -27,9 +34,10 @@ import jax
 import numpy as np
 
 
-def build_workload(cfg, n_requests, prompt_len, rng):
+def build_workload(cfg, n_requests, prompt_len, rng, shared_prefix=0):
     from repro.serve import Request, SamplingParams
 
+    system = rng.integers(0, cfg.vocab, (shared_prefix,)).astype(np.int32)
     reqs = []
     for i in range(n_requests):
         params = SamplingParams(
@@ -37,9 +45,10 @@ def build_workload(cfg, n_requests, prompt_len, rng):
             temperature=0.8 if i % 4 == 3 else 0.0,   # mix greedy + sampled
             top_k=16 if i % 4 == 3 else 0,
         )
+        tail = rng.integers(0, cfg.vocab, (prompt_len,)).astype(np.int32)
         reqs.append(Request(
             rid=i,
-            prompt=rng.integers(0, cfg.vocab, (prompt_len,)).astype(np.int32),
+            prompt=np.concatenate([system, tail]) if shared_prefix else tail,
             params=params,
             arrival=i,  # one new request per scheduler step
         ))
@@ -57,6 +66,16 @@ def main():
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--decode-chunk", type=int, default=4)
+    ap.add_argument("--page", type=int, default=16,
+                    help="KV pool page size (full pages of a shared prefix "
+                         "are what the prefix cache can map)")
+    ap.add_argument("--shared-prefix", type=int, default=0, metavar="N",
+                    help="prepend one N-token system prompt to every "
+                         "request; full pages of it serve from the prefix "
+                         "cache instead of recomputing prefill")
+    ap.add_argument("--prefill-chunk", type=int, default=None, metavar="C",
+                    help="split admission prefill into C-row chunks "
+                         "interleaved with decode steps")
     ap.add_argument("--compare-dense", action="store_true")
     ap.add_argument("--spec-k", type=int, default=3,
                     help="draft tokens per verify for the speculative rerun "
@@ -79,9 +98,10 @@ def main():
     print(f"mean retained saliency: {report.mean_retained:.4f} "
           f"at {cfg.hinm.total_sparsity:.0%} sparsity")
 
-    max_seq = args.prompt_len + 32
+    max_seq = args.shared_prefix + args.prompt_len + 32
     rng = np.random.default_rng(0)
-    workload = build_workload(cfg, args.requests, args.prompt_len, rng)
+    workload = build_workload(cfg, args.requests, args.prompt_len, rng,
+                              shared_prefix=args.shared_prefix)
 
     telemetry = None
     if args.metrics_json or args.trace_out:
@@ -89,7 +109,8 @@ def main():
 
         telemetry = Telemetry(enabled=True)
     sched = Scheduler(cfg, packed, max_slots=args.slots, max_seq=max_seq,
-                      decode_chunk=args.decode_chunk, telemetry=telemetry)
+                      decode_chunk=args.decode_chunk, telemetry=telemetry,
+                      page=args.page, prefill_chunk=args.prefill_chunk)
     done = sched.run(workload)
     st = sched.stats
     pb = st.packed_param_bytes
@@ -111,6 +132,16 @@ def main():
           f"p99 ttft {1e3 * st.ttft_percentile(99):.1f}ms, "
           f"p99 decode step {1e6 * st.step_time_percentile(99):.0f}us")
 
+    if sched.prefix is not None:
+        print(f"prefix cache: {st.prefix_hit_tokens} prompt rows served "
+              f"from cache ({st.prefix_hit_rate:.1%} hit rate), "
+              f"{sched.kv.cow_copies} copy-on-write pages, "
+              f"{int(sched.kv.n_shared_pages)} pages shared now, "
+              f"{sched.prefix.evictions} evicted under pressure")
+        if args.prefill_chunk:
+            print(f"chunked prefill: {st.prefill_chunks} chunks over "
+                  f"{st.prefill_rows} unshared prompt rows")
+
     if telemetry is not None:
         if args.metrics_json:
             telemetry.dump_metrics(args.metrics_json)
@@ -123,7 +154,8 @@ def main():
     static = Scheduler(cfg, packed, max_slots=args.slots, max_seq=max_seq,
                        decode_chunk=args.decode_chunk, policy="static")
     static.run(build_workload(cfg, args.requests, args.prompt_len,
-                              np.random.default_rng(0)))
+                              np.random.default_rng(0),
+                              shared_prefix=args.shared_prefix))
     print(f"static baseline: {static.stats.decode_steps} batched steps "
           f"(continuous saved "
           f"{static.stats.decode_steps - st.decode_steps} full-batch steps)")
@@ -132,10 +164,12 @@ def main():
         from repro.serve import SpecConfig
 
         spec = Scheduler(cfg, packed, max_slots=args.slots, max_seq=max_seq,
-                         decode_chunk=args.decode_chunk,
+                         decode_chunk=args.decode_chunk, page=args.page,
+                         prefill_chunk=args.prefill_chunk,
                          spec=SpecConfig(k=args.spec_k))
         spec_reqs = build_workload(cfg, args.requests, args.prompt_len,
-                                   np.random.default_rng(0))
+                                   np.random.default_rng(0),
+                                   shared_prefix=args.shared_prefix)
         spec.run(spec_reqs)
         ss = spec.stats
         by_rid = {r.rid: r for r in spec_reqs}
@@ -152,9 +186,11 @@ def main():
         masked = pruning.apply_masks(newp, masks)
         greedy = [r for r in workload if r.params.temperature <= 0.0]
         dense = Scheduler(cfg, masked, max_slots=args.slots, max_seq=max_seq,
-                          decode_chunk=args.decode_chunk)
+                          decode_chunk=args.decode_chunk, page=args.page,
+                          prefill_chunk=args.prefill_chunk)
         dense_reqs = build_workload(cfg, args.requests, args.prompt_len,
-                                    np.random.default_rng(0))
+                                    np.random.default_rng(0),
+                                    shared_prefix=args.shared_prefix)
         dense.run(dense_reqs)
         by_rid = {r.rid: r for r in dense_reqs}
         same = all(r.tokens == by_rid[r.rid].tokens for r in greedy)

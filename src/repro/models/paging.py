@@ -24,7 +24,11 @@ Two physical pages are reserved:
 
 Freed pages keep stale K/V but their ``kpos`` rows are reset to the
 sentinel on release, so a page recycled to a new slot can never leak rows
-into a view until the new owner writes them.
+into a view until the new owner writes them.  With prefix sharing
+(serve/prefix) a physical page can appear in several block tables at
+once; ownership of the *kpos sweep* then moves to the refcount layer
+(serve/kv): only a page whose last reference drops is swept — sweeping a
+still-shared page would erase rows a co-owner is attending to.
 """
 from __future__ import annotations
 
@@ -178,6 +182,54 @@ def release_attn(pool: dict, page_ids, slot) -> dict:
         slot, axis=1)
     out["alloc"] = jax.lax.dynamic_update_slice_in_dim(
         pool["alloc"], jnp.zeros((n_stack, 1), jnp.int32), slot, axis=1)
+    return out
+
+
+def map_attn(pool: dict, bt_row, n_alloc, pos, slot) -> dict:
+    """Map a slot onto already-written physical pages without any scatter:
+    install the block-table row / allocation count and set ``pos`` to the
+    rows the mapped prefix already holds (prefix sharing: the shared pages
+    carry another owner's K/V rows, bitwise-identical for an identical
+    token prefix at identical positions).  The suffix is written later by
+    extension prefill through the normal multi-token decode path."""
+    out = dict(pool)
+    n_stack, _, n_bt = pool["bt"].shape
+    out["pos"] = jax.lax.dynamic_update_slice_in_dim(
+        pool["pos"], jnp.broadcast_to(pos, (n_stack, 1)).astype(jnp.int32),
+        slot, axis=1)
+    out["bt"] = jax.lax.dynamic_update_slice_in_dim(
+        pool["bt"], jnp.broadcast_to(bt_row, (n_stack, 1, n_bt)), slot, axis=1)
+    out["alloc"] = jax.lax.dynamic_update_slice_in_dim(
+        pool["alloc"], jnp.broadcast_to(n_alloc, (n_stack, 1)).astype(jnp.int32),
+        slot, axis=1)
+    return out
+
+
+def copy_page(pool: dict, dst, src, keep_rows) -> dict:
+    """Copy-on-write a divergent tail page: physical page ``src``'s k/v
+    bytes are copied to ``dst``, and only the first ``keep_rows`` kpos rows
+    come along — the donor's rows past the divergence point must not leak
+    into the new owner's view, so they land as the sentinel (exactly like
+    unwritten rows; extension prefill overwrites them in place)."""
+    out = dict(pool)
+    page = pool["k"].shape[2]
+    for name in ("k", "v"):
+        rows = jax.lax.dynamic_index_in_dim(pool[name], src, 1, keepdims=False)
+        out[name] = jax.lax.dynamic_update_index_in_dim(
+            pool[name], rows, dst, 1)
+    shared = jnp.arange(page, dtype=jnp.int32) < keep_rows
+    kp = jax.lax.dynamic_index_in_dim(pool["kpos"], src, 1, keepdims=False)
+    kp = jnp.where(shared[None, :], kp, KPOS_SENTINEL)
+    out["kpos"] = jax.lax.dynamic_update_index_in_dim(pool["kpos"], kp, dst, 1)
+    return out
+
+
+def sweep_pages(pool: dict, page_ids) -> dict:
+    """Reset ``page_ids``' kpos rows to the sentinel without touching any
+    slot's table (a prefix-cache eviction frees pages that no block table
+    references; padding with SCRATCH_PAGE is harmless, it is never read)."""
+    out = dict(pool)
+    out["kpos"] = pool["kpos"].at[:, page_ids].set(KPOS_SENTINEL)
     return out
 
 

@@ -23,6 +23,10 @@ BUCKETED_PREFILL = True
 # the paged decode cache is the shared (n_pages, page, KV, hd) pool, so
 # the Pallas paged-attention kernel can resolve it (kernels/paged_attn)
 PAGED_ATTN_KERNEL = True
+# K/V rows are pure per-(token, position) projections here — an identical
+# token prefix at identical positions caches bitwise-identical rows — so
+# physical pages can be refcount-shared across slots (serve/prefix)
+PREFIX_SHARE = True
 
 
 def init_block(key, cfg):
@@ -155,6 +159,22 @@ def paged_release(cfg, pool, slot, page_ids):
     return paging.release_attn(pool, page_ids, slot)
 
 
+def paged_map(cfg, pool, slot, bt_row, n_alloc, pos):
+    """Map `slot` onto already-written pages (prefix sharing): block table
+    and counters only — no K/V moves; the shared rows are live already."""
+    return paging.map_attn(pool, bt_row, n_alloc, pos, slot)
+
+
+def paged_copy_page(cfg, pool, dst, src, keep_rows):
+    """Copy-on-write the divergent tail page (first `keep_rows` rows)."""
+    return paging.copy_page(pool, dst, src, keep_rows)
+
+
+def paged_sweep(cfg, pool, page_ids):
+    """kpos-sentinel sweep of unreferenced pages (prefix-cache eviction)."""
+    return paging.sweep_pages(pool, page_ids)
+
+
 def cache_batch_axes(cfg, cache):
     """Axis of the request-slot (batch) dimension for every cache leaf —
     lets the serve slot pool insert/reset single slots generically.
@@ -232,6 +252,25 @@ def verify_step(params, cfg, tokens, cache):
                                 spec=True)
     x = L.norm(params["ln_f"], x, cfg)
     return logits_fn(params, x), new_cache, None
+
+
+def extend_step(params, cfg, tokens, cache):
+    """Extension prefill: forward ``tokens (B, C)`` from each slot's current
+    position, writing all C cache rows through the multi-token decode write
+    path (the same parallel path verify_step uses, so every row is bitwise
+    what sequential decode would have written).  Returns the pre-logits
+    hidden states ``(B, C, D)`` — the caller projects only the rows it
+    samples from — plus (cache, undo); chunked/suffix prefill rolls back
+    co-resident lanes' junk rows with `cache_rollback` exactly like a
+    rejected speculation."""
+    b, s = tokens.shape
+    x = nn.embed(params["embed"], tokens)
+    pos = cache["pos"][0]
+    positions = pos.astype(jnp.int32)[:, None] + jnp.arange(s, dtype=jnp.int32)[None, :]
+    x, new_cache = _scan_blocks(params, cfg, x, positions, caches=cache,
+                                spec=True)
+    x = L.norm(params["ln_f"], x, cfg)
+    return x, new_cache, None
 
 
 def cache_rollback(cfg, cache, undo, pos0, keep, n_written):

@@ -95,8 +95,38 @@ def paged_insert(cfg, pool, stripe, slot, row, scatter_ids, bt_row, n_alloc):
 
 def paged_release(cfg, pool, slot, page_ids):
     """Release a paged-pool slot: freed pages' kpos rows return to the
-    sentinel and the slot's striped leaves go pristine."""
+    sentinel and the slot's striped leaves go pristine.  With refcounted
+    sharing the caller (serve.kv) passes only the pages whose LAST
+    reference dropped — sweeping a still-shared page would erase rows a
+    co-owning slot is attending to."""
     return model_for(cfg).paged_release(cfg, pool, slot, page_ids)
+
+
+def supports_prefix_share(cfg) -> bool:
+    """Whether identical token prefixes cache bitwise-identical K/V rows
+    that other slots may map refcount-shared (serve/prefix): true for
+    pure-attention stacks whose rows are per-(token, position) projections,
+    false for recurrent/hybrid state (prefix state is not page-local) and
+    for windowed rings (a wrapped ring reuses page rows in place)."""
+    return getattr(model_for(cfg), "PREFIX_SHARE", False) and not cfg.window
+
+
+def paged_map(cfg, pool, slot, bt_row, n_alloc, pos):
+    """Map slot `slot` onto already-written physical pages (prefix
+    sharing): installs `bt_row`/`n_alloc` and sets pos — no K/V moves."""
+    return model_for(cfg).paged_map(cfg, pool, slot, bt_row, n_alloc, pos)
+
+
+def paged_copy_page(cfg, pool, dst, src, keep_rows):
+    """Copy-on-write a divergent tail page: K/V bytes of `src` into `dst`,
+    kpos rows past `keep_rows` landing as the sentinel."""
+    return model_for(cfg).paged_copy_page(cfg, pool, dst, src, keep_rows)
+
+
+def paged_sweep(cfg, pool, page_ids):
+    """Sweep unreferenced pages' kpos rows to the sentinel without touching
+    any slot's table (prefix-cache eviction path)."""
+    return model_for(cfg).paged_sweep(cfg, pool, page_ids)
 
 
 def decode_step(params, cfg, tokens, cache):
@@ -120,6 +150,15 @@ def verify_step(params, cfg, tokens, cache):
     draft candidates per slot), writing all S cache rows.  Returns
     (logits (B, S, vocab_padded), cache, undo)."""
     return model_for(cfg).verify_step(params, cfg, tokens, cache)
+
+
+def extend_step(params, cfg, tokens, cache):
+    """Extension prefill (chunked admission / shared-prefix suffix): write
+    ``tokens (B, C)`` from each slot's position through the multi-token
+    decode path and return (pre-logits hidden (B, C, D), cache, undo).
+    Verify's twin without the full-width vocab projection — the caller
+    projects only the final row it samples the first token from."""
+    return model_for(cfg).extend_step(params, cfg, tokens, cache)
 
 
 def cache_rollback(cfg, cache, undo, pos0, keep, n_written):

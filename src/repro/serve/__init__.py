@@ -1,6 +1,7 @@
 from repro.serve import sampler
 from repro.serve.engine import ServeEngine
 from repro.serve.kv import SlotKVCache
+from repro.serve.prefix import PrefixIndex, PrefixMatch
 from repro.serve.request import Request, RequestState, SamplingParams, ServeStats
 from repro.serve.scheduler import Scheduler, param_bytes
 from repro.serve.spec import ModelDrafter, NgramDrafter, SpecConfig
@@ -15,6 +16,8 @@ __all__ = [
     "resolve_telemetry",
     "ModelDrafter",
     "NgramDrafter",
+    "PrefixIndex",
+    "PrefixMatch",
     "Request",
     "RequestState",
     "SamplingParams",

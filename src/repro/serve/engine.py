@@ -26,7 +26,8 @@ class ServeEngine:
                  top_k: int = 0, top_p: float = 0.0, decode_chunk: int = 8,
                  page: int | None = 64, n_pages: int | str | None = "auto",
                  mesh=None, spec=None, packed: bool | str = "auto",
-                 telemetry=None):
+                 telemetry=None, prefix_share: bool | str = "auto",
+                 prefill_chunk: int | None = None):
         self.cfg = cfg
         self.params = params
         self.packed = packed
@@ -40,6 +41,8 @@ class ServeEngine:
         self.mesh = mesh
         self.spec = spec
         self.telemetry = telemetry
+        self.prefix_share = prefix_share
+        self.prefill_chunk = prefill_chunk
         self._sched: Scheduler | None = None
 
     def packed_bytes(self) -> tuple[int, int]:
@@ -51,7 +54,9 @@ class ServeEngine:
                 self.cfg, self.params, max_slots=batch, max_seq=self.max_seq,
                 decode_chunk=self.decode_chunk, rng_seed=rng_seed,
                 page=self.page, n_pages=self.n_pages, mesh=self.mesh,
-                spec=self.spec, packed=self.packed, telemetry=self.telemetry)
+                spec=self.spec, packed=self.packed, telemetry=self.telemetry,
+                prefix_share=self.prefix_share,
+                prefill_chunk=self.prefill_chunk)
         else:
             self._sched.reset(rng_seed)
         return self._sched

@@ -14,6 +14,19 @@ page that every unassigned block-table entry points at.  Releasing a slot
 resets its freed pages' ``kpos`` rows to the sentinel, so a page recycled
 to a new request can never leak rows into the old lane.
 
+Page ownership is **refcounted** (prefix sharing, serve/prefix): a
+physical page may appear in several slots' block tables at once and may
+additionally be retained by the prefix index after every mapping slot
+released.  The free lists hold exactly the pages with refcount zero —
+``n_free_pages + n_referenced_pages == n_alloc_pages`` at all times — and
+the sentinel-sweep invariant moves from "sweep on release" to "sweep when
+the LAST reference drops": releasing a slot that shares a page must not
+sweep its kpos rows while a co-owner still attends to them (the
+kpos-ownership split).  ``map_slot`` installs shared pages into a new
+slot's table without any K/V movement (refcount++), copying only a
+divergent tail page (copy-on-write, donor rows past the divergence masked
+out of the copy); ``deref_pages`` is the index's retention-drop hook.
+
 ``n_pages`` provisioning: an int is the explicit allocatable page count;
 ``"auto"`` derives one from expected occupancy (~half-view average live
 length per slot, floored at one full view so a max-size request can
@@ -94,6 +107,11 @@ class SlotKVCache:
             sg = paging.shard_geometry(alloc_req, self._n_shards)
             self.n_pages = sg["n_pages"]
             self._pages_per_shard = sg["pages_per_shard"]
+            # host-side page refcounts: free pages are exactly ref == 0;
+            # a slot's table entry and the prefix index's retention each
+            # hold one reference (reserved pages never enter accounting)
+            self._page_ref = np.zeros((self.n_pages,), np.int64)
+            self.cow_copies = 0
             self.cache = zoo.make_cache(
                 cfg, n_slots, max_seq, page=self.page, n_pages=self.n_pages,
                 **self._cache_kw)
@@ -151,7 +169,7 @@ class SlotKVCache:
         # counter tallies speculative rollback sweeps. `metrics=None`
         # (standalone pools) skips all of it.
         self._m_slots = self._m_free_pages = self._m_used_pages = None
-        self._m_rollbacks = None
+        self._m_rollbacks = self._m_shared = self._m_cow = None
         if metrics is not None:
             lb = dict(metrics_labels or {})
             self._m_slots = metrics.gauge("kv_slots_in_use", labels=lb)
@@ -160,6 +178,8 @@ class SlotKVCache:
             if self.paged:
                 self._m_free_pages = metrics.gauge("kv_free_pages", labels=lb)
                 self._m_used_pages = metrics.gauge("kv_pages_in_use", labels=lb)
+                self._m_shared = metrics.gauge("kv_shared_pages", labels=lb)
+                self._m_cow = metrics.counter("kv_cow_copies", labels=lb)
             self._observe_occupancy()
 
     def _observe_occupancy(self) -> None:
@@ -170,6 +190,7 @@ class SlotKVCache:
             free = self.n_free_pages
             self._m_free_pages.set(free)
             self._m_used_pages.set(self.n_alloc_pages - free)
+            self._m_shared.set(self.n_shared_pages)
 
     def _constrain(self, tree):
         """Pin a jitted cache update's output to the pool layout."""
@@ -183,20 +204,72 @@ class SlotKVCache:
         self._free_pages = [collections.deque() for _ in range(self._n_shards)]
         for p in range(paging.N_RESERVED, self.n_pages):
             self._free_pages[p // self._pages_per_shard].append(p)
+        self._page_ref[:] = 0
 
     def _pop_pages(self, n: int) -> list[int]:
         """Draw `n` free pages, fullest shard first (ties: lowest shard) —
-        a slot's pages spread across the mesh instead of draining shard 0."""
+        a slot's pages spread across the mesh instead of draining shard 0.
+        Popped pages leave with exactly one reference (the caller's)."""
         pages = []
         for _ in range(n):
             s = max(range(self._n_shards),
                     key=lambda i: (len(self._free_pages[i]), -i))
             pages.append(self._free_pages[s].popleft())
+        self._page_ref[pages] = 1
         return pages
 
     def _push_pages(self, pages) -> None:
         for p in pages:
+            assert self._page_ref[p] == 0, (
+                f"page {p} returned to the free list with "
+                f"{self._page_ref[p]} live references")
             self._free_pages[p // self._pages_per_shard].append(p)
+
+    # -- page refcounts (prefix sharing) --------------------------------------
+
+    def page_ref(self, page: int) -> int:
+        """Live reference count of a physical page (slots mapping it plus
+        the prefix index's retention reference)."""
+        return int(self._page_ref[page])
+
+    def ref_pages(self, pages) -> None:
+        """Take one additional reference on each page (all must be live —
+        a zero-ref page is on a free list and has nothing to share)."""
+        for p in pages:
+            assert self._page_ref[p] >= 1, f"page {p} is free, cannot share"
+            self._page_ref[p] += 1
+
+    def deref_pages(self, pages) -> int:
+        """Drop one reference per page.  Pages whose LAST reference drops
+        are swept (kpos rows back to the sentinel — only now is it safe:
+        no block table and no index entry can reach them) and returned to
+        the free lists.  Returns the number of pages freed."""
+        freed = []
+        for p in pages:
+            assert self._page_ref[p] >= 1, f"page {p} double-freed"
+            self._page_ref[p] -= 1
+            if self._page_ref[p] == 0:
+                freed.append(p)
+        if freed:
+            ids = np.full((self.n_bt,), paging.SCRATCH_PAGE, np.int32)
+            ids[: len(freed)] = freed
+            self.cache = self._sweep_paged()(self.cache, jnp.asarray(ids))
+            self._push_pages(freed)
+            self._observe_occupancy()
+        return len(freed)
+
+    def _sweep_paged(self):
+        """Jitted table-free kpos sweep (built lazily: only prefix-sharing
+        families ever deref a page no slot owns)."""
+        jit = getattr(self, "_sweep_jit", None)
+        if jit is None:
+            cfg = self.cfg
+
+            def sweep_fn(pool, page_ids):
+                return self._constrain(zoo.paged_sweep(cfg, pool, page_ids))
+
+            jit = self._sweep_jit = jax.jit(sweep_fn, donate_argnums=(0,))
+        return jit
 
     def template(self, batch: int = 1):
         """Pristine batch-`batch` stripe cache: prefill input / slot-reset
@@ -232,6 +305,37 @@ class SlotKVCache:
         return self.n_pages - paging.N_RESERVED if self.paged else 1 << 62
 
     @property
+    def n_referenced_pages(self) -> int:
+        """Pages with at least one live reference.  The conservation law
+        ``n_free_pages + n_referenced_pages == n_alloc_pages`` holds at
+        every step — a page is on a free list exactly when ref == 0."""
+        if not self.paged:
+            return 0
+        return int((self._page_ref[paging.N_RESERVED:] > 0).sum())
+
+    @property
+    def n_shared_pages(self) -> int:
+        """Pages with more than one live reference (mapped by several
+        slots, or by a slot plus the prefix index's retention)."""
+        if not self.paged:
+            return 0
+        return int((self._page_ref[paging.N_RESERVED:] > 1).sum())
+
+    @property
+    def n_live_pages(self) -> int:
+        """Distinct pages mapped by at least one live slot's block table.
+        The working-set measure for memory pressure: retained prefix
+        pages (referenced by the index alone) are reclaimable cache, not
+        demand — sharing shrinks THIS number, because co-resident slots
+        map the same physical pages."""
+        if not self.paged:
+            return 0
+        live = set()
+        for pages in self._slot_pages.values():
+            live.update(pages)
+        return len(live)
+
+    @property
     def page_sharded(self) -> bool:
         """True when the shared pool leaves are actually split on their
         page axis.  The paged-attention kernel is a single-device program,
@@ -248,16 +352,24 @@ class SlotKVCache:
         return any(r == "page" and len(s) > 1 and s[1] is not None
                    for r, s in zip(roles, specs))
 
-    def can_admit(self, reserve_rows: int) -> bool:
-        """Would a request needing `reserve_rows` cache rows fit right now?"""
+    def can_admit(self, reserve_rows: int, n_shared: int = 0) -> bool:
+        """Would a request needing `reserve_rows` cache rows fit right now?
+        ``n_shared`` pages of its budget arrive via the prefix index
+        (refcount++, no free-list draw), so only the rest must be free."""
         if not self._free:
             return False
         return (not self.paged
-                or self.pages_needed(reserve_rows) <= self.n_free_pages)
+                or self.pages_needed(reserve_rows) - n_shared
+                <= self.n_free_pages)
 
     def slot_capacity(self, slot: int) -> int:
         """Cache rows reserved for `slot` at insert time."""
         return int(self._slot_cap[slot])
+
+    def slot_pages(self, slot: int) -> list[int]:
+        """Physical pages backing `slot`, block-table order (logical page p
+        of the slot's view is pages[p])."""
+        return list(self._slot_pages.get(slot, ()))
 
     def pool_bytes(self) -> int:
         """Device bytes held by the pool cache pytree (global, all shards)."""
@@ -306,16 +418,97 @@ class SlotKVCache:
         self.slot_len[slot] = length
         self._observe_occupancy()
 
+    def map_slot(self, slot: int, shared_pages, shared_rows: int,
+                 reserve: int, cow_src: int | None = None,
+                 cow_rows: int = 0) -> list[int]:
+        """Map `slot` onto shared prefix pages plus fresh private pages
+        WITHOUT a stripe scatter (prefix sharing, serve/prefix).
+
+        ``shared_pages`` (prefix order, ``shared_rows = len * page`` rows)
+        are live pages another owner wrote: each gains a reference and
+        lands in the slot's block table in place — zero K/V movement.  A
+        divergent tail (``cow_src``/``cow_rows``) is copied onto the first
+        fresh page, donor rows past the divergence masked out of the copy
+        (copy-on-write).  The slot's ``pos`` starts at the mapped row
+        count; the caller prefills only the unshared suffix through the
+        multi-token extension path.  Returns the slot's full page list."""
+        assert self.paged, "map_slot requires a paged pool"
+        total = self.pages_needed(reserve)
+        n_shared = len(shared_pages)
+        n_fresh = total - n_shared
+        assert n_fresh >= 1, "a mapped slot still needs >= 1 private page"
+        if n_fresh > self.n_free_pages:
+            raise RuntimeError(
+                f"slot {slot}: {n_fresh} fresh pages needed, "
+                f"{self.n_free_pages} free")
+        fresh = self._pop_pages(n_fresh)
+        self.ref_pages(shared_pages)
+        pages = list(shared_pages) + fresh
+        bt_row = np.full((self.n_bt,), paging.SENTINEL_PAGE, np.int32)
+        bt_row[:total] = pages
+        mapped_rows = shared_rows + cow_rows
+        self.cache = self._map_paged()(
+            self.cache, slot, jnp.asarray(bt_row), np.int32(total),
+            np.int32(mapped_rows))
+        if cow_src is not None and cow_rows > 0:
+            # the CoW page is fresh[0]: logical page n_shared, right after
+            # the full shared chain
+            self.cache = self._cow_paged()(
+                self.cache, np.int32(fresh[0]), np.int32(cow_src),
+                np.int32(cow_rows))
+            self.cow_copies += 1
+            if self._m_cow is not None:
+                self._m_cow.inc()
+        self._slot_pages[slot] = pages
+        self._slot_cap[slot] = reserve
+        self.slot_len[slot] = mapped_rows
+        self._observe_occupancy()
+        return pages
+
+    def _map_paged(self):
+        jit = getattr(self, "_map_jit", None)
+        if jit is None:
+            cfg = self.cfg
+
+            def map_fn(pool, slot, bt_row, n_alloc, pos):
+                out = zoo.paged_map(cfg, pool, slot, bt_row, n_alloc, pos)
+                return self._constrain(out)
+
+            jit = self._map_jit = jax.jit(map_fn, donate_argnums=(0,))
+        return jit
+
+    def _cow_paged(self):
+        jit = getattr(self, "_cow_jit", None)
+        if jit is None:
+            cfg = self.cfg
+
+            def cow_fn(pool, dst, src, keep_rows):
+                out = zoo.paged_copy_page(cfg, pool, dst, src, keep_rows)
+                return self._constrain(out)
+
+            jit = self._cow_jit = jax.jit(cow_fn, donate_argnums=(0,))
+        return jit
+
     def release(self, slot: int) -> None:
-        """Reset `slot` to pristine state and return it (and, in paged mode,
-        its pages — kpos rows back to the sentinel) to the free lists."""
+        """Reset `slot` to pristine state and return it to the free lists.
+        In paged mode each of its pages drops one reference; only pages
+        whose LAST reference dropped are swept (kpos back to the sentinel)
+        and freed — a page the prefix index retains, or that another slot
+        still maps, keeps its rows live (the sentinel-sweep invariant under
+        sharing).  The slot's block table resets either way."""
         if self.paged:
             pages = self._slot_pages.pop(slot, [])
+            freed = []
+            for p in pages:
+                assert self._page_ref[p] >= 1, f"page {p} double-freed"
+                self._page_ref[p] -= 1
+                if self._page_ref[p] == 0:
+                    freed.append(p)
             ids = np.full((self.n_bt,), paging.SCRATCH_PAGE, np.int32)
-            ids[: len(pages)] = pages
+            ids[: len(freed)] = freed
             self.cache = self._release_paged(
                 self.cache, slot, jnp.asarray(ids))
-            self._push_pages(pages)
+            self._push_pages(freed)
         else:
             self.cache = self._write_row(self.cache, self.template(), slot, 0)
         self.slot_len[slot] = 0
@@ -362,6 +555,7 @@ class SlotKVCache:
                 n_pages=self.n_pages, **self._cache_kw)
             self._reset_free_pages()
             self._slot_pages = {}
+            self.cow_copies = 0
         else:
             self.cache = zoo.make_cache(
                 self.cfg, self.n_slots, self.max_seq, **self._cache_kw)

@@ -71,6 +71,13 @@ class Request:
     # sum over this request's decode steps of 1/(active slots that step):
     # its share of the whole-model weight reads the batch amortises
     shared_decode_steps: float = 0.0
+    # --- prefix sharing + chunked prefill (Scheduler(prefix_share=...,
+    # prefill_chunk=...)) ---
+    prefix_hit_tokens: int = 0     # prompt rows served from shared pages
+    prefill_chunks: int = 0        # extension-prefill dispatches it took
+    # cache rows committed so far during a chunked admission (mapped
+    # prefix rows + extension-prefilled rows); scheduler-internal cursor
+    prefill_cursor: int = 0
     # --- speculative decoding (Scheduler(spec=...)) ---
     spec_verify_steps: int = 0     # verify forwards this request rode
     spec_proposed: int = 0         # draft tokens proposed for it
@@ -143,6 +150,10 @@ class ServeStats:
     lane_verify_steps: int = 0     # sum over slots of verifies they rode
     draft_proposed: int = 0
     draft_accepted: int = 0
+    # --- prefix sharing + chunked prefill ---
+    prefix_hit_tokens: int = 0     # prompt rows served from shared pages
+    prefill_rows: int = 0          # prompt rows actually computed by prefill
+    prefill_chunks: int = 0        # extension-prefill dispatches executed
     # --- latency distributions (always populated: one observe per request
     # or per decode chunk — the percentile columns in serve_bench do not
     # depend on the telemetry knob) ---
@@ -169,6 +180,13 @@ class ServeStats:
     @property
     def decode_tokens_per_second(self) -> float:
         return self.decode_tokens / max(self.decode_seconds, 1e-9)
+
+    @property
+    def prefix_hit_rate(self) -> float:
+        """Fraction of prompt rows served from shared prefix pages instead
+        of being recomputed by prefill (0 with sharing off or no hits)."""
+        total = self.prefix_hit_tokens + self.prefill_rows
+        return self.prefix_hit_tokens / max(total, 1)
 
     @property
     def acceptance_rate(self) -> float:

@@ -33,6 +33,18 @@ packed-weight read for up to k+1 emitted tokens per slot), and
 rejected rows.  Greedy and "match"-mode stochastic requests emit the
 exact non-speculative stream.
 
+With prefix sharing on (`prefix_share`, default-auto on paged attention
+pools) admission first walks a host-side radix index over token prefixes
+(`serve/prefix`): full pages another request already cached are MAPPED
+into the new slot's block table (refcount++, zero K/V movement), a
+divergent tail page is copied (CoW), and only the unshared suffix is
+prefilled — through `zoo.extend_step`, the multi-token decode write path
+speculative verify already proved bitwise-equivalent to sequential
+decode.  `prefill_chunk=N` additionally splits long suffixes into N-row
+chunks advanced one per scheduler step, interleaved with decode chunks
+(the decode jit sweeps mid-prefill slots' junk rows like a rejected
+speculation), so a long admission no longer spikes co-resident TTFT.
+
 With `mesh=...` the same loop runs sharded: the paged pool shards its
 page axis and the block tables their slot axis (`sharding.cache_specs`),
 params and per-slot decode state ride along replicated, and every jitted
@@ -46,6 +58,7 @@ from __future__ import annotations
 import collections
 import os
 import time
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -56,6 +69,7 @@ from repro.models import zoo
 from repro.serve import sampler
 from repro.serve import spec as spec_mod
 from repro.serve.kv import SlotKVCache
+from repro.serve.prefix import PrefixIndex
 from repro.serve.request import Request, RequestState, SamplingParams, ServeStats
 from repro.serve.telemetry import resolve_telemetry
 
@@ -101,7 +115,9 @@ class Scheduler:
                  page: int | None = 64, n_pages: int | str | None = "auto",
                  bucket: bool | None = None, bucket_min: int = 8, mesh=None,
                  spec: "spec_mod.SpecConfig | None" = None,
-                 packed: bool | str = "auto", telemetry=None):
+                 packed: bool | str = "auto", telemetry=None,
+                 prefix_share: bool | str = "auto",
+                 prefill_chunk: int | None = None):
         if policy not in ("continuous", "static"):
             raise ValueError(f"unknown admission policy {policy!r}")
         self.cfg = cfg
@@ -121,6 +137,9 @@ class Scheduler:
         self._m_spec_verify = m.histogram("serve_spec_verify_seconds")
         self._m_spec_accept = m.histogram(
             "serve_spec_window_acceptance", lo=1e-4, growth=1.2, n_buckets=50)
+        self._m_hit_tokens = m.counter("serve_prefix_hit_tokens")
+        self._m_chunks = m.counter("serve_prefill_chunks")
+        self._m_evictions = m.counter("serve_prefix_evictions")
         # serve-time weight packing (one-time, here at construction):
         # "pack" routes every planned q/k/v/o + MLP projection through
         # hinm_spmm for prefill, decode and spec-verify; "dense" is the
@@ -228,6 +247,40 @@ class Scheduler:
         # enc-dec pools cache the encoder output at fixed width t_enc
         # (pass cache_kw={"t_enc": ...} to right-size it for the workload)
         self._t_enc = (cache_kw or {}).get("t_enc") or max_seq
+
+        # --- prefix sharing + chunked prefill (extension admission) ---
+        # Both ride the multi-token decode write path (`zoo.extend_step`),
+        # so they need a paged pool on a family whose K/V rows are
+        # per-(token, position) pure — `zoo.supports_prefix_share` — and
+        # the continuous policy (static gang admission is the naive
+        # baseline and stays byte-for-byte the PR 2 pipeline).  "auto"
+        # downgrades transparently; an explicit True raises loudly.
+        can_extend = (self.kv.paged and zoo.supports_prefix_share(cfg)
+                      and policy == "continuous")
+        if prefix_share == "auto":
+            prefix_share = can_extend
+        if prefix_share and not can_extend:
+            raise ValueError(
+                f"prefix sharing needs a paged pool + a prefix-sharing "
+                f"family under continuous admission (family={cfg.family!r}, "
+                f"window={cfg.window}, paged={self.kv.paged}, "
+                f"policy={policy!r})")
+        if prefill_chunk is not None:
+            if prefill_chunk < 1:
+                raise ValueError("prefill_chunk must be >= 1 (or None)")
+            if not can_extend:
+                raise ValueError(
+                    f"chunked prefill needs a paged pool + a prefix-sharing "
+                    f"family under continuous admission "
+                    f"(family={cfg.family!r}, paged={self.kv.paged}, "
+                    f"policy={policy!r})")
+        self.prefix_share = bool(prefix_share)
+        self.prefill_chunk = prefill_chunk
+        self.prefix = PrefixIndex(self.kv.page) if self.prefix_share else None
+        # slots mid-extension-prefill: they hold pages but no decode lane
+        self._prefilling: dict[int, Request] = {}
+        self._extend_jits: dict[tuple, object] = {}
+
         self._queue: collections.deque[Request] = collections.deque()
         self._running: dict[int, Request] = {}
         self._active_host = np.zeros((max_slots,), bool)
@@ -266,7 +319,16 @@ class Scheduler:
         self._prefill = jax.jit(prefill_fn, static_argnames=("stochastic",))
 
         def chunk_fn(params, cache, tok, active, rem, temp, topk, topp, eos,
-                     seeds, gens, base_key, stochastic):
+                     seeds, gens, base_key, protect, stochastic, guarded):
+            # `guarded` (static) compiles in only while some slot is mid-
+            # chunked-prefill: inactive lanes still advance pos and write
+            # junk rows every scan step, which would corrupt a protected
+            # slot's committed prefix — so the chunk ends with the same
+            # sweep a fully-rejected speculation uses (keep=0 rewinds the
+            # protected lanes, keep=chunk commits everyone else exactly
+            # where the scan left them).
+            pos_entry = zoo.cache_position(cfg, cache) if guarded else None
+
             def step(carry, _):
                 cache, tok, active, rem, gens = carry
                 logits, cache = zoo.decode_step(params, cfg, tok, cache)
@@ -289,6 +351,11 @@ class Scheduler:
             with knobs(paged_attn=self.paged_attn):  # applies at trace time
                 carry, emits = jax.lax.scan(
                     step, (cache, tok, active, rem, gens), None, length=chunk)
+            if guarded:
+                keep = jnp.where(protect, 0, jnp.int32(chunk))
+                swept = zoo.cache_rollback(cfg, carry[0], None, pos_entry,
+                                           keep, chunk)
+                carry = (swept,) + carry[1:]
             if self.kv.shardings is not None:
                 # pin the scanned cache back to its page/slot-axis layout so
                 # chunked decode can't drift the pool off its shards
@@ -297,7 +364,7 @@ class Scheduler:
             return carry + (emits,)
 
         self._chunk = jax.jit(chunk_fn, donate_argnums=(1, 2, 3, 4, 10),
-                              static_argnames=("stochastic",))
+                              static_argnames=("stochastic", "guarded"))
 
         def set_slot(tok, active, rem, temp, topk, topp, eos, seeds, gens,
                      keff, match, hist, hlen, slot, first, r, t, k, p, e, sd,
@@ -382,6 +449,50 @@ class Scheduler:
 
             self._draft_prefill = jax.jit(draft_prefill_fn)
 
+    def _extend(self, width: int, sample: bool, stochastic: bool):
+        """Jitted extension prefill, one trace per (width-bucket, sample,
+        stochastic): write `width` token rows per lane from each slot's
+        current position through the multi-token decode path, then sweep
+        exactly like a speculation — lanes keep their true `keep` rows
+        (padded chunk rows and every non-prefilling lane's junk writes
+        rewind), so co-resident decode state is bitwise untouched.  With
+        `sample` the final chunk also projects each lane's last real row
+        and draws the first token with the SAME (seed, index 0) key
+        admission prefill uses — chunked and monolithic admission emit
+        identical streams."""
+        key = (width, sample, stochastic)
+        jit = self._extend_jits.get(key)
+        if jit is None:
+            cfg, vocab = self.cfg, self._vocab
+
+            def extend_fn(params, cache, tokens, keep, base_key, seeds,
+                          temp, topk, topp):
+                from repro.perf_knobs import knobs
+
+                pos0 = zoo.cache_position(cfg, cache)
+                with knobs(paged_attn=self.paged_attn):  # trace-time knob
+                    x, cache, undo = zoo.extend_step(params, cfg, tokens,
+                                                     cache)
+                cache = zoo.cache_rollback(cfg, cache, undo, pos0, keep,
+                                           width)
+                first = None
+                if sample:
+                    idx = jnp.maximum(keep - 1, 0)[:, None, None]
+                    last = jnp.take_along_axis(x, idx, axis=1)[:, 0]
+                    logits = zoo.logits_fn(params, cfg, last)[:, :vocab]
+                    logits = logits.astype(jnp.float32)
+                    if stochastic:
+                        keys = sampler.fold_keys(base_key, seeds,
+                                                 jnp.zeros_like(seeds))
+                        first = sampler.sample(keys, logits, temp, topk, topp)
+                    else:
+                        first = sampler.greedy(logits)
+                return self.kv._constrain(cache), first
+
+            jit = self._extend_jits[key] = jax.jit(extend_fn,
+                                                   donate_argnums=(1,))
+        return jit
+
     def _reset_state(self, rng_seed: int) -> None:
         s = self.max_slots
         self._tok = jnp.zeros((s, 1), jnp.int32)
@@ -423,6 +534,9 @@ class Scheduler:
         """Drop all queued/running requests and restore pristine state."""
         self._queue.clear()
         self._running.clear()
+        self._prefilling.clear()
+        if self.prefix is not None:
+            self.prefix = PrefixIndex(self.kv.page)
         self.kv.reset_all()
         if self.draft_kv is not None:
             self.draft_kv.reset_all()
@@ -438,8 +552,21 @@ class Scheduler:
         counter (distinct XLA traces of the admission prefill — the
         compile-count column in benchmarks/serve_bench.py). Compile-count
         tracking lives in `self.telemetry.registry` with the other
-        instruments; this property survives for existing callers."""
+        instruments; read the counter there instead."""
+        warnings.warn(
+            "Scheduler.prefill_traces is deprecated: read the "
+            "'serve_prefill_traces' counter from the telemetry registry "
+            "(scheduler.telemetry.registry) instead",
+            DeprecationWarning, stacklevel=2)
         return int(self._m_prefill_traces.value)
+
+    def clear_prefix_cache(self) -> int:
+        """Drop every retained prefix (the index's page references).  Pages
+        no live slot maps return to the free list immediately; shared ones
+        follow when their last slot releases.  Returns pages freed now."""
+        if self.prefix is None:
+            return 0
+        return self.prefix.clear(self.kv)
 
     def metrics_snapshot(self, include_global: bool = True) -> dict:
         """JSON-able snapshot of every instrument this scheduler feeds."""
@@ -447,7 +574,7 @@ class Scheduler:
 
     @property
     def n_pending(self) -> int:
-        return len(self._queue) + len(self._running)
+        return len(self._queue) + len(self._prefilling) + len(self._running)
 
     def _cache_rows(self, req: Request) -> int:
         """Decoder-cache rows this request's prefill occupies. encdec embeds
@@ -523,10 +650,56 @@ class Scheduler:
                 tokens=req.n_generated, reason=req.finish_reason)
         finished.append(req)
 
+    def _extension_plan(self, req: Request):
+        """(take_extension_path, PrefixMatch | None) for a queued request.
+
+        A request extends in-pool — pages mapped first, suffix prefilled
+        through `zoo.extend_step` — when its prompt hits the prefix index
+        (shared pages make the stripe-scatter insert wrong: it would
+        overwrite co-owned rows) or when chunking is on and the prompt
+        exceeds one chunk.  Everything else (embeds requests, misses,
+        short prompts) takes the classic bucketed group prefill."""
+        if req.embeds is not None:
+            return False, None
+        m = None
+        if self.prefix is not None:
+            # always leave >= 1 row to prefill: the first sampled token
+            # needs logits, and a fully-shared prompt would yield none
+            m = self.prefix.match(req.prompt, len(req.prompt) - 1)
+            if m.total_rows == 0:
+                m = None
+        chunked = (self.prefill_chunk is not None
+                   and len(req.prompt) > self.prefill_chunk)
+        return (m is not None or chunked), m
+
+    def _ensure_pages(self, need: int, protect=()) -> bool:
+        """Free-list pressure valve: retained prefixes are reclaimable
+        memory, so a short admission evicts LRU index entries (pages only
+        the index references) until `need` pages are free.  `protect`
+        shields the pages of the admission's own pending match — evicting
+        one would free a page its block table is about to map."""
+        short = need - self.kv.n_free_pages
+        if short > 0 and self.prefix is not None:
+            freed = self.prefix.evict(self.kv, short, protect=protect)
+            if freed:
+                self._m_evictions.inc(freed)
+        return need <= self.kv.n_free_pages
+
     def _admit(self, finished: list[Request]) -> None:
         if self.policy == "static" and self._running:
             return  # gang admission: wait for the whole pool to drain
         while self._queue and self.kv.n_free:
+            ext, m = self._extension_plan(self._queue[0])
+            if ext:
+                n_shared = len(m.page_ids) if m else 0
+                need = (self.kv.pages_needed(
+                    self._reserve_rows(self._queue[0])) - n_shared)
+                protect = () if m is None else tuple(m.page_ids) + (
+                    () if m.cow_src is None else (m.cow_src,))
+                if not self._ensure_pages(need, protect):
+                    return  # FIFO head waits for releases, no starvation
+                self._start_extension(self._queue.popleft(), m)
+                continue
             # group the queue head by (prompt-length bucket, embeds shape):
             # one batched prefill per group instead of k batch-1 prefills.
             # With bucketing on, every length in a bucket shares both the
@@ -540,8 +713,11 @@ class Scheduler:
 
             # paged pool: admission is also gated on free pages — a request
             # whose page budget doesn't fit waits at the queue head (FIFO,
-            # no starvation) until releases refill the free list
+            # no starvation) until releases (or prefix-cache eviction)
+            # refill the free list
             head_reserve = self._reserve_rows(self._queue[0])
+            if self.kv.paged:
+                self._ensure_pages(self.kv.pages_needed(head_reserve))
             if not self.kv.can_admit(head_reserve):
                 return
             pages_left = self.kv.n_free_pages
@@ -549,7 +725,8 @@ class Scheduler:
                 pages_left -= self.kv.pages_needed(head_reserve)
             group = [self._queue.popleft()]
             while (self._queue and len(group) < self.kv.n_free
-                   and sig(self._queue[0]) == sig(group[0])):
+                   and sig(self._queue[0]) == sig(group[0])
+                   and not self._extension_plan(self._queue[0])[0]):
                 if self.kv.paged:
                     need = self.kv.pages_needed(
                         self._reserve_rows(self._queue[0]))
@@ -625,6 +802,7 @@ class Scheduler:
         first_np = np.asarray(first)  # one sync per admitted group (= TTFT)
         now = time.perf_counter()
         self.stats.prefill_seconds += now - t0
+        self.stats.prefill_rows += sum(self._cache_rows(r) for r in group)
         if self.telemetry.enabled:
             blen = int(tokens.shape[1])
             tr = self.telemetry.tracer
@@ -653,6 +831,11 @@ class Scheduler:
             slot = self.kv.acquire()
             self.kv.insert(slot, cache_k, self._cache_rows(req), row=row,
                            reserve=self._reserve_rows(req))
+            if self.prefix is not None and req.embeds is None:
+                # index this prompt's full pages (retention refs): the
+                # next identical prefix maps them instead of recomputing
+                self.prefix.register(req.prompt, self.kv.slot_pages(slot),
+                                     self.kv)
             if self.draft_kv is not None:
                 dslot = self.draft_kv.acquire()
                 assert dslot == slot, "draft pool diverged from target pool"
@@ -679,6 +862,169 @@ class Scheduler:
             req.slot = slot
             self._running[slot] = req
 
+    def _start_extension(self, req: Request, m) -> None:
+        """Begin an extension admission: acquire a slot, map the shared
+        prefix pages (refcount++) and the fresh suffix pages into its block
+        table — copying only a divergent tail page — and queue the slot
+        for per-step suffix prefill (`_advance_prefill`).  No stripe
+        scatter happens: shared pages are co-owned and must not be
+        overwritten; fresh rows are written in-pool by `zoo.extend_step`."""
+        now = time.perf_counter()
+        req.state = RequestState.PREFILLING
+        req.admit_time = now
+        slot = self.kv.acquire()
+        shared = m.page_ids if m is not None else []
+        self.kv.map_slot(
+            slot, shared, len(shared) * self.kv.page,
+            self._reserve_rows(req),
+            cow_src=m.cow_src if m is not None else None,
+            cow_rows=m.cow_rows if m is not None else 0)
+        if self.draft_kv is not None:
+            # the draft pool acquires in lockstep NOW (so slot ids stay
+            # aligned with the target pool); its stripe is prefilled in
+            # one shot when the admission completes
+            dslot = self.draft_kv.acquire()
+            assert dslot == slot, "draft pool diverged from target pool"
+        hit = m.total_rows if m is not None else 0
+        req.prefix_hit_tokens = hit
+        req.prefill_cursor = hit
+        self.stats.prefix_hit_tokens += hit
+        if hit:
+            self._m_hit_tokens.inc(hit)
+        req.slot = slot
+        self._prefilling[slot] = req
+        if self.telemetry.enabled:
+            self._m_admit_wait.observe(req.admit_time - req.submit_time)
+            self.telemetry.tracer.request_span(
+                req, "queued", req.submit_time, req.admit_time)
+
+    def _advance_prefill(self, finished: list[Request]) -> None:
+        """One extension-prefill chunk for EVERY mid-admission slot, in a
+        single batched dispatch: each prefilling lane writes its next
+        `min(remaining, prefill_chunk)` suffix rows from its current
+        position; every other lane's junk writes are swept in-jit
+        (keep=0), so decode state is bitwise untouched.  Lanes whose
+        suffix completes sample their first token from the chunk's last
+        real row — same logits, same fold keys as monolithic prefill —
+        and graduate to decode."""
+        if not self._prefilling:
+            return
+        chunk_w = self.prefill_chunk or self.max_seq
+        items = []
+        for slot, req in self._prefilling.items():
+            remaining = len(req.prompt) - req.prefill_cursor
+            width = min(remaining, chunk_w)
+            items.append((slot, req, width, width == remaining))
+        w_max = max(w for _, _, w, _ in items)
+        w_b = self._bucket_len(w_max, 0) if self.bucket else w_max
+        sample = any(last for _, _, _, last in items)
+        stochastic = any(last and req.params.temperature > 0
+                         for _, req, _, last in items)
+        s = self.max_slots
+        tokens = np.zeros((s, w_b), np.int32)
+        keep = np.zeros((s,), np.int32)
+        temps = np.zeros((s,), np.float32)
+        topks = np.zeros((s,), np.int32)
+        topps = np.zeros((s,), np.float32)
+        seeds = np.zeros((s,), np.int32)
+        for slot, req, width, _ in items:
+            cur = req.prefill_cursor
+            tokens[slot, :width] = req.prompt[cur:cur + width]
+            keep[slot] = width
+            temps[slot] = req.params.temperature
+            topks[slot] = req.params.top_k
+            topps[slot] = req.params.top_p
+            seeds[slot] = self._eff_seed(req)
+        t0 = time.perf_counter()
+        with self.telemetry.annotation("serve_prefill_chunk"):
+            self.kv.cache, first = self._extend(w_b, sample, stochastic)(
+                self.params, self.kv.cache, jnp.asarray(tokens),
+                jnp.asarray(keep), self._key, jnp.asarray(seeds),
+                jnp.asarray(temps), jnp.asarray(topks), jnp.asarray(topps))
+            first_np = np.asarray(first) if sample else None  # one sync
+        now = time.perf_counter()
+        self.stats.prefill_seconds += now - t0
+        n_lanes = len(items)
+        self._m_chunks.inc(n_lanes)
+        if self.telemetry.enabled:
+            tr = self.telemetry.tracer
+            self.telemetry.registry.histogram(
+                "serve_prefill_chunk_seconds",
+                labels={"bucket": str(w_b)}).observe(now - t0, n=n_lanes)
+            tr.span("scheduler", f"prefill_chunk[b{w_b}]", t0, now,
+                    lanes=n_lanes, bucket=w_b)
+        for slot, req, width, last in items:
+            req.prefill_cursor += width
+            req.prefill_chunks += 1
+            self.stats.prefill_chunks += 1
+            self.stats.prefill_rows += width
+            self.kv.slot_len[slot] += width
+            if self.telemetry.enabled:
+                self.telemetry.tracer.request_span(
+                    req, f"prefill_chunk[b{w_b}]", t0, now)
+            if last:
+                self._complete_admission(slot, req, int(first_np[slot]),
+                                         now, finished)
+
+    def _complete_admission(self, slot: int, req: Request, first_i: int,
+                            now: float, finished: list[Request]) -> None:
+        """Graduate a finished extension admission to decode: register its
+        full prompt pages in the prefix index (retention refs — this is
+        what a LATER identical prefix hits), prefill the draft stripe in
+        one shot under spec, and arm the decode lane — or finish outright
+        on a first-token EOS / single-token budget."""
+        p = req.params
+        eos = self._eff_eos(req)
+        req.tokens.append(first_i)
+        req.first_token_time = now
+        self.stats.tokens_generated += 1
+        del self._prefilling[slot]
+        if self.prefix is not None:
+            self.prefix.register(req.prompt, self.kv.slot_pages(slot),
+                                 self.kv)
+        if self.telemetry.enabled:
+            self.telemetry.tracer.request_span(
+                req, "prefill", req.admit_time, now,
+                hit_tokens=req.prefix_hit_tokens, chunks=req.prefill_chunks)
+        if (eos >= 0 and first_i == eos) or p.max_new_tokens <= 1:
+            # finished at its first token: unlike the classic path this
+            # slot exists (pages were mapped before prefill), so release
+            # it — registered pages survive via the index's references
+            self.kv.release(slot)
+            if self.draft_kv is not None:
+                self.draft_kv.release(slot)
+            self._finish(req, finished)
+            return
+        if self.draft_kv is not None:
+            n = len(req.prompt)
+            s_b = self._bucket_len(n, 0) if self.bucket else n
+            dtok = np.zeros((1, s_b), np.int32)
+            dtok[0, :n] = req.prompt
+            d_rows = jnp.asarray(np.asarray([n], np.int32)) if self.bucket else None
+            dcache = self._draft_prefill(self._draft_params,
+                                         jnp.asarray(dtok),
+                                         self.draft_kv.template(1), d_rows)
+            self.draft_kv.insert(slot, dcache, n, row=0,
+                                 reserve=n + p.max_new_tokens)
+        keff = self._eff_keff(req)
+        prow = np.zeros((self.max_seq,), np.int32)
+        plen = min(len(req.prompt), self.max_seq - 1)
+        prow[:plen] = req.prompt[:plen]
+        prow[plen] = first_i
+        (self._tok, self._active, self._rem, self._temp, self._topk,
+         self._topp, self._eos, self._seeds, self._gens, self._keff,
+         self._match, self._hist, self._hlen) = self._set_slot(
+            self._tok, self._active, self._rem, self._temp, self._topk,
+            self._topp, self._eos, self._seeds, self._gens, self._keff,
+            self._match, self._hist, self._hlen, slot, first_i,
+            p.max_new_tokens - 1, p.temperature, p.top_k, p.top_p, eos,
+            self._eff_seed(req), keff, p.spec_accept == "match",
+            jnp.asarray(prow), plen + 1)
+        self._active_host[slot] = True
+        self._keff_host[slot] = keff
+        req.state = RequestState.DECODING
+        self._running[slot] = req
+
     def _release_slot(self, slot: int) -> None:
         self.kv.release(slot)
         if self.draft_kv is not None:
@@ -697,13 +1043,21 @@ class Scheduler:
         t0 = time.perf_counter()
         if self.telemetry.enabled and self._last_sync is not None:
             self._m_host_gap.observe(t0 - self._last_sync)
+        # while a slot is mid-chunked-prefill the chunk guards its rows:
+        # inactive lanes' junk writes are swept in-jit (a fully-rejected
+        # speculation for the protected lanes)
+        guarded = bool(self._prefilling)
+        protect = np.zeros((self.max_slots,), bool)
+        if guarded:
+            protect[list(self._prefilling)] = True
         with self.telemetry.annotation("serve_decode_chunk",
                                        step=self.stats.decode_steps):
             (self.kv.cache, self._tok, self._active, self._rem, self._gens,
              emits) = self._chunk(
                 self.params, self.kv.cache, self._tok, self._active, self._rem,
                 self._temp, self._topk, self._topp, self._eos, self._seeds,
-                self._gens, self._key, stochastic=stochastic)
+                self._gens, self._key, jnp.asarray(protect),
+                stochastic=stochastic, guarded=guarded)
             emits = np.asarray(emits)             # (chunk, slots) — one sync
             active_np = np.asarray(self._active)
         t1 = time.perf_counter()
@@ -858,10 +1212,13 @@ class Scheduler:
                     (self.stats.draft_accepted - da0) / dp)
 
     def step(self) -> list[Request]:
-        """One scheduler iteration: admit into free slots, run one decode
-        chunk, harvest. Returns requests that finished this step."""
+        """One scheduler iteration: admit into free slots (extension
+        admissions map their shared pages and start chunking), advance
+        every mid-prefill slot by one chunk, run one decode chunk,
+        harvest. Returns requests that finished this step."""
         finished: list[Request] = []
         self._admit(finished)
+        self._advance_prefill(finished)
         self._decode_and_harvest(finished)
         return finished
 

@@ -284,17 +284,122 @@ def run_self_draft(family="transformer"):
 
 
 # ---------------------------------------------------------------------------
+# prefix sharing + chunked prefill: sharing must be token-invisible
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=None)
+def _share_workload(family):
+    """Shared-prefix prompts: requests 0-2 share `2.5 * page` tokens and
+    run past three full pages, so the divergent third page is indexed and
+    later arrivals copy-on-write its shared head; 3-4 share exactly two
+    full pages (pure full-page hits), all with distinct suffixes."""
+    c = _CASES[family]
+    cfg, _ = _model(family)
+    page = c["page"]
+    rng = np.random.default_rng(c["seed"] + 1)
+    base = rng.integers(0, cfg.vocab, (2 * page + page // 2,)).astype(np.int32)
+    prompts = []
+    for i in range(5):
+        # i < 3: base + a tail long enough that page 2 (base tail rows +
+        # private suffix) is a FULL page -> registered -> CoW donor
+        tail = rng.integers(0, cfg.vocab, (page // 2 + i,)).astype(np.int32)
+        cut = len(base) if i < 3 else 2 * page
+        prompts.append(np.concatenate([base[:cut], tail]))
+    embeds = None
+    if c.get("n_frames"):
+        embeds = tuple(
+            rng.standard_normal((c["n_frames"], cfg.d_model)).astype(np.float32)
+            for _ in prompts)
+    return tuple(prompts), embeds
+
+
+def share_tokens(family, mesh=None, prefix_share="auto", prefill_chunk=None,
+                 spec=None):
+    """Drive the shared-prefix workload; returns (tokens, scheduler)."""
+    c = _CASES[family]
+    cfg, params = _model(family)
+    prompts, embeds = _share_workload(family)
+    sched = Scheduler(cfg, params, max_slots=4, max_seq=MAX_SEQ,
+                      decode_chunk=4, mesh=mesh, spec=spec, page=c["page"],
+                      n_pages="auto", cache_kw=c.get("cache_kw"),
+                      prefix_share=prefix_share, prefill_chunk=prefill_chunk)
+    reqs = [Request(rid=i, prompt=p,
+                    params=SamplingParams(max_new_tokens=c["max_new"]),
+                    embeds=None if embeds is None else embeds[i], arrival=i)
+            for i, p in enumerate(prompts)]
+    sched.run(reqs)
+    return [r.tokens for r in reqs], sched
+
+
+@functools.lru_cache(maxsize=None)
+def isolated_share_tokens(family):
+    c = _CASES[family]
+    cfg, params = _model(family)
+    prompts, embeds = _share_workload(family)
+    return [greedy_isolated(cfg, params, p, c["max_new"], MAX_SEQ,
+                            embeds=None if embeds is None else embeds[i],
+                            cache_kw=c.get("cache_kw"))
+            for i, p in enumerate(prompts)]
+
+
+def assert_share_conformance(family, mesh=None):
+    """Prefix sharing, CoW and chunked prefill must not change one token:
+    shared == unshared == isolated, with exact refcount accounting and a
+    pool that drains to pristine once the index is dropped.  Families
+    without bitwise-sharable K/V rows must downgrade "auto" silently."""
+    iso = isolated_share_tokens(family)
+    off, _ = share_tokens(family, mesh=mesh, prefix_share=False)
+    assert off == iso, f"{family}: sharing-off run diverged from isolated"
+    on, sp = share_tokens(family, mesh=mesh)
+    assert on == iso, f"{family}: prefix sharing changed tokens"
+    if not zoo.supports_prefix_share(sp.cfg):
+        assert sp.prefix is None  # "auto" downgraded silently
+        return
+    assert sp.prefix is not None
+    kv, st = sp.kv, sp.stats
+    # the sharing machinery actually engaged: full-page hits, a divergent
+    # tail copy, and a hit rate the workload design guarantees
+    assert st.prefix_hit_tokens > 0
+    assert st.prefix_hit_rate > 0
+    assert kv.cow_copies > 0, "divergent tails never exercised CoW"
+    # refcount conservation, then pristine once retention is dropped
+    assert kv.n_free_pages + kv.n_referenced_pages == kv.n_alloc_pages
+    sp.clear_prefix_cache()
+    assert kv.n_free_pages == kv.n_alloc_pages
+    kpos = np.asarray(kv.cache["kpos"])
+    assert (kpos[:, paging.N_RESERVED:] == paging.KPOS_SENTINEL).all(), \
+        "a drained pool kept real kpos rows (missed last-reference sweep)"
+
+    # chunked prefill interleaved with decode: still token-identical
+    ch, sc = share_tokens(family, mesh=mesh, prefill_chunk=_CASES[family]["page"])
+    assert ch == iso, f"{family}: chunked prefill changed tokens"
+    assert sc.stats.prefill_chunks > 0
+
+    # speculative decode over shared pages + chunked admission
+    sk, ss = share_tokens(family, mesh=mesh, spec=SpecConfig(k=3),
+                          prefill_chunk=_CASES[family]["page"])
+    assert sk == iso, f"{family}: spec decode over shared pages diverged"
+    assert ss.stats.verify_steps > 0
+    assert ss.stats.prefix_hit_tokens > 0
+
+
+# ---------------------------------------------------------------------------
 # churn property: random admit/release against the (sharded) paged pool
 # ---------------------------------------------------------------------------
 
 
 def run_churn(seed, mesh=None, n_ops=40):
-    """Random admit/rollback/release churn against a paged SlotKVCache:
-    page accounting must stay exact at every step, speculative rollbacks
-    (random accept/reject prefixes over a slot's trailing rows) must keep
+    """Random admit/share/rollback/release churn against a paged
+    SlotKVCache: refcount accounting must match an independent host model
+    at every step (conservation law: a page is on a free list exactly when
+    its modelled refcount is zero), speculative rollbacks (random
+    accept/reject prefixes over a slot's trailing rows) must keep
     byte/page/slot_len accounting untouched and sweep the rejected rows
-    exactly, no page may leak rows after drain, and pool bytes never move
-    (the pool never reallocates)."""
+    exactly, shared admits (`map_slot` onto a live donor's full pages,
+    with random copy-on-write tails) must be row-exact for both owners
+    through any release order, no page may leak rows after drain, and
+    pool bytes never move (the pool never reallocates)."""
     cfg, _ = _model("transformer")
     # n_pages=10 -> 12 with the reserved pair: already divides a 4-way mesh,
     # so sharded and unsharded pools are byte-identical
@@ -304,12 +409,21 @@ def run_churn(seed, mesh=None, n_ops=40):
     tpl = kv.template(1)
     ar = jnp.arange(MAX_SEQ, dtype=jnp.int32)
     rng = np.random.default_rng(seed)
-    live: dict[int, list[int]] = {}  # slot -> [current rows, reserved rows]
+    # slot -> [current rows, reserved rows, floor]: `floor` is the lowest
+    # row a rollback may rewind to — rows below it live in pages another
+    # owner maps (mapped-in shared pages, or full pages donated away), the
+    # analogue of the scheduler never rolling back into prompt rows
+    live: dict[int, list[int]] = {}
+    model_ref: dict[int, int] = {}  # page -> expected refcount
 
     def check():
-        used = sum(kv.pages_needed(r) for _, r in live.values())
-        assert kv.n_free_pages == kv.n_alloc_pages - used, \
-            f"free-list drift: {kv.n_free_pages} free, {used} pages live"
+        for p in range(paging.N_RESERVED, kv.n_pages):
+            assert kv.page_ref(p) == model_ref.get(p, 0), \
+                f"page {p}: ref {kv.page_ref(p)} != model {model_ref.get(p, 0)}"
+        n_ref = sum(1 for v in model_ref.values() if v > 0)
+        assert kv.n_free_pages == kv.n_alloc_pages - n_ref, \
+            f"free-list drift: {kv.n_free_pages} free, {n_ref} referenced"
+        assert kv.n_referenced_pages == n_ref
         assert kv.pool_bytes() == bytes0  # the pool never reallocates
 
     def slot_rows_on_device(slot):
@@ -323,17 +437,19 @@ def run_churn(seed, mesh=None, n_ops=40):
 
     for _ in range(n_ops):
         roll = rng.random()
-        can_roll = [s for s in sorted(live) if live[s][0] >= 1]
+        can_roll = [s for s in sorted(live) if live[s][0] - live[s][2] >= 1]
+        donors = [s for s in sorted(live) if live[s][0] >= kv.page]
         if can_roll and roll < 0.25:
             # speculative commit/rollback: treat the slot's last n_spec
             # rows as verify-written candidates and keep a random prefix
+            # (never rewinding below the slot's sharing floor)
             slot = int(rng.choice(can_roll))
-            rows_now = live[slot][0]
-            n_spec = int(rng.integers(1, min(rows_now, 6) + 1))
+            rows_now, _, floor = live[slot]
+            n_spec = int(rng.integers(1, min(rows_now - floor, 6) + 1))
             keep_n = int(rng.integers(0, n_spec + 1))
             pos0 = np.zeros((kv.n_slots,), np.int32)
             keep = np.zeros((kv.n_slots,), np.int32)
-            for s, (r, _) in live.items():  # untouched slots: empty window
+            for s, (r, _, _) in live.items():  # untouched slots: empty window
                 pos0[s] = r
             pos0[slot], keep[slot] = rows_now - n_spec, keep_n
             free_before = kv.n_free_pages
@@ -345,6 +461,40 @@ def run_churn(seed, mesh=None, n_ops=40):
             assert kv.slot_capacity(slot) == live[slot][1]
             # the device pos counter rewound with the sweep
             assert int(np.asarray(kv.cache["pos"])[0, slot]) == live[slot][0]
+        elif donors and kv.n_free > 0 and 0.25 <= roll < 0.45:
+            # shared admit: map a new slot onto a random prefix of a live
+            # donor's full pages, optionally CoW-ing a divergent tail out
+            # of the donor's next page
+            donor = int(rng.choice(donors))
+            d_rows = live[donor][0]
+            d_pages = kv.slot_pages(donor)
+            n_share = int(rng.integers(1, d_rows // kv.page + 1))
+            shared = d_pages[:n_share]
+            shared_rows = n_share * kv.page
+            cow_src, cow_rows = None, 0
+            rem = d_rows - shared_rows
+            if rem > 0 and rng.random() < 0.5:
+                cow_src = d_pages[n_share]
+                cow_rows = int(rng.integers(1, rem + 1))
+            mapped = shared_rows + cow_rows
+            reserve = min(MAX_SEQ, mapped + int(rng.integers(1, 16)))
+            n_fresh = kv.pages_needed(reserve) - n_share
+            if n_fresh < 1 or n_fresh > kv.n_free_pages:
+                check()  # a refused mapping must not move accounting
+                continue
+            slot = kv.acquire()
+            pages = kv.map_slot(slot, shared, shared_rows, reserve,
+                                cow_src=cow_src, cow_rows=cow_rows)
+            assert pages[:n_share] == shared  # prefix order preserved
+            for p in pages:  # shared ref++, fresh 0 -> 1
+                model_ref[p] = model_ref.get(p, 0) + 1
+            # the donor's donated full pages may never be rolled back
+            # (the sharer is attending to them); the CoW source page
+            # stays donor-private — the sharer holds a copy
+            live[donor][2] = max(live[donor][2], shared_rows)
+            live[slot] = [mapped, reserve, mapped]
+            assert kv.slot_len[slot] == mapped
+            assert kv.slot_capacity(slot) == reserve
         elif kv.n_free > 0 and (not live or roll < 0.65):
             rows = int(rng.integers(1, 33))
             reserve = min(MAX_SEQ, rows + int(rng.integers(0, 16)))
@@ -360,23 +510,33 @@ def run_churn(seed, mesh=None, n_ops=40):
                                paging.KPOS_SENTINEL),
                 pos=jnp.full_like(tpl["pos"], rows))
             kv.insert(slot, stripe, rows, reserve=reserve)
-            live[slot] = [rows, reserve]
+            live[slot] = [rows, reserve, 0]
+            for p in kv.slot_pages(slot):
+                assert model_ref.get(p, 0) == 0  # fresh pages only
+                model_ref[p] = 1
             assert kv.slot_len[slot] == rows
             assert kv.slot_capacity(slot) == reserve
         elif live:
             slot = int(rng.choice(sorted(live)))
+            pages = kv.slot_pages(slot)
             kv.release(slot)
             live.pop(slot)
+            for p in pages:
+                model_ref[p] -= 1
             assert kv.slot_len[slot] == 0 and kv.slot_capacity(slot) == 0
         check()
 
     # before draining: every live slot holds exactly its tracked rows —
-    # rollbacks swept the rejected suffixes and nothing else
-    for slot, (rows_now, _) in live.items():
+    # rollbacks swept the rejected suffixes and nothing else, and a
+    # released co-owner's pages were NOT swept under the survivors
+    for slot, (rows_now, _, _) in live.items():
         assert slot_rows_on_device(slot) == list(range(rows_now)), \
-            f"slot {slot}: device rows diverged after rollback churn"
+            f"slot {slot}: device rows diverged after rollback/share churn"
     for slot in sorted(live):
+        for p in kv.slot_pages(slot):
+            model_ref[p] -= 1
         kv.release(slot)
+    assert all(v == 0 for v in model_ref.values()), "refcounts leaked"
     assert kv.n_free_pages == kv.n_alloc_pages, "leaked pages after drain"
     assert kv.n_free == kv.n_slots
     assert (kv.slot_len == 0).all()
@@ -439,6 +599,8 @@ def _drive(mode: str, mesh) -> None:
                                   replicate=True)
     elif mode.startswith("spec:"):
         assert_spec_conformance(mode.split(":", 1)[1], mesh=mesh)
+    elif mode.startswith("share:"):
+        assert_share_conformance(mode.split(":", 1)[1], mesh=mesh)
     elif mode == "churn":
         for seed in (0, 1, 2):
             run_churn(seed, mesh=mesh)
@@ -483,6 +645,14 @@ if pytest is not None:
 
     def test_spec_self_draft_model():
         run_self_draft("transformer")
+
+    @pytest.mark.parametrize("family", FAMILIES)
+    def test_share_conformance_unsharded(family):
+        assert_share_conformance(family, mesh=None)
+
+    def test_share_conformance_sharded():
+        # prefix sharing + CoW + chunked prefill on a page-sharded pool
+        _sharded_case("share:transformer")
 
     def test_spec_unsupported_family():
         cfg, params = _model("ssm")

@@ -215,7 +215,12 @@ def test_auto_n_pages_gates_admission(pruned_model):
     sched.run([])  # r1 drains, its pages refill the list, r2 admits (FIFO)
     iso = [greedy_isolated(cfg, packed, p, 14, 64) for p in prompts]
     assert [r.tokens for r in reqs] == iso
-    assert sched.kv.n_free_pages == sched.kv.n_alloc_pages
+    # post-drain: only the prefix index may retain pages (refcount law),
+    # and dropping it returns the pool to pristine
+    kv = sched.kv
+    assert kv.n_free_pages + kv.n_referenced_pages == kv.n_alloc_pages
+    sched.clear_prefix_cache()
+    assert kv.n_free_pages == kv.n_alloc_pages
 
 
 def test_paged_page_reuse_cannot_leak(pruned_model):
@@ -249,7 +254,10 @@ def test_paged_page_reuse_cannot_leak(pruned_model):
     assert r1.slot == r2.slot == 0  # r2 recycled r1's slot (and pages)
 
     # every release must have swept its pages' kpos back to the sentinel:
-    # with both requests drained, no allocatable page may retain real rows
+    # with both requests drained and the prefix index dropped (retained
+    # pages sweep when their LAST reference goes), no allocatable page may
+    # retain real rows
+    sched.clear_prefix_cache()
     kpos = np.asarray(sched.kv.cache["kpos"])
     for pid in range(paging.N_RESERVED, sched.kv.n_pages):
         assert (kpos[:, pid] == paging.KPOS_SENTINEL).all(), \
@@ -277,7 +285,11 @@ def test_bucketed_admission_compile_count(pruned_model):
     reqs = [Request(rid=i, prompt=p, params=SamplingParams(max_new_tokens=5),
                     arrival=2 * i) for i, p in enumerate(prompts)]
     sched.run(reqs)
-    assert sched.prefill_traces <= 4  # buckets {8, 16, 32, 64}
+
+    def traces(s):
+        return s.telemetry.registry.counter("serve_prefill_traces").value
+
+    assert traces(sched) <= 4  # buckets {8, 16, 32, 64}
     for r in reqs:
         assert r.tokens == greedy_isolated(cfg, packed, r.prompt, 5, 64)
 
@@ -286,7 +298,7 @@ def test_bucketed_admission_compile_count(pruned_model):
     reqs = [Request(rid=i, prompt=p, params=SamplingParams(max_new_tokens=5),
                     arrival=2 * i) for i, p in enumerate(prompts)]
     exact.run(reqs)
-    assert exact.prefill_traces == len(lens)  # one jit per distinct length
+    assert traces(exact) == len(lens)  # one jit per distinct length
 
 
 def test_first_token_finish_skips_slot_churn(pruned_model):

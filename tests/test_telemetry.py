@@ -357,4 +357,7 @@ def test_prefill_traces_alias_tracks_registry(small_model):
     sched.run(_workload(cfg, n=3))
     n = sched.telemetry.registry.counter("serve_prefill_traces").value
     assert n >= 1
-    assert sched.prefill_traces == n  # deprecated alias, same instrument
+    # the alias still reads the same instrument, but is now deprecated in
+    # favour of the registry counter — reading it must say so exactly once
+    with pytest.warns(DeprecationWarning, match="serve_prefill_traces"):
+        assert sched.prefill_traces == n
