@@ -4,7 +4,10 @@ Three comparisons on the same jitted decode machinery (serve.Scheduler):
 
   1. continuous vs static admission on a skewed staggered-arrival workload
      (one long request per static gang) — the structural utilization gap,
-     not wall-clock noise, drives the speedup;
+     not wall-clock noise, drives the speedup; the continuous row admits
+     asynchronously (double-buffered against the in-flight decode chunk),
+     and an `admission` section pins async vs sync throughput and the
+     host-overhead fraction the overlap removes;
   2. paged pool vs PR 2 stripe pool on the same workload — KV pool bytes
      at the benchmark's occupancy (pages cover live tokens; stripes pin
      slots x max_seq) and the throughput cost of the page gather;
@@ -122,7 +125,10 @@ def _drive(sched, reqs):
     makespan = time.perf_counter() - t0
     st = sched.stats
     # host overhead: makespan not attributed to the timed prefill/decode
-    # dispatch windows (admission bookkeeping, harvest, queue management)
+    # dispatch windows (admission bookkeeping, harvest, queue management).
+    # decode_seconds already contains the unfused chain's draft dispatches
+    # (spec_draft_seconds is a SLICE of it, not an addition), so the gap
+    # subtracts each second exactly once.
     host_overhead = (max(0.0, makespan - st.prefill_seconds - st.decode_seconds)
                      / max(makespan, 1e-9))
     out = {
@@ -133,7 +139,11 @@ def _drive(sched, reqs):
         "makespan_seconds": makespan,
         "tokens_per_second": st.tokens_generated / max(makespan, 1e-9),
         "decode_tokens_per_second": st.decode_tokens_per_second,
-        "decode_step_us": 1e6 * st.decode_seconds / max(st.decode_steps, 1),
+        # per-step device time, net of the unfused spec chain's draft
+        # dispatches — those are reported separately below, so a drafter
+        # swap moves one column instead of silently skewing this one
+        "decode_step_us": (1e6 * (st.decode_seconds - st.spec_draft_seconds)
+                           / max(st.decode_steps, 1)),
         "weight_bytes_per_token": st.weight_bytes_per_token,
         "packed_param_bytes": st.packed_param_bytes,
         "dense_param_bytes": st.dense_param_bytes,
@@ -154,11 +164,15 @@ def _drive(sched, reqs):
     if sched.spec is not None:
         out.update(
             spec_k=sched.spec.k,
+            spec_fused=sched.spec.fused,
             drafter=sched.drafter.kind,
             verify_steps=st.verify_steps,
             acceptance_rate=st.acceptance_rate,
             tokens_per_verify_step=st.tokens_per_verify_step,
             weight_bytes_per_accepted_token=st.weight_bytes_per_accepted_token,
+            spec_draft_seconds=st.spec_draft_seconds,
+            spec_dispatches=sched.telemetry.registry.counter(
+                "serve_spec_dispatches").value,
         )
     return out
 
@@ -215,6 +229,20 @@ def _assert_serve_floors(report: dict, base: dict) -> None:
         "weight bytes per decode token regressed vs the committed baseline")
     assert report["kv_pool"]["ratio"] <= base["kv_pool"]["ratio"] + 1e-6, (
         "paged/stripe KV pool byte ratio regressed")
+    # host overhead is the async-admission win this bench pins: allow an
+    # absolute noise margin over the committed value, never a collapse
+    # back to synchronous-admission territory
+    assert (cont["host_overhead_fraction"]
+            <= bcont["host_overhead_fraction"] + 0.04), (
+        f"host overhead fraction regressed: "
+        f"{cont['host_overhead_fraction']:.3f} vs committed "
+        f"{bcont['host_overhead_fraction']:.3f}")
+    if "admission" in base:
+        adm, badm = report["admission"], base["admission"]
+        assert adm["async_vs_sync"] >= 0.8 * badm["async_vs_sync"], (
+            f"async/sync admission throughput ratio collapsed: "
+            f"{adm['async_vs_sync']:.2f} vs committed "
+            f"{badm['async_vs_sync']:.2f}")
     if "packed_weights" in base:
         pw, bpw = report["packed_weights"], base["packed_weights"]
         assert (pw["packed"]["packed_param_bytes"]
@@ -241,6 +269,15 @@ def _assert_spec_floors(report: dict, base: dict) -> None:
         assert (report["bytes_per_token_ratio"][name]
                 <= base["bytes_per_token_ratio"][name] * 1.05), (
             f"spec {name} bytes/accepted-token ratio regressed")
+    # the fused-loop floors: speculation must actually pay wall-clock on
+    # the drafter-friendly workload, and fusing must beat the per-cycle
+    # dispatch chain (the whole point of the scan)
+    assert report["spec_speedup"]["ngram"] >= 1.0, (
+        f"ngram speculation no longer beats the non-speculative baseline "
+        f"wall-clock: {report['spec_speedup']['ngram']:.2f}x")
+    assert report["fused_vs_unfused"]["ngram"] >= 1.0, (
+        f"the fused spec loop no longer beats the unfused dispatch chain: "
+        f"{report['fused_vs_unfused']['ngram']:.2f}x")
 
 
 def run(out_path: str = "BENCH_serve.json") -> dict:
@@ -283,6 +320,18 @@ def run(out_path: str = "BENCH_serve.json") -> dict:
     sharded["n_devices"] = n_dev
     sharded_vs_single = (sharded["tokens_per_second"]
                          / max(paged["tokens_per_second"], 1e-9))
+
+    # async (double-buffered) vs synchronous admission: the continuous row
+    # above already admits asynchronously ("auto" resolves on under the
+    # continuous policy — prepare + prefill dispatch overlap the in-flight
+    # decode chunk, the blocking first-token sync lands at the next step
+    # boundary); this row pins what the overlap buys
+    reqs = _workload(cfg, np.random.default_rng(0), n_requests, slots,
+                     prompt_len)
+    sync_row = _serve(cfg, packed, reqs, "continuous", slots, max_seq,
+                      page=PAGE, n_pages=N_PAGES, async_admission=False)
+    async_vs_sync = (paged["tokens_per_second"]
+                     / max(sync_row["tokens_per_second"], 1e-9))
 
     # paged-attention kernel vs gather: the same continuous paged workload
     # with the decode attention resolved by the Pallas kernel vs the
@@ -328,6 +377,12 @@ def run(out_path: str = "BENCH_serve.json") -> dict:
     # observability layer off vs fully on (wall-clock histograms + span
     # recording + KV gauges). Best-of-2 per mode damps runner noise; the
     # on-run's metrics snapshot and Chrome trace become the CI artifacts.
+    # Sync admission here: with async admission the decode window absorbs
+    # the overlapped admission work (prepare runs under the in-flight
+    # chunk, which on a shared-core CPU runner is real contention), and
+    # how admissions interleave varies run to run — that variance would
+    # swamp the 3% budget this compare isolates. The async columns live
+    # in report["admission"].
     from repro.serve import Telemetry
 
     tele_rows = {}
@@ -340,7 +395,8 @@ def run(out_path: str = "BENCH_serve.json") -> dict:
                          _workload(cfg, np.random.default_rng(0), n_requests,
                                    slots, prompt_len),
                          "continuous", slots, max_seq,
-                         page=PAGE, n_pages=N_PAGES, telemetry=tele)
+                         page=PAGE, n_pages=N_PAGES, telemetry=tele,
+                         async_admission=False)
             if best is None or (row["decode_tokens_per_second"]
                                 > best["decode_tokens_per_second"]):
                 best = row
@@ -413,6 +469,15 @@ def run(out_path: str = "BENCH_serve.json") -> dict:
             "vs_single_device": sharded_vs_single,
             "kv_pool_bytes": sharded["kv_pool_bytes"],
         },
+        "admission": {
+            "async": {k: paged[k] for k in
+                      ("tokens_per_second", "host_overhead_fraction",
+                       "mean_ttft_seconds")},
+            "sync": {k: sync_row[k] for k in
+                     ("tokens_per_second", "host_overhead_fraction",
+                      "mean_ttft_seconds")},
+            "async_vs_sync": async_vs_sync,
+        },
         "telemetry": {
             "off_decode_tokens_per_second":
                 tele_rows["off"]["decode_tokens_per_second"],
@@ -448,6 +513,12 @@ def run(out_path: str = "BENCH_serve.json") -> dict:
     emit("serve_sharded", 0.0,
          f"devices={n_dev} tok/s={sharded['tokens_per_second']:.1f} "
          f"vs_single={sharded_vs_single:.2f}x")
+    emit("serve_admission", 0.0,
+         f"async_tok/s={paged['tokens_per_second']:.1f} "
+         f"sync_tok/s={sync_row['tokens_per_second']:.1f} "
+         f"async_vs_sync={async_vs_sync:.2f}x "
+         f"host_overhead={paged['host_overhead_fraction']:.3f}"
+         f"(sync={sync_row['host_overhead_fraction']:.3f})")
     emit("serve_paged_attn", kern_on["decode_step_us"],
          f"backend={kbackend} gather_step_us={kern_off['decode_step_us']:.0f} "
          f"kernel_step_us={kern_on['decode_step_us']:.0f} "
@@ -477,12 +548,15 @@ def run_spec(out_path: str = "BENCH_spec.json") -> dict:
 
     A repetitive-prompt workload (a 4-token pattern tiled, the generation
     itself settles into loops a prompt-lookup drafter can predict) decoded
-    three ways on the same paged pool: non-speculative baseline, n-gram
-    drafter, and a self-drafting ModelDrafter (draft == target, the
-    acceptance-1.0 upper bound that pins the stats algebra).  CI asserts:
-    tokens identical to the baseline, acceptance-weighted
-    tokens-per-verify-step > 1 for both drafters, and a proportional drop
-    in packed-weight bytes per accepted token."""
+    four ways on the same paged pool: non-speculative baseline, n-gram
+    drafter through the fused draft/verify scan, the same drafter through
+    the unfused per-cycle dispatch chain, and a self-drafting ModelDrafter
+    (draft == target, the acceptance-1.0 upper bound that pins the stats
+    algebra).  CI asserts: tokens identical to the baseline, acceptance-
+    weighted tokens-per-verify-step > 1 for the drafters, a proportional
+    drop in packed-weight bytes per accepted token, and (vs the committed
+    baseline) the wall-clock floors `ngram >= 1.0x baseline` and
+    `fused >= unfused`."""
     import jax
 
     from repro.configs.base import load_arch
@@ -498,7 +572,11 @@ def run_spec(out_path: str = "BENCH_spec.json") -> dict:
     params = zoo.init(jax.random.PRNGKey(0), cfg)
     _, _, packed, _ = pruning.prune_model(params, cfg, ocp_iters=2, icp_iters=2)
 
-    slots, n_requests, max_new, max_seq, k = 4, 8, 32, 128, 4
+    # 64 new tokens per request: long enough that the generation's
+    # repetitive steady-state (which the prompt-lookup drafter predicts
+    # well) dominates the low-acceptance warmup tokens — the wall-clock
+    # floor `ngram >= baseline` is measured where speculation should win
+    slots, n_requests, max_new, max_seq, k = 4, 8, 64, 128, 4
     rng = np.random.default_rng(0)
     pat = rng.integers(0, cfg.vocab, (4,)).astype(np.int32)
 
@@ -509,25 +587,45 @@ def run_spec(out_path: str = "BENCH_spec.json") -> dict:
                         arrival=i)
                 for i in range(n_requests)]
 
-    def case(spec):
-        reqs = workload()
-        # sharing off: the tiled prompts repeat across requests, and a
-        # prefix hit would shrink the prefill this benchmark isolates
-        # speculation against (run_replay owns the sharing columns)
-        sched = Scheduler(cfg, packed, max_slots=slots, max_seq=max_seq,
-                          decode_chunk=4, page=PAGE, n_pages=12, spec=spec,
-                          prefix_share=False)
-        row = _drive(sched, reqs)
-        return row, [r.tokens for r in reqs]
+    def case(spec, runs=2):
+        # best-of-N damps runner noise on the wall-clock columns the
+        # fused-vs-unfused and spec-vs-baseline floors compare; tokens
+        # must not move between repeats (greedy = deterministic)
+        best, toks = None, None
+        for _ in range(runs):
+            reqs = workload()
+            # sharing off: the tiled prompts repeat across requests, and a
+            # prefix hit would shrink the prefill this benchmark isolates
+            # speculation against (run_replay owns the sharing columns)
+            sched = Scheduler(cfg, packed, max_slots=slots, max_seq=max_seq,
+                              decode_chunk=4, page=PAGE, n_pages=24,
+                              spec=spec, prefix_share=False)
+            row = _drive(sched, reqs)
+            t = [r.tokens for r in reqs]
+            assert toks is None or t == toks
+            toks = t
+            if best is None or (row["tokens_per_second"]
+                                > best["tokens_per_second"]):
+                best = row
+        return best, toks
 
     base_row, base_toks = case(None)
     ngram_row, ngram_toks = case(SpecConfig(k=k, drafter="ngram"))
+    unfused_row, unfused_toks = case(
+        SpecConfig(k=k, drafter="ngram", fused=False))
     self_row, self_toks = case(
-        SpecConfig(k=k, drafter=ModelDrafter(cfg, packed)))
+        SpecConfig(k=k, drafter=ModelDrafter(cfg, packed)), runs=1)
 
     # the serving contract survives speculation: tokens are identical
     assert ngram_toks == base_toks, "ngram spec decode changed tokens"
+    assert unfused_toks == base_toks, "unfused spec decode changed tokens"
     assert self_toks == base_toks, "self-draft spec decode changed tokens"
+    # the fused scan actually fused (one dispatch per step, covering all
+    # of that step's cycles) and the unfused chain actually did not
+    assert ngram_row["spec_dispatches"] < ngram_row["verify_steps"]
+    assert unfused_row["spec_dispatches"] >= 2 * unfused_row["verify_steps"]
+    assert ngram_row["spec_draft_seconds"] == 0.0
+    assert unfused_row["spec_draft_seconds"] > 0.0
     # acceptance-weighted tokens per verify must beat 1 (else speculation
     # never pays), and the packed-weight read per accepted token must drop
     # proportionally vs the baseline's per-chunk-step read
@@ -544,6 +642,7 @@ def run_spec(out_path: str = "BENCH_spec.json") -> dict:
                   "max_new_tokens": max_new, "spec_k": k},
         "baseline": base_row,
         "ngram": ngram_row,
+        "ngram_unfused": unfused_row,
         "self_draft": self_row,
         "bytes_per_token_ratio": {
             "ngram": (ngram_row["weight_bytes_per_accepted_token"]
@@ -551,11 +650,24 @@ def run_spec(out_path: str = "BENCH_spec.json") -> dict:
             "self_draft": (self_row["weight_bytes_per_accepted_token"]
                            / base_row["weight_bytes_per_token"]),
         },
+        # wall-clock, not bytes: speculation vs the non-speculative
+        # baseline, and the fused scan vs the per-cycle dispatch chain
+        "spec_speedup": {
+            "ngram": (ngram_row["tokens_per_second"]
+                      / max(base_row["tokens_per_second"], 1e-9)),
+            "self_draft": (self_row["tokens_per_second"]
+                           / max(base_row["tokens_per_second"], 1e-9)),
+        },
+        "fused_vs_unfused": {
+            "ngram": (ngram_row["tokens_per_second"]
+                      / max(unfused_row["tokens_per_second"], 1e-9)),
+        },
     }
     with open(out_path, "w") as f:
         json.dump(report, f, indent=2)
 
     for name, row in (("baseline", base_row), ("ngram", ngram_row),
+                      ("ngram_unfused", unfused_row),
                       ("self_draft", self_row)):
         tps = row.get("tokens_per_verify_step", 1.0)
         acc = row.get("acceptance_rate", 0.0)
@@ -564,6 +676,12 @@ def run_spec(out_path: str = "BENCH_spec.json") -> dict:
              f"tok/s={row['tokens_per_second']:.1f} "
              f"tok/verify={tps:.2f} accept={acc:.3f} "
              f"bytes/tok={row.get('weight_bytes_per_accepted_token', row['weight_bytes_per_token']):.0f}")
+    emit("serve_spec_fusion", 0.0,
+         f"ngram_vs_baseline={report['spec_speedup']['ngram']:.2f}x "
+         f"fused_vs_unfused={report['fused_vs_unfused']['ngram']:.2f}x "
+         f"fused_dispatches={ngram_row['spec_dispatches']} "
+         f"unfused_dispatches={unfused_row['spec_dispatches']} "
+         f"cycles={ngram_row['verify_steps']}")
     if base is not None:
         _assert_spec_floors(report, base)
     return report

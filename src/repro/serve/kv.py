@@ -548,6 +548,15 @@ class SlotKVCache:
         if self._m_rollbacks is not None:
             self._m_rollbacks.inc()
 
+    def note_scan_rollbacks(self, n: int) -> None:
+        """Account `n` rollback sweeps executed in-jit by a fused scan.
+        The scheduler's fused draft/verify loop inlines `zoo.cache_rollback`
+        into its cycle body (one per cycle, device-resident), so `rollback`
+        never sees them — this keeps the `kv_rollback_sweeps` counter
+        meaning "rollback sweeps applied to the pool" in both modes."""
+        if self._m_rollbacks is not None and n:
+            self._m_rollbacks.inc(n)
+
     def reset_all(self) -> None:
         if self.paged:
             self.cache = zoo.make_cache(

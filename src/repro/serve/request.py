@@ -150,6 +150,11 @@ class ServeStats:
     lane_verify_steps: int = 0     # sum over slots of verifies they rode
     draft_proposed: int = 0
     draft_accepted: int = 0
+    # wall time of the UNFUSED chain's draft dispatches (a slice of
+    # decode_seconds, split out so benches don't fold draft dispatch cost
+    # into the per-verify step time AND the host gap; the fused scan
+    # drafts in-jit, so this stays 0 there)
+    spec_draft_seconds: float = 0.0
     # --- prefix sharing + chunked prefill ---
     prefix_hit_tokens: int = 0     # prompt rows served from shared pages
     prefill_rows: int = 0          # prompt rows actually computed by prefill

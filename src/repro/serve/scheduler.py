@@ -117,7 +117,8 @@ class Scheduler:
                  spec: "spec_mod.SpecConfig | None" = None,
                  packed: bool | str = "auto", telemetry=None,
                  prefix_share: bool | str = "auto",
-                 prefill_chunk: int | None = None):
+                 prefill_chunk: int | None = None,
+                 async_admission: bool | str = "auto"):
         if policy not in ("continuous", "static"):
             raise ValueError(f"unknown admission policy {policy!r}")
         self.cfg = cfg
@@ -140,6 +141,16 @@ class Scheduler:
         self._m_hit_tokens = m.counter("serve_prefix_hit_tokens")
         self._m_chunks = m.counter("serve_prefill_chunks")
         self._m_evictions = m.counter("serve_prefix_evictions")
+        # dispatch-shape instruments (free: they count calls, not time).
+        # serve_spec_dispatches = device dispatches issued by the spec
+        # decode phase (the fused scan is ONE per step; the unfused chain
+        # is 3-4 per cycle); serve_overlap_admissions = admission groups
+        # whose prefill was dispatched while a decode chunk was in flight;
+        # serve_inflight_syncs = blocking host syncs issued while a chunk
+        # was in flight (the async path's regression canary — must be 0).
+        self._m_spec_dispatch = m.counter("serve_spec_dispatches")
+        self._m_overlap_admit = m.counter("serve_overlap_admissions")
+        self._m_inflight_syncs = m.counter("serve_inflight_syncs")
         # serve-time weight packing (one-time, here at construction):
         # "pack" routes every planned q/k/v/o + MLP projection through
         # hinm_spmm for prefill, decode and spec-verify; "dense" is the
@@ -195,6 +206,15 @@ class Scheduler:
             if spec.cycles is not None and spec.cycles < 1:
                 raise ValueError("SpecConfig.cycles must be >= 1 (or None "
                                  "for the decode_chunk-derived default)")
+            # fused scan: cycles are nearly free (no dispatch round-trip per
+            # cycle), so one cycle per chunk step keeps the per-dispatch
+            # token floor at the non-spec chunk's decode_chunk tokens/lane.
+            # Unfused: every cycle costs 3-4 dispatches, so keep about one
+            # chunk's worth of emitted rows per step.
+            self._spec_cycles = (
+                spec.cycles if spec.cycles is not None
+                else (decode_chunk if spec.fused
+                      else max(1, decode_chunk // (spec.k + 1))))
             d = spec.drafter
             if d == "ngram":
                 d = spec_mod.NgramDrafter(spec.ngram)
@@ -277,6 +297,31 @@ class Scheduler:
         self.prefix_share = bool(prefix_share)
         self.prefill_chunk = prefill_chunk
         self.prefix = PrefixIndex(self.kv.page) if self.prefix_share else None
+
+        # --- async (double-buffered) admission ---
+        # While a decode chunk is in flight on device, the host prepares
+        # the NEXT admission group — builds its padded token arrays and
+        # dispatches its prefill — instead of idling until the chunk's
+        # emit sync.  The group's first-token sync and slot arming happen
+        # at the START of the next step (`_commit_admissions`), when its
+        # prefill has long finished under the chunk.  Admission issues no
+        # blocking sync while a chunk is in flight ("serve_inflight_syncs"
+        # stays 0).  "auto" = on under the continuous policy; static gang
+        # admission stays the synchronous naive baseline.
+        if async_admission == "auto":
+            async_admission = policy == "continuous"
+        if async_admission and policy != "continuous":
+            raise ValueError("async admission requires the continuous "
+                             "admission policy (static gang admission is "
+                             "the synchronous baseline)")
+        self.async_admission = bool(async_admission)
+        # overlapped groups awaiting their first-token sync, plus the slot
+        # and page budget they reserved (commit must never find the pool
+        # drained by an extension admission racing in between)
+        self._pending_admits: list[tuple] = []
+        self._pending_slots = 0
+        self._pending_pages = 0
+        self._chunk_in_flight = False
         # slots mid-extension-prefill: they hold pages but no decode lane
         self._prefilling: dict[int, Request] = {}
         self._extend_jits: dict[tuple, object] = {}
@@ -449,6 +494,115 @@ class Scheduler:
 
             self._draft_prefill = jax.jit(draft_prefill_fn)
 
+        # --- fused draft/verify scan (SpecConfig.fused, the default) ---
+        # The whole cycle — draft(k) -> multi-token verify -> accept ->
+        # cache rollback -> history append — runs as ONE `lax.scan` body,
+        # device-resident for `self._spec_cycles` cycles per dispatch,
+        # with the draft cache carried through the scan alongside the
+        # target cache.  The only host sync stays the stacked emit matrix
+        # once per step, and the per-cycle dispatch chain (draft jit +
+        # verify jit + 1-2 rollback dispatches) collapses to one dispatch.
+        # The mid-prefill guard carries over by construction: `acceptance`
+        # zeroes `cnt` for inactive lanes (chunked-prefill slots included),
+        # so the in-scan rollback rewinds their junk verify rows with
+        # keep=0 EVERY cycle and `append_history` writes them nothing —
+        # exactly what SlotKVCache.rollback gave the unfused chain.
+        cycles = self._spec_cycles
+        k_spec = self.spec.k
+
+        def _fused_cycle(params, cache, tok, active, rem, temp, topk, topp,
+                         eos, seeds, gens, keff, match, hist, hlen,
+                         base_key, drafts, stochastic, any_reject):
+            pos0 = zoo.cache_position(cfg, cache)
+            tokens = jnp.concatenate([tok, drafts], axis=1)
+            logits, cache, undo = zoo.verify_step(params, cfg, tokens, cache)
+            logits = logits[..., :vocab].astype(jnp.float32)
+            emits, cnt, judged, tok, active, rem, gens = spec_mod.acceptance(
+                logits, drafts, tok, base_key=base_key, seeds=seeds,
+                gens=gens, temp=temp, topk=topk, topp=topp, eos=eos,
+                rem=rem, active=active, k_eff=keff, match=match,
+                stochastic=stochastic, any_reject=any_reject)
+            hist, hlen = spec_mod.append_history(hist, hlen, emits, cnt)
+            cache = zoo.cache_rollback(cfg, cache, undo, pos0, cnt, s_width)
+            return cache, tok, active, rem, gens, hist, hlen, emits, cnt, judged
+
+        if self.drafter.kind == "ngram":
+            n_gram = self.drafter.n
+
+            def spec_fused_fn(params, cache, tok, active, rem, temp, topk,
+                              topp, eos, seeds, gens, keff, match, hist,
+                              hlen, base_key, stochastic, any_reject):
+                from repro.perf_knobs import knobs
+
+                def cycle(carry, _):
+                    cache, tok, active, rem, gens, hist, hlen = carry
+                    drafts = spec_mod.ngram_propose(hist, hlen, tok, k_spec,
+                                                    n=n_gram)
+                    (cache, tok, active, rem, gens, hist, hlen, emits, cnt,
+                     judged) = _fused_cycle(
+                        params, cache, tok, active, rem, temp, topk, topp,
+                        eos, seeds, gens, keff, match, hist, hlen, base_key,
+                        drafts, stochastic, any_reject)
+                    return ((cache, tok, active, rem, gens, hist, hlen),
+                            (emits, cnt, judged))
+
+                with knobs(paged_attn=self.paged_attn):  # trace-time knob
+                    carry, outs = jax.lax.scan(
+                        cycle, (cache, tok, active, rem, gens, hist, hlen),
+                        None, length=cycles)
+                cache, tok, active, rem, gens, hist, hlen = carry
+                return (self.kv._constrain(cache), tok, active, rem, gens,
+                        hist, hlen) + outs
+
+            self._spec_fused = jax.jit(
+                spec_fused_fn, donate_argnums=(1, 2, 3, 4, 10, 13, 14),
+                static_argnames=("stochastic", "any_reject"))
+        else:
+            def spec_fused_fn(params, dparams, cache, dcache, tok, active,
+                              rem, temp, topk, topp, eos, seeds, gens, keff,
+                              match, hist, hlen, base_key, stochastic,
+                              any_reject):
+                from repro.perf_knobs import knobs
+
+                def cycle(carry, _):
+                    cache, dcache, tok, active, rem, gens, hist, hlen = carry
+                    dpos0 = zoo.cache_position(dcfg, dcache)
+
+                    def stp(c, _):
+                        dc, t = c
+                        lg, dc = zoo.decode_step(dparams, dcfg, t, dc)
+                        nxt = jnp.argmax(
+                            lg[:, :vcap], axis=-1).astype(jnp.int32)[:, None]
+                        return (dc, nxt), nxt[:, 0]
+
+                    (dcache, _), ds = jax.lax.scan(stp, (dcache, tok), None,
+                                                   length=s_width)
+                    drafts = jnp.moveaxis(ds, 0, 1)[:, :k_draft]
+                    (cache, tok, active, rem, gens, hist, hlen, emits, cnt,
+                     judged) = _fused_cycle(
+                        params, cache, tok, active, rem, temp, topk, topp,
+                        eos, seeds, gens, keff, match, hist, hlen, base_key,
+                        drafts, stochastic, any_reject)
+                    # same accept count rewinds the draft stripe in lockstep
+                    dcache = zoo.cache_rollback(dcfg, dcache, None, dpos0,
+                                                cnt, s_width)
+                    return ((cache, dcache, tok, active, rem, gens, hist,
+                             hlen), (emits, cnt, judged))
+
+                with knobs(paged_attn=self.paged_attn):  # trace-time knob
+                    carry, outs = jax.lax.scan(
+                        cycle,
+                        (cache, dcache, tok, active, rem, gens, hist, hlen),
+                        None, length=cycles)
+                cache, dcache, tok, active, rem, gens, hist, hlen = carry
+                return (self.kv._constrain(cache),
+                        self.draft_kv._constrain(dcache), tok, active, rem,
+                        gens, hist, hlen) + outs
+
+            self._spec_fused = jax.jit(
+                spec_fused_fn, donate_argnums=(2, 3, 4, 5, 6, 12, 15, 16),
+                static_argnames=("stochastic", "any_reject"))
+
     def _extend(self, width: int, sample: bool, stochastic: bool):
         """Jitted extension prefill, one trace per (width-bucket, sample,
         stochastic): write `width` token rows per lane from each slot's
@@ -535,6 +689,10 @@ class Scheduler:
         self._queue.clear()
         self._running.clear()
         self._prefilling.clear()
+        self._pending_admits.clear()
+        self._pending_slots = 0
+        self._pending_pages = 0
+        self._chunk_in_flight = False
         if self.prefix is not None:
             self.prefix = PrefixIndex(self.kv.page)
         self.kv.reset_all()
@@ -574,7 +732,9 @@ class Scheduler:
 
     @property
     def n_pending(self) -> int:
-        return len(self._queue) + len(self._prefilling) + len(self._running)
+        return (len(self._queue) + len(self._prefilling)
+                + len(self._running)
+                + sum(len(rec[0]) for rec in self._pending_admits))
 
     def _cache_rows(self, req: Request) -> int:
         """Decoder-cache rows this request's prefill occupies. encdec embeds
@@ -688,7 +848,9 @@ class Scheduler:
     def _admit(self, finished: list[Request]) -> None:
         if self.policy == "static" and self._running:
             return  # gang admission: wait for the whole pool to drain
-        while self._queue and self.kv.n_free:
+        # overlapped admission groups hold reservations: their slots/pages
+        # are drawn only at commit, so gate on what is genuinely left
+        while self._queue and self.kv.n_free - self._pending_slots > 0:
             ext, m = self._extension_plan(self._queue[0])
             if ext:
                 n_shared = len(m.page_ids) if m else 0
@@ -696,7 +858,8 @@ class Scheduler:
                     self._reserve_rows(self._queue[0])) - n_shared)
                 protect = () if m is None else tuple(m.page_ids) + (
                     () if m.cow_src is None else (m.cow_src,))
-                if not self._ensure_pages(need, protect):
+                if not self._ensure_pages(need + self._pending_pages,
+                                          protect):
                     return  # FIFO head waits for releases, no starvation
                 self._start_extension(self._queue.popleft(), m)
                 continue
@@ -717,14 +880,16 @@ class Scheduler:
             # refill the free list
             head_reserve = self._reserve_rows(self._queue[0])
             if self.kv.paged:
-                self._ensure_pages(self.kv.pages_needed(head_reserve))
-            if not self.kv.can_admit(head_reserve):
-                return
-            pages_left = self.kv.n_free_pages
+                head_need = self.kv.pages_needed(head_reserve)
+                self._ensure_pages(head_need + self._pending_pages)
+                if (head_need + self._pending_pages > self.kv.n_free_pages):
+                    return
+            pages_left = self.kv.n_free_pages - self._pending_pages
             if self.kv.paged:
                 pages_left -= self.kv.pages_needed(head_reserve)
             group = [self._queue.popleft()]
-            while (self._queue and len(group) < self.kv.n_free
+            while (self._queue
+                   and len(group) < self.kv.n_free - self._pending_slots
                    and sig(self._queue[0]) == sig(group[0])
                    and not self._extension_plan(self._queue[0])[0]):
                 if self.kv.paged:
@@ -737,11 +902,21 @@ class Scheduler:
             self._admit_group(group, finished)
 
     def _admit_group(self, group: list[Request], finished: list[Request]) -> None:
+        """Prefill an admission group and arm its slots.
+
+        The host work (array building), the prefill dispatch and the
+        first-token sync used to be one synchronous block.  They are now
+        two phases: **prepare** (everything up to and including the
+        dispatch — no sync) and **commit** (`_commit_group`: the one
+        first-token sync per group, then slot arming).  Synchronous mode
+        commits immediately; with async admission a group prepared while
+        a decode chunk is in flight is queued and committed at the start
+        of the next step, its prefill having overlapped the chunk."""
         k = len(group)
-        now = time.perf_counter()
+        t0 = time.perf_counter()  # host array prep counts as prefill work
         for req in group:
             req.state = RequestState.PREFILLING
-            req.admit_time = now
+            req.admit_time = t0
         if self.bucket:
             # pad every prompt to the group's shared length bucket and the
             # group itself to a power-of-two width: one jit per
@@ -785,7 +960,6 @@ class Scheduler:
             topks = np.asarray([r.params.top_k for r in group], np.int32)
             topps = np.asarray([r.params.top_p for r in group], np.float32)
             seeds = np.asarray([self._eff_seed(r) for r in group], np.int32)
-        t0 = time.perf_counter()
         with self.telemetry.annotation("serve_prefill"):
             first, cache_k = self._prefill(
                 self.params, tokens, self.kv.template(k_b), embeds, self._key,
@@ -799,22 +973,57 @@ class Scheduler:
             draft_cache_k = self._draft_prefill(
                 self._draft_params, tokens, self.draft_kv.template(k_b),
                 d_rows_dev)
-        first_np = np.asarray(first)  # one sync per admitted group (= TTFT)
-        now = time.perf_counter()
-        self.stats.prefill_seconds += now - t0
+        t1 = time.perf_counter()
         self.stats.prefill_rows += sum(self._cache_rows(r) for r in group)
         if self.telemetry.enabled:
             blen = int(tokens.shape[1])
             tr = self.telemetry.tracer
             self.telemetry.registry.histogram(
                 "serve_prefill_seconds",
-                labels={"bucket": str(blen)}).observe(now - t0)
-            tr.span("scheduler", f"prefill[b{blen}]", t0, now,
+                labels={"bucket": str(blen)}).observe(t1 - t0)
+            tr.span("scheduler", f"prefill[b{blen}]", t0, t1,
                     requests=k, bucket=blen)
             for req in group:
                 self._m_admit_wait.observe(req.admit_time - req.submit_time)
                 tr.request_span(req, "queued", req.submit_time, req.admit_time)
-                tr.request_span(req, f"prefill[b{blen}]", t0, now)
+                tr.request_span(req, f"prefill[b{blen}]", t0, t1)
+        rec = (group, first, cache_k, draft_cache_k)
+        if self.async_admission and self._chunk_in_flight:
+            # overlapped: the prepare window ran UNDER the in-flight decode
+            # chunk, so its wall time is hidden device-side — charging it
+            # to prefill_seconds as well would double-count the makespan.
+            # Reserve the group's slots/pages and hand off to next step's
+            # `_commit_admissions` (no sync here — that's the whole point).
+            self._pending_admits.append(rec)
+            self._pending_slots += k
+            if self.kv.paged:
+                self._pending_pages += sum(
+                    self.kv.pages_needed(self._reserve_rows(r))
+                    for r in group)
+            self._m_overlap_admit.inc()
+            return
+        self.stats.prefill_seconds += t1 - t0
+        self._commit_group(rec, finished)
+
+    def _commit_admissions(self, finished: list[Request]) -> None:
+        """Land every admission group prepared under the previous decode
+        chunk: one first-token sync per group (the prefill itself finished
+        while the chunk ran), then the usual slot arming."""
+        if not self._pending_admits:
+            return
+        pending, self._pending_admits = self._pending_admits, []
+        self._pending_slots = 0
+        self._pending_pages = 0
+        for rec in pending:
+            self._commit_group(rec, finished)
+
+    def _commit_group(self, rec: tuple, finished: list[Request]) -> None:
+        group, first, cache_k, draft_cache_k = rec
+        tc0 = time.perf_counter()
+        if self._chunk_in_flight:  # canary: committing mid-flight blocks
+            self._m_inflight_syncs.inc()
+        first_np = np.asarray(first)  # one sync per admitted group (= TTFT)
+        now = time.perf_counter()
         for row, req in enumerate(group):
             p = req.params
             eos = self._eff_eos(req)
@@ -843,10 +1052,9 @@ class Scheduler:
                                      row=row,
                                      reserve=len(req.prompt) + p.max_new_tokens)
             keff = self._eff_keff(req)
-            prow = np.zeros((self.max_seq,), np.int32)
-            plen = min(len(req.prompt), self.max_seq - 1)
-            prow[:plen] = req.prompt[:plen]
-            prow[plen] = first_i
+            # full-prompt drafter history (shared-prefix rows included)
+            prow, hl = spec_mod.seed_history(req.prompt, first_i,
+                                             self.max_seq)
             (self._tok, self._active, self._rem, self._temp, self._topk,
              self._topp, self._eos, self._seeds, self._gens, self._keff,
              self._match, self._hist, self._hlen) = self._set_slot(
@@ -855,12 +1063,16 @@ class Scheduler:
                 self._match, self._hist, self._hlen, slot, first_i,
                 p.max_new_tokens - 1, p.temperature, p.top_k, p.top_p, eos,
                 self._eff_seed(req), keff, p.spec_accept == "match",
-                jnp.asarray(prow), plen + 1)
+                jnp.asarray(prow), hl)
             self._active_host[slot] = True
             self._keff_host[slot] = keff
             req.state = RequestState.DECODING
             req.slot = slot
             self._running[slot] = req
+        # the whole commit — sync, pool inserts, slot arming — is admission
+        # work; leaving the arming loop outside the window misreports it as
+        # host gap (it dominated host_overhead_fraction at bench scale)
+        self.stats.prefill_seconds += time.perf_counter() - tc0
 
     def _start_extension(self, req: Request, m) -> None:
         """Begin an extension admission: acquire a slot, map the shared
@@ -941,6 +1153,8 @@ class Scheduler:
                 self.params, self.kv.cache, jnp.asarray(tokens),
                 jnp.asarray(keep), self._key, jnp.asarray(seeds),
                 jnp.asarray(temps), jnp.asarray(topks), jnp.asarray(topps))
+            if sample and self._chunk_in_flight:  # canary: see _commit_group
+                self._m_inflight_syncs.inc()
             first_np = np.asarray(first) if sample else None  # one sync
         now = time.perf_counter()
         self.stats.prefill_seconds += now - t0
@@ -1007,10 +1221,10 @@ class Scheduler:
             self.draft_kv.insert(slot, dcache, n, row=0,
                                  reserve=n + p.max_new_tokens)
         keff = self._eff_keff(req)
-        prow = np.zeros((self.max_seq,), np.int32)
-        plen = min(len(req.prompt), self.max_seq - 1)
-        prow[:plen] = req.prompt[:plen]
-        prow[plen] = first_i
+        # full-prompt drafter history: a prefix-shared admission prefilled
+        # only its unshared suffix, but the n-gram corpus must still hold
+        # the page-mapped prefix rows (spec_mod.seed_history's contract)
+        prow, hl = spec_mod.seed_history(req.prompt, first_i, self.max_seq)
         (self._tok, self._active, self._rem, self._temp, self._topk,
          self._topp, self._eos, self._seeds, self._gens, self._keff,
          self._match, self._hist, self._hlen) = self._set_slot(
@@ -1019,11 +1233,26 @@ class Scheduler:
             self._match, self._hist, self._hlen, slot, first_i,
             p.max_new_tokens - 1, p.temperature, p.top_k, p.top_p, eos,
             self._eff_seed(req), keff, p.spec_accept == "match",
-            jnp.asarray(prow), plen + 1)
+            jnp.asarray(prow), hl)
         self._active_host[slot] = True
         self._keff_host[slot] = keff
         req.state = RequestState.DECODING
         self._running[slot] = req
+
+    def _overlap_admit(self, finished: list[Request]) -> None:
+        """Double-buffered admission: called between a decode dispatch and
+        its emit sync, while the chunk is still in flight on device.  The
+        host prepares the next admission group (array building + prefill
+        dispatch — `_admit_group` defers its sync under the in-flight
+        flag) and starts extension admissions, all of which queue behind
+        the chunk instead of serializing after it."""
+        if not self.async_admission:
+            return
+        self._chunk_in_flight = True
+        try:
+            self._admit(finished)
+        finally:
+            self._chunk_in_flight = False
 
     def _release_slot(self, slot: int) -> None:
         self.kv.release(slot)
@@ -1058,6 +1287,7 @@ class Scheduler:
                 self._temp, self._topk, self._topp, self._eos, self._seeds,
                 self._gens, self._key, jnp.asarray(protect),
                 stochastic=stochastic, guarded=guarded)
+            self._overlap_admit(finished)  # chunk in flight: prep admission
             emits = np.asarray(emits)             # (chunk, slots) — one sync
             active_np = np.asarray(self._active)
         t1 = time.perf_counter()
@@ -1101,10 +1331,12 @@ class Scheduler:
         verifies all of them with ONE target forward, commits the accepted
         prefix and rolls the rejected rows back — up to k+1 tokens per slot
         per packed-weight read.  Like the chunk loop, the only host sync is
-        the stacked emit matrix once per step."""
+        the stacked emit matrix once per step.  With `SpecConfig.fused`
+        (default) all cycles additionally collapse into a single jitted
+        `lax.scan` dispatch; `fused=False` keeps the per-cycle dispatch
+        chain as the token-identical debugging fallback."""
         s_width = self.spec.k + 1
-        cycles = (self.spec.cycles if self.spec.cycles is not None
-                  else max(1, self.decode_chunk // s_width))
+        cycles = self._spec_cycles
         stochastic = any(r.params.temperature > 0 for r in self._running.values())
         # static specialization: the rejection-sampling pipeline only
         # compiles in when some stochastic lane actually opted into it
@@ -1116,45 +1348,88 @@ class Scheduler:
         if tele and self._last_sync is not None:
             self._m_host_gap.observe(t0 - self._last_sync)
         dp0, da0 = self.stats.draft_proposed, self.stats.draft_accepted
-        emits_dev, cnts_dev, judged_dev = [], [], []
-        for _ in range(cycles):
-            # the draft/verify split is dispatch-side wall time: the only
-            # device sync stays the stacked emit matrix below, so these
-            # histograms attribute host/dispatch cost, with device compute
-            # folded into whichever dispatch first blocks on it
-            td0 = time.perf_counter() if tele else 0.0
-            with self.telemetry.annotation("serve_spec_draft"):
+        if self.spec.fused:
+            # ONE dispatch runs all `cycles` draft/verify cycles device-
+            # resident (draft cache carried through the scan); the only
+            # sync stays the stacked emit matrix below
+            with self.telemetry.annotation("serve_spec_fused",
+                                           step=self.stats.decode_steps):
                 if self.draft_kv is not None:
-                    drafts, dpos0, self.draft_kv.cache = self._draft_propose(
-                        self._draft_params, self.draft_kv.cache, self._tok)
+                    (self.kv.cache, self.draft_kv.cache, self._tok,
+                     self._active, self._rem, self._gens, self._hist,
+                     self._hlen, emits_dev, cnts_dev,
+                     judged_dev) = self._spec_fused(
+                        self.params, self._draft_params, self.kv.cache,
+                        self.draft_kv.cache, self._tok, self._active,
+                        self._rem, self._temp, self._topk, self._topp,
+                        self._eos, self._seeds, self._gens, self._keff,
+                        self._match, self._hist, self._hlen, self._key,
+                        stochastic=stochastic, any_reject=any_reject)
                 else:
-                    drafts = self._propose(self._hist, self._hlen, self._tok)
-                    dpos0 = None
-            td1 = time.perf_counter() if tele else 0.0
-            with self.telemetry.annotation("serve_spec_verify"):
-                (self.kv.cache, undo, pos0, emits, cnt, judged, self._tok,
-                 self._active, self._rem, self._gens, self._hist,
-                 self._hlen) = self._verify(
-                    self.params, self.kv.cache, drafts, self._tok, self._active,
-                    self._rem, self._temp, self._topk, self._topp, self._eos,
-                    self._seeds, self._gens, self._keff, self._match, self._hist,
-                    self._hlen, self._key, stochastic=stochastic,
-                    any_reject=any_reject)
-                self.kv.rollback(pos0, cnt, s_width, undo=undo)
-                if dpos0 is not None:
-                    self.draft_kv.rollback(dpos0, cnt, s_width)
-            if tele:
-                td2 = time.perf_counter()
-                self._m_spec_draft.observe(td1 - td0)
-                self._m_spec_verify.observe(td2 - td1)
-                self.telemetry.tracer.span("scheduler", "spec_draft", td0, td1)
-                self.telemetry.tracer.span("scheduler", "spec_verify", td1, td2)
-            emits_dev.append(emits)
-            cnts_dev.append(cnt)
-            judged_dev.append(judged)
-        emits_np = np.asarray(jnp.stack(emits_dev))   # (cycles, slots, k+1)
-        cnts_np = np.asarray(jnp.stack(cnts_dev))     # (cycles, slots)
-        judged_np = np.asarray(jnp.stack(judged_dev))  # (cycles, slots)
+                    (self.kv.cache, self._tok, self._active, self._rem,
+                     self._gens, self._hist, self._hlen, emits_dev, cnts_dev,
+                     judged_dev) = self._spec_fused(
+                        self.params, self.kv.cache, self._tok, self._active,
+                        self._rem, self._temp, self._topk, self._topp,
+                        self._eos, self._seeds, self._gens, self._keff,
+                        self._match, self._hist, self._hlen, self._key,
+                        stochastic=stochastic, any_reject=any_reject)
+            self._m_spec_dispatch.inc()
+            self.kv.note_scan_rollbacks(cycles)
+            if self.draft_kv is not None:
+                self.draft_kv.note_scan_rollbacks(cycles)
+            self._overlap_admit(finished)  # scan in flight: prep admission
+        else:
+            emits_acc, cnts_acc, judged_acc = [], [], []
+            for _ in range(cycles):
+                # the draft/verify split is dispatch-side wall time: the
+                # only device sync stays the stacked emit matrix below, so
+                # these windows attribute host/dispatch cost, with device
+                # compute folded into whichever dispatch first blocks on it
+                td0 = time.perf_counter()
+                with self.telemetry.annotation("serve_spec_draft"):
+                    if self.draft_kv is not None:
+                        drafts, dpos0, self.draft_kv.cache = self._draft_propose(
+                            self._draft_params, self.draft_kv.cache, self._tok)
+                    else:
+                        drafts = self._propose(self._hist, self._hlen, self._tok)
+                        dpos0 = None
+                td1 = time.perf_counter()
+                # draft dispatch wall time is accounted on its own so the
+                # bench's decode_step_us (target verify cost) and host-gap
+                # columns don't each absorb it a second time
+                self.stats.spec_draft_seconds += td1 - td0
+                with self.telemetry.annotation("serve_spec_verify"):
+                    (self.kv.cache, undo, pos0, emits, cnt, judged, self._tok,
+                     self._active, self._rem, self._gens, self._hist,
+                     self._hlen) = self._verify(
+                        self.params, self.kv.cache, drafts, self._tok, self._active,
+                        self._rem, self._temp, self._topk, self._topp, self._eos,
+                        self._seeds, self._gens, self._keff, self._match, self._hist,
+                        self._hlen, self._key, stochastic=stochastic,
+                        any_reject=any_reject)
+                    self.kv.rollback(pos0, cnt, s_width, undo=undo)
+                    if dpos0 is not None:
+                        self.draft_kv.rollback(dpos0, cnt, s_width)
+                # unfused dispatch chain per cycle: draft + verify + target
+                # rollback (+ draft rollback under a model drafter)
+                self._m_spec_dispatch.inc(3 if dpos0 is None else 4)
+                if tele:
+                    td2 = time.perf_counter()
+                    self._m_spec_draft.observe(td1 - td0)
+                    self._m_spec_verify.observe(td2 - td1)
+                    self.telemetry.tracer.span("scheduler", "spec_draft", td0, td1)
+                    self.telemetry.tracer.span("scheduler", "spec_verify", td1, td2)
+                emits_acc.append(emits)
+                cnts_acc.append(cnt)
+                judged_acc.append(judged)
+            self._overlap_admit(finished)  # dispatches queued: prep admission
+            emits_dev = jnp.stack(emits_acc)
+            cnts_dev = jnp.stack(cnts_acc)
+            judged_dev = jnp.stack(judged_acc)
+        emits_np = np.asarray(emits_dev)   # (cycles, slots, k+1) — one sync
+        cnts_np = np.asarray(cnts_dev)     # (cycles, slots)
+        judged_np = np.asarray(judged_dev)  # (cycles, slots)
         active_np = np.asarray(self._active)
         t1 = time.perf_counter()
         self.stats.decode_seconds += t1 - t0
@@ -1215,11 +1490,29 @@ class Scheduler:
         """One scheduler iteration: admit into free slots (extension
         admissions map their shared pages and start chunking), advance
         every mid-prefill slot by one chunk, run one decode chunk,
-        harvest. Returns requests that finished this step."""
+        harvest. Returns requests that finished this step.
+
+        With async admission (default under the continuous policy) the
+        order double-buffers host work against device decode: groups
+        whose prefill overlapped the PREVIOUS chunk commit first (their
+        one sync — the prefill long finished), then the decode chunk
+        dispatches and `_admit` prepares the NEXT group while it runs."""
         finished: list[Request] = []
-        self._admit(finished)
-        self._advance_prefill(finished)
-        self._decode_and_harvest(finished)
+        if self.async_admission:
+            self._commit_admissions(finished)
+            self._advance_prefill(finished)
+            if self._active_host.any():
+                self._decode_and_harvest(finished)  # admits mid-flight
+            else:
+                # idle pool: nothing to overlap with — admit and commit
+                # synchronously so fresh slots decode this very step
+                self._admit(finished)
+                self._commit_admissions(finished)
+                self._decode_and_harvest(finished)
+        else:
+            self._admit(finished)
+            self._advance_prefill(finished)
+            self._decode_and_harvest(finished)
         return finished
 
     def run(self, requests: list[Request], max_steps: int = 1_000_000) -> list[Request]:

@@ -19,7 +19,8 @@ from __future__ import annotations
 import dataclasses
 
 from repro.serve.spec.drafter import (Drafter, ModelDrafter, NgramDrafter,
-                                      append_history, ngram_propose)
+                                      append_history, ngram_propose,
+                                      seed_history)
 from repro.serve.spec.verify import acceptance, position_keys
 
 __all__ = [
@@ -31,6 +32,7 @@ __all__ = [
     "append_history",
     "ngram_propose",
     "position_keys",
+    "seed_history",
 ]
 
 
@@ -45,11 +47,23 @@ class SpecConfig:
     target's `draft_arch` pairing with random init), or a `Drafter`
     instance (the way to supply real draft weights or a reduced config).
     ``ngram`` — lookup n-gram order for the ngram drafter.
-    ``cycles`` — draft/verify cycles per scheduler step (None -> about
-    one non-speculative chunk's worth: max(1, decode_chunk // (k + 1))).
+    ``fused`` — run the whole draft -> verify -> accept -> rollback ->
+    history cycle as one device-resident `lax.scan` body (one jit dispatch
+    and one host sync per scheduler step, like the non-speculative chunk
+    loop); False falls back to the per-cycle dispatch chain (one draft jit,
+    one verify jit and one rollback dispatch per cycle) — the debugging
+    knob, token-identical by contract.
+    ``cycles`` — draft/verify cycles per scheduler step.  None derives a
+    default from the loop shape: the fused scan runs ``decode_chunk``
+    cycles per dispatch (each cycle emits >= 1 token per active lane, so a
+    chunk of C cycles covers at least what the non-spec chunk emits); the
+    unfused chain keeps about one non-speculative chunk's worth,
+    max(1, decode_chunk // (k + 1)), because every extra cycle there costs
+    a full dispatch round-trip.
     """
 
     k: int = 4
     drafter: object = "ngram"
     ngram: int = 2
+    fused: bool = True
     cycles: int | None = None

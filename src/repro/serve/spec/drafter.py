@@ -26,6 +26,25 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+
+
+def seed_history(prompt, first_token: int, max_seq: int):
+    """(history row, length) arming a slot's n-gram corpus at admission.
+
+    The row holds the request's COMPLETE prompt followed by its first
+    sampled token — including prompt rows that prefix-shared admission
+    mapped by page reference and never prefilled.  Seeding from anything
+    less (e.g. only the rows the extension path computed) would silently
+    strip the shared prefix from the lookup corpus and collapse ngram
+    acceptance on exactly the repetitive shared-prefix workloads
+    speculation targets; `tests/serve_conformance.py` pins the acceptance
+    parity between shared and unshared admission."""
+    row = np.zeros((max_seq,), np.int32)
+    plen = min(len(prompt), max_seq - 1)
+    row[:plen] = prompt[:plen]
+    row[plen] = first_token
+    return row, plen + 1
 
 
 def ngram_propose(hist: jax.Array, hlen: jax.Array, tok: jax.Array,

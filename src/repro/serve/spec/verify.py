@@ -129,6 +129,15 @@ def acceptance(logits, drafts, tok, *, base_key, seeds, gens, temp, topk,
         ar[None, :] < cnt[:, None])
     first_eos = jnp.argmax(is_eos, axis=1).astype(jnp.int32)
     cnt = jnp.where(is_eos.any(axis=1), jnp.minimum(cnt, first_eos + 1), cnt)
+    # CONTRACT: inactive lanes emit and keep NOTHING.  `cnt` doubles as
+    # the per-lane cache-row `keep` for the rollback that follows every
+    # verify (host-side `SlotKVCache.rollback` in the unfused chain, the
+    # in-scan `zoo.cache_rollback` in the fused loop) — zeroing it here is
+    # what rewinds free lanes' junk rows AND shields mid-chunked-prefill
+    # slots' committed prefix from the verify's speculative writes, and
+    # (via `append_history`, which appends `cnt` tokens) what keeps their
+    # n-gram history clean of half-prefilled junk.  The spec x chunked-
+    # prefill x prefix-share conformance mode pins this.
     cnt = jnp.where(active, cnt, 0)
 
     emits = jnp.where(ar[None, :] < cnt[:, None], emits0, -1)

@@ -242,7 +242,9 @@ def assert_spec_conformance(family, mesh=None):
     """Speculative greedy decode must be token-identical to non-speculative
     decode: the n-gram drafter guesses, the multi-token verify scores, and
     the commit/rollback keeps exactly the accepted prefix — on both cache
-    layouts (and sharded pools when `mesh` is given)."""
+    layouts (and sharded pools when `mesh` is given), in BOTH the fused
+    single-dispatch scan (default) and the unfused per-cycle dispatch
+    chain (`SpecConfig.fused=False`), so fused == unfused == isolated."""
     iso = isolated_tokens(family)
     for layout in ("paged", "stripe"):
         toks, sp = scheduler_tokens(family, layout, mesh=mesh,
@@ -251,12 +253,28 @@ def assert_spec_conformance(family, mesh=None):
             f"{family}/{layout}: speculative decode diverged from isolated"
         assert sp.stats.verify_steps > 0          # the spec path actually ran
         assert sp.stats.decode_tokens > 0
+        # the fused scan really fused: one spec dispatch per decode step
+        # covers all of that step's draft/verify cycles
+        d = sp.telemetry.registry.counter("serve_spec_dispatches").value
+        assert sp.spec.fused and d * sp._spec_cycles == sp.stats.verify_steps, \
+            f"{family}/{layout}: {d} spec dispatches for " \
+            f"{sp.stats.verify_steps} cycles — the scan did not fuse"
         if layout == "paged":
             assert sp.kv.paged
             # accept/reject churn must leave page accounting exact
             assert sp.kv.n_free_pages == sp.kv.n_alloc_pages
         if mesh is not None:
             assert sp.kv.specs is not None
+        # unfused debugging fallback: token-identical by contract
+        utoks, su = scheduler_tokens(family, layout, mesh=mesh,
+                                     spec=SpecConfig(k=3, fused=False))
+        assert utoks == iso, \
+            f"{family}/{layout}: unfused spec decode diverged from isolated"
+        assert su.stats.verify_steps > 0
+        # per-request verify work is cadence-invariant: fused (many cycles
+        # per dispatch) and unfused judge exactly the same draft tokens
+        assert (su.stats.draft_proposed, su.stats.draft_accepted) == \
+            (sp.stats.draft_proposed, sp.stats.draft_accepted)
 
 
 def run_self_draft(family="transformer"):
@@ -315,7 +333,7 @@ def _share_workload(family):
 
 
 def share_tokens(family, mesh=None, prefix_share="auto", prefill_chunk=None,
-                 spec=None):
+                 spec=None, async_admission="auto"):
     """Drive the shared-prefix workload; returns (tokens, scheduler)."""
     c = _CASES[family]
     cfg, params = _model(family)
@@ -323,7 +341,8 @@ def share_tokens(family, mesh=None, prefix_share="auto", prefill_chunk=None,
     sched = Scheduler(cfg, params, max_slots=4, max_seq=MAX_SEQ,
                       decode_chunk=4, mesh=mesh, spec=spec, page=c["page"],
                       n_pages="auto", cache_kw=c.get("cache_kw"),
-                      prefix_share=prefix_share, prefill_chunk=prefill_chunk)
+                      prefix_share=prefix_share, prefill_chunk=prefill_chunk,
+                      async_admission=async_admission)
     reqs = [Request(rid=i, prompt=p,
                     params=SamplingParams(max_new_tokens=c["max_new"]),
                     embeds=None if embeds is None else embeds[i], arrival=i)
@@ -382,6 +401,54 @@ def assert_share_conformance(family, mesh=None):
     assert sk == iso, f"{family}: spec decode over shared pages diverged"
     assert ss.stats.verify_steps > 0
     assert ss.stats.prefix_hit_tokens > 0
+
+
+def assert_spec_share_conformance(family, mesh=None):
+    """Speculation composed with the admission machinery — the two pins:
+
+    (1) spec x chunked prefill x prefix sharing decodes token-identically
+    to isolated, in BOTH the fused scan and the unfused dispatch chain,
+    and under synchronous admission — mid-prefill lanes are excluded from
+    draft/verify (`spec.acceptance` zeroes cnt AND judged for inactive
+    lanes), so a slot still in extension prefill never gets verify rows
+    written or junk folded into its acceptance stats;
+    (2) prefix-shared admission must not starve the n-gram drafter: the
+    history corpus seeds from the COMPLETE prompt (`spec.seed_history`),
+    including rows served by page mapping rather than prefill, so
+    acceptance under sharing matches the unshared run exactly."""
+    iso = isolated_share_tokens(family)
+    page = _CASES[family]["page"]
+    off, s_off = share_tokens(family, mesh=mesh, prefix_share=False,
+                              spec=SpecConfig(k=3))
+    assert off == iso, f"{family}: spec sharing-off run diverged"
+    on, s_on = share_tokens(family, mesh=mesh, spec=SpecConfig(k=3))
+    assert on == iso, f"{family}: spec over shared pages changed tokens"
+    if not zoo.supports_prefix_share(s_on.cfg):
+        assert s_on.prefix is None  # "auto" downgraded silently
+        return
+    assert s_on.stats.prefix_hit_tokens > 0
+    # pin (2): per-slot draft/verify work is admission-invariant, so the
+    # aggregate (proposed, accepted) pair must match EXACTLY — a drafter
+    # whose history misses the page-mapped prompt rows fails here first
+    assert (s_on.stats.draft_proposed, s_on.stats.draft_accepted) == \
+        (s_off.stats.draft_proposed, s_off.stats.draft_accepted), \
+        f"{family}: sharing changed acceptance " \
+        f"({s_on.stats.acceptance_rate:.3f} vs {s_off.stats.acceptance_rate:.3f})"
+    assert s_on.stats.draft_accepted > 0, \
+        f"{family}: acceptance collapsed under prefix sharing"
+    # pin (1): chunked prefill interleaves mid-prefill lanes with live
+    # spec decode — fused, unfused, and synchronous admission
+    for kw in (dict(spec=SpecConfig(k=3)),
+               dict(spec=SpecConfig(k=3, fused=False)),
+               dict(spec=SpecConfig(k=3), async_admission=False)):
+        ch, sc = share_tokens(family, mesh=mesh, prefill_chunk=page, **kw)
+        assert ch == iso, \
+            f"{family}: spec x chunked x shared diverged ({kw})"
+        assert sc.stats.prefill_chunks > 0
+        assert sc.stats.verify_steps > 0
+        assert (sc.stats.draft_proposed, sc.stats.draft_accepted) == \
+            (s_off.stats.draft_proposed, s_off.stats.draft_accepted), \
+            f"{family}: chunked/shared admission changed acceptance ({kw})"
 
 
 # ---------------------------------------------------------------------------
@@ -601,6 +668,8 @@ def _drive(mode: str, mesh) -> None:
         assert_spec_conformance(mode.split(":", 1)[1], mesh=mesh)
     elif mode.startswith("share:"):
         assert_share_conformance(mode.split(":", 1)[1], mesh=mesh)
+    elif mode.startswith("specshare:"):
+        assert_spec_share_conformance(mode.split(":", 1)[1], mesh=mesh)
     elif mode == "churn":
         for seed in (0, 1, 2):
             run_churn(seed, mesh=mesh)
@@ -653,6 +722,14 @@ if pytest is not None:
     def test_share_conformance_sharded():
         # prefix sharing + CoW + chunked prefill on a page-sharded pool
         _sharded_case("share:transformer")
+
+    @pytest.mark.parametrize("family", FAMILIES)
+    def test_spec_share_conformance_unsharded(family):
+        assert_spec_share_conformance(family, mesh=None)
+
+    def test_spec_share_conformance_sharded():
+        # spec x chunked prefill x prefix sharing on a page-sharded pool
+        _sharded_case("specshare:transformer")
 
     def test_spec_unsupported_family():
         cfg, params = _model("ssm")

@@ -591,3 +591,73 @@ def test_spec_stats_accounting(pruned_model):
     assert st.weight_bytes_per_accepted_token < base.weight_bytes_per_token
     ratio = st.weight_bytes_per_accepted_token / base.weight_bytes_per_token
     assert ratio == pytest.approx(st.verify_steps / base.decode_steps)
+
+
+def test_spec_fused_dispatch_count(pruned_model):
+    """The fused loop's whole point, pinned like the prefill compile-count
+    test: one device dispatch covers ALL of a step's draft/verify cycles
+    (draft -> verify -> accept -> rollback -> history, device-resident),
+    where the unfused chain pays a draft jit, a verify jit and a rollback
+    dispatch per cycle. Tokens must not move between the two."""
+    from repro.serve import SpecConfig
+
+    cfg, _, _, packed = pruned_model
+    prompts = _spec_workload(cfg, np.random.default_rng(67))
+
+    def run(fused):
+        sched = Scheduler(cfg, packed, max_slots=2, max_seq=64,
+                          decode_chunk=4, page=16,
+                          spec=SpecConfig(k=3, fused=fused))
+        reqs = [Request(rid=i, prompt=p,
+                        params=SamplingParams(max_new_tokens=9), arrival=i)
+                for i, p in enumerate(prompts)]
+        sched.run(reqs)
+        d = sched.telemetry.registry.counter("serve_spec_dispatches").value
+        return [r.tokens for r in reqs], d, sched
+
+    toks_f, d_f, s_f = run(True)
+    toks_u, d_u, s_u = run(False)
+    assert toks_f == toks_u
+    assert s_f.stats.verify_steps > 0
+    # fused: one dispatch per decode step, each covering _spec_cycles
+    # verify cycles — strictly under one dispatch per cycle
+    assert d_f * s_f._spec_cycles == s_f.stats.verify_steps
+    assert d_f < s_f.stats.verify_steps
+    # unfused: at least draft + verify dispatches for every cycle
+    assert d_u >= 2 * s_u.stats.verify_steps
+    # the draft wall-time split only exists where draft dispatches exist
+    assert s_f.stats.spec_draft_seconds == 0.0
+    assert s_u.stats.spec_draft_seconds > 0.0
+
+
+def test_async_admission_overlaps_decode(pruned_model):
+    """Double-buffered admission: while a decode chunk is in flight the
+    scheduler prepares the next admission group (host arrays + prefill
+    dispatch) and defers the blocking first-token sync to the next step
+    boundary. Tokens must match synchronous admission exactly, the overlap
+    path must actually engage, and no blocking sync may land while a chunk
+    is in flight (the `serve_inflight_syncs` canary)."""
+    cfg, _, _, packed = pruned_model
+    rng = np.random.default_rng(71)
+    prompts = [rng.integers(0, cfg.vocab, (l,)).astype(np.int32)
+               for l in (8, 5, 11, 6, 9, 7)]
+
+    def run(async_admission):
+        sched = Scheduler(cfg, packed, max_slots=2, max_seq=64,
+                          decode_chunk=4, page=16,
+                          async_admission=async_admission)
+        reqs = [Request(rid=i, prompt=p,
+                        params=SamplingParams(max_new_tokens=8), arrival=i)
+                for i, p in enumerate(prompts)]
+        sched.run(reqs)
+        c = sched.telemetry.registry.counter
+        return ([r.tokens for r in reqs],
+                c("serve_overlap_admissions").value,
+                c("serve_inflight_syncs").value)
+
+    toks_async, overlaps, inflight = run(True)
+    toks_sync, overlaps_sync, _ = run(False)
+    assert toks_async == toks_sync
+    assert overlaps > 0          # the overlap path actually engaged
+    assert inflight == 0         # never blocked on a sync mid-chunk
+    assert overlaps_sync == 0    # the knob really gates the path

@@ -287,9 +287,12 @@ def test_scheduler_instruments_populate(small_model):
 
 def test_spec_loop_instruments_and_rollback_counter(small_model):
     cfg, params = small_model
+    # unfused per-cycle chain: the draft/verify wall-clock split and the
+    # host-side rollback sweep are observable once per verify cycle
     tele = Telemetry(enabled=True)
     sched = Scheduler(cfg, params, max_slots=2, max_seq=64, decode_chunk=4,
-                      spec=SpecConfig(k=2, drafter="ngram"), telemetry=tele)
+                      spec=SpecConfig(k=2, drafter="ngram", fused=False),
+                      telemetry=tele)
     sched.run(_workload(cfg, n=4, max_new=8))
     reg = tele.registry
     draft = reg.histogram("serve_spec_draft_seconds")
@@ -299,6 +302,24 @@ def test_spec_loop_instruments_and_rollback_counter(small_model):
     acc = reg.histogram("serve_spec_window_acceptance")
     assert acc.count > 0
     assert 0.0 <= acc.percentile(99) <= 1.0
+    # fused scan (the default): draft, verify and rollback all live inside
+    # one dispatch, so there is no per-cycle wall-clock split to observe —
+    # instead the dispatch counter covers every cycle and acceptance is
+    # still observed per harvest window
+    tele_f = Telemetry(enabled=True)
+    sched_f = Scheduler(cfg, params, max_slots=2, max_seq=64, decode_chunk=4,
+                        spec=SpecConfig(k=2, drafter="ngram"),
+                        telemetry=tele_f)
+    sched_f.run(_workload(cfg, n=4, max_new=8))
+    reg_f = tele_f.registry
+    assert sched_f.spec.fused
+    assert reg_f.histogram("serve_spec_draft_seconds").count == 0
+    assert reg_f.histogram("serve_spec_verify_seconds").count == 0
+    d = reg_f.counter("serve_spec_dispatches").value
+    assert d > 0 and d * sched_f._spec_cycles == sched_f.stats.verify_steps
+    acc_f = reg_f.histogram("serve_spec_window_acceptance")
+    assert acc_f.count > 0
+    assert 0.0 <= acc_f.percentile(99) <= 1.0
 
 
 def test_kernel_dispatch_counters(small_model):
