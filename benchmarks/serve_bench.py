@@ -31,14 +31,18 @@ Three comparisons on the same jitted decode machinery (serve.Scheduler):
      (PackedHiNM projections) vs the masked-dense fallback
      (``packed="dense"``) — weight bytes per decode token and step time.
 
-  7. telemetry off vs on: the observability layer's decode-throughput
-     cost (best-of-2 per mode, asserted <= 3% when floors are active).
-     The on-run dumps `BENCH_serve_metrics.json` (registry snapshot) and
-     `BENCH_serve_trace.json` (Perfetto-loadable Chrome trace) as CI
-     artifacts. Every row also publishes p50/p99 TTFT, p50/p99 decode
-     step time, a host-overhead fraction, and the raw step-time
-     histogram snapshot that `benchmarks/roofline.py` restores for its
-     measured-vs-analytic attainment column.
+  7. telemetry off vs on vs flight-recorder: the observability layer's
+     decode-throughput cost (best-of-2 per mode, telemetry and recorder
+     each asserted <= 3% when floors are active; both are off by
+     default). The on-run dumps `BENCH_serve_metrics.json` (registry
+     snapshot) and `BENCH_serve_trace.json` (Perfetto-loadable Chrome
+     trace); a recording run dumps `BENCH_serve_flightrec.jsonl` and is
+     replayed in-process — event- and token-identical, the determinism
+     contract — before the record ships as a CI artifact. Every row also
+     publishes p50/p99 TTFT, p50/p99 decode step time, a host-overhead
+     fraction, and the raw step-time histogram snapshot that
+     `benchmarks/roofline.py` restores for its measured-vs-analytic
+     attainment column.
 
   8. traffic replay (``run_replay`` -> `BENCH_serve_replay.json`): a
      Poisson-arrival multi-tenant workload — many short requests sharing
@@ -259,6 +263,14 @@ def _assert_serve_floors(report: dict, base: dict) -> None:
             f"{100 * tele['budget_fraction']:.0f}% budget "
             f"(off={tele['off_decode_tokens_per_second']:.1f} tok/s, "
             f"on={tele['on_decode_tokens_per_second']:.1f} tok/s)")
+    if "flightrec" in report:
+        fr = report["flightrec"]
+        assert fr["overhead_fraction"] <= fr["budget_fraction"], (
+            f"flight-recorder decode throughput cost "
+            f"{100 * fr['overhead_fraction']:.1f}% exceeds the "
+            f"{100 * fr['budget_fraction']:.0f}% budget "
+            f"(off={fr['off_decode_tokens_per_second']:.1f} tok/s, "
+            f"rec={fr['rec_decode_tokens_per_second']:.1f} tok/s)")
 
 
 def _assert_spec_floors(report: dict, base: dict) -> None:
@@ -387,7 +399,10 @@ def run(out_path: str = "BENCH_serve.json") -> dict:
 
     tele_rows = {}
     tele_bundles = []
-    for mode in ("off", "on"):
+    for mode in ("off", "on", "rec"):
+        # "rec": flight recorder on with telemetry off — the recorder is
+        # off by default in production, and this isolates its own decode
+        # cost (one event dict per host decision) under the same budget
         best = None
         for _ in range(2):
             tele = Telemetry(enabled=(mode == "on"))
@@ -396,7 +411,7 @@ def run(out_path: str = "BENCH_serve.json") -> dict:
                                    slots, prompt_len),
                          "continuous", slots, max_seq,
                          page=PAGE, n_pages=N_PAGES, telemetry=tele,
-                         async_admission=False)
+                         async_admission=False, flightrec=(mode == "rec"))
             if best is None or (row["decode_tokens_per_second"]
                                 > best["decode_tokens_per_second"]):
                 best = row
@@ -406,8 +421,28 @@ def run(out_path: str = "BENCH_serve.json") -> dict:
     tele_overhead = max(0.0, 1.0 - (tele_rows["on"]["decode_tokens_per_second"]
                                     / max(tele_rows["off"]["decode_tokens_per_second"],
                                           1e-9)))
+    rec_overhead = max(0.0, 1.0 - (tele_rows["rec"]["decode_tokens_per_second"]
+                                   / max(tele_rows["off"]["decode_tokens_per_second"],
+                                         1e-9)))
     tele_bundles[0].dump_metrics("BENCH_serve_metrics.json")
     tele_bundles[0].dump_trace("BENCH_serve_trace.json")
+
+    # record + replay: the recorder's determinism contract on the bench
+    # workload — rebuilding the workload from the record and re-driving a
+    # fresh scheduler must reproduce every event and every token; the
+    # record ships as a CI artifact next to the metrics/trace dumps
+    from repro.serve import Scheduler
+    from repro.serve import replay as replay_record
+
+    rec_kw = dict(max_slots=slots, max_seq=max_seq, decode_chunk=4,
+                  policy="continuous", page=PAGE, n_pages=N_PAGES,
+                  flightrec=True)
+    rec_sched = Scheduler(cfg, packed, **rec_kw)
+    rec_sched.run(_workload(cfg, np.random.default_rng(0), n_requests,
+                            slots, prompt_len))
+    rec_sched.flight.dump("BENCH_serve_flightrec.jsonl")
+    replay_record("BENCH_serve_flightrec.jsonl",
+                  Scheduler(cfg, packed, **rec_kw)).assert_equal()
 
     compiles = _compile_counts(cfg, packed, np.random.default_rng(1), 8, max_seq)
     assert compiles["bucketed"] <= 4, (
@@ -493,6 +528,17 @@ def run(out_path: str = "BENCH_serve.json") -> dict:
             "artifacts": ["BENCH_serve_metrics.json",
                           "BENCH_serve_trace.json"],
         },
+        "flightrec": {
+            "off_decode_tokens_per_second":
+                tele_rows["off"]["decode_tokens_per_second"],
+            "rec_decode_tokens_per_second":
+                tele_rows["rec"]["decode_tokens_per_second"],
+            "overhead_fraction": rec_overhead,
+            "budget_fraction": 0.03,
+            "events": rec_sched.flight.seq,
+            "replay_ok": True,  # assert_equal above would have raised
+            "artifacts": ["BENCH_serve_flightrec.jsonl"],
+        },
     }
     with open(out_path, "w") as f:
         json.dump(report, f, indent=2)
@@ -538,6 +584,11 @@ def run(out_path: str = "BENCH_serve.json") -> dict:
          f"off_tok/s={tele_rows['off']['decode_tokens_per_second']:.1f} "
          f"on_tok/s={tele_rows['on']['decode_tokens_per_second']:.1f} "
          f"overhead={tele_overhead:.4f} budget=0.03")
+    emit("serve_flightrec", 0.0,
+         f"off_tok/s={tele_rows['off']['decode_tokens_per_second']:.1f} "
+         f"rec_tok/s={tele_rows['rec']['decode_tokens_per_second']:.1f} "
+         f"overhead={rec_overhead:.4f} budget=0.03 "
+         f"events={rec_sched.flight.seq} replay=ok")
     if base is not None:
         _assert_serve_floors(report, base)
     return report

@@ -23,6 +23,14 @@ histograms, kernel dispatch decisions included) as JSON; `--trace-out
 PATH` writes the request-lifecycle spans as Chrome trace-event JSON —
 open it at https://ui.perfetto.dev to see queued/prefill/decode phases
 per request alongside the scheduler's dispatch timeline.
+
+Flight recorder: `--record OUT.jsonl` captures every scheduler decision
+(admissions, page maps, spec windows, kernel dispatch) as a JSON-lines
+record; `--replay IN.jsonl` rebuilds the workload from such a record and
+re-drives a fresh scheduler, asserting event-for-event and
+token-for-token identity — run it with the SAME scheduler flags the
+record was captured with (a config mismatch surfaces as the first
+diverging event).
 """
 import argparse
 import os
@@ -86,6 +94,13 @@ def main():
     ap.add_argument("--trace-out", default=None, metavar="PATH",
                     help="serve with telemetry on and dump the Chrome "
                          "trace-event JSON here (open in Perfetto)")
+    ap.add_argument("--record", default=None, metavar="OUT.jsonl",
+                    help="serve with the flight recorder on and dump the "
+                         "decision record here (JSON lines)")
+    ap.add_argument("--replay", default=None, metavar="IN.jsonl",
+                    help="rebuild the workload from a recorded run and "
+                         "re-drive it, asserting event- and token-identical "
+                         "behaviour (use the same scheduler flags)")
     args = ap.parse_args()
 
     cfg = load_arch("qwen2_0_5b").reduced(n_layers=4, d_model=256, n_heads=4,
@@ -110,7 +125,18 @@ def main():
         telemetry = Telemetry(enabled=True)
     sched = Scheduler(cfg, packed, max_slots=args.slots, max_seq=max_seq,
                       decode_chunk=args.decode_chunk, telemetry=telemetry,
-                      page=args.page, prefill_chunk=args.prefill_chunk)
+                      page=args.page, prefill_chunk=args.prefill_chunk,
+                      flightrec=bool(args.record or args.replay))
+
+    if args.replay:
+        from repro.serve import replay as replay_record
+
+        rep = replay_record(args.replay, sched)
+        print(rep.render())
+        rep.assert_equal()
+        print("replay OK: event- and token-identical with the record")
+        return
+
     done = sched.run(workload)
     st = sched.stats
     pb = st.packed_param_bytes
@@ -150,6 +176,11 @@ def main():
             telemetry.dump_trace(args.trace_out)
             print(f"chrome trace -> {args.trace_out} "
                   f"(open at https://ui.perfetto.dev)")
+
+    if args.record:
+        sched.flight.dump(args.record)
+        print(f"flight record -> {args.record} "
+              f"({len(sched.flight)} events; replay with --replay)")
 
     static = Scheduler(cfg, packed, max_slots=args.slots, max_seq=max_seq,
                        decode_chunk=args.decode_chunk, policy="static")

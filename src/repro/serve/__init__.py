@@ -1,5 +1,7 @@
 from repro.serve import sampler
 from repro.serve.engine import ServeEngine
+from repro.serve.flightrec import (FlightEvent, FlightRecorder, diff_records,
+                                   load_jsonl, replay, resolve_flightrec)
 from repro.serve.kv import SlotKVCache
 from repro.serve.prefix import PrefixIndex, PrefixMatch
 from repro.serve.request import Request, RequestState, SamplingParams, ServeStats
@@ -10,6 +12,8 @@ from repro.serve.telemetry import (MetricsRegistry, Telemetry, TraceRecorder,
 
 __all__ = [
     "sampler",
+    "FlightEvent",
+    "FlightRecorder",
     "MetricsRegistry",
     "Telemetry",
     "TraceRecorder",
@@ -26,5 +30,9 @@ __all__ = [
     "ServeStats",
     "SlotKVCache",
     "SpecConfig",
+    "diff_records",
+    "load_jsonl",
     "param_bytes",
+    "replay",
+    "resolve_flightrec",
 ]

@@ -73,7 +73,14 @@ from repro.models import paging, zoo
 class SlotKVCache:
     def __init__(self, cfg, n_slots: int, max_seq: int, dtype=None,
                  page: int | None = None, n_pages: int | str | None = None,
-                 mesh=None, metrics=None, metrics_labels=None, **cache_kw):
+                 mesh=None, metrics=None, metrics_labels=None, flight=None,
+                 flight_label: str | None = None, **cache_kw):
+        # flight recorder (serve/flightrec): every host-side page decision
+        # — acquire/insert/map/release, ref/deref with its sentinel sweep —
+        # lands as a causally-keyed event; `flight_label` distinguishes a
+        # draft pool's stream from the target pool's. None = off.
+        self._flight = flight
+        self._flight_pool = flight_label
         self.cfg = cfg
         self.n_slots = n_slots
         self.max_seq = max_seq
@@ -182,6 +189,12 @@ class SlotKVCache:
                 self._m_cow = metrics.counter("kv_cow_copies", labels=lb)
             self._observe_occupancy()
 
+    def _emit(self, kind: str, **data) -> None:
+        if self._flight is not None:
+            if self._flight_pool is not None:
+                data["pool"] = self._flight_pool
+            self._flight.emit(kind, **data)
+
     def _observe_occupancy(self) -> None:
         if self._m_slots is None:
             return
@@ -238,6 +251,8 @@ class SlotKVCache:
         for p in pages:
             assert self._page_ref[p] >= 1, f"page {p} is free, cannot share"
             self._page_ref[p] += 1
+        if pages:
+            self._emit("kv_ref", pages=[int(p) for p in pages])
 
     def deref_pages(self, pages) -> int:
         """Drop one reference per page.  Pages whose LAST reference drops
@@ -250,6 +265,11 @@ class SlotKVCache:
             self._page_ref[p] -= 1
             if self._page_ref[p] == 0:
                 freed.append(p)
+        if pages:
+            # `freed` is exactly the sentinel-sweep set: pages whose LAST
+            # reference just dropped
+            self._emit("kv_deref", pages=[int(p) for p in pages],
+                       freed=[int(p) for p in freed])
         if freed:
             ids = np.full((self.n_bt,), paging.SCRATCH_PAGE, np.int32)
             ids[: len(freed)] = freed
@@ -385,6 +405,7 @@ class SlotKVCache:
         if not self._free:
             raise RuntimeError("no free slots")
         slot = self._free.pop(0)
+        self._emit("kv_acquire", slot=slot)
         self._observe_occupancy()
         return slot
 
@@ -412,6 +433,9 @@ class SlotKVCache:
             self._slot_pages[slot] = pages
         else:
             self.cache = self._write_row(self.cache, cache, slot, row)
+        self._emit("kv_insert", slot=slot, rows=length, reserve=reserve,
+                   pages=([int(p) for p in self._slot_pages[slot]]
+                          if self.paged else []))
         # row budget the request may legally grow to; a windowed ring wraps
         # within its pages, so `reserve` (not n_alloc * page) is the bound
         self._slot_cap[slot] = reserve
@@ -462,6 +486,10 @@ class SlotKVCache:
         self._slot_pages[slot] = pages
         self._slot_cap[slot] = reserve
         self.slot_len[slot] = mapped_rows
+        self._emit("kv_map", slot=slot, shared=[int(p) for p in shared_pages],
+                   fresh=[int(p) for p in fresh],
+                   cow_src=None if cow_src is None else int(cow_src),
+                   cow_rows=int(cow_rows), rows=mapped_rows, reserve=reserve)
         self._observe_occupancy()
         return pages
 
@@ -509,8 +537,12 @@ class SlotKVCache:
             self.cache = self._release_paged(
                 self.cache, slot, jnp.asarray(ids))
             self._push_pages(freed)
+            self._emit("kv_release", slot=slot,
+                       pages=[int(p) for p in pages],
+                       freed=[int(p) for p in freed])
         else:
             self.cache = self._write_row(self.cache, self.template(), slot, 0)
+            self._emit("kv_release", slot=slot, pages=[], freed=[])
         self.slot_len[slot] = 0
         self._slot_cap[slot] = 0
         self._free.append(slot)

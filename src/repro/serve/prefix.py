@@ -57,12 +57,19 @@ class _Node:
 
 
 class PrefixIndex:
-    def __init__(self, page: int):
+    def __init__(self, page: int, flight=None):
         self.page = page
         self._root = _Node((), -1, None)
         self._clock = 0
         self.n_pages = 0            # nodes (= index-referenced pages)
         self.evictions = 0          # pages dropped under free-list pressure
+        # flight recorder (serve/flightrec): trie match lengths, retention
+        # registrations and evict/shield decisions as typed events
+        self._flight = flight
+
+    def _emit(self, kind: str, **data) -> None:
+        if self._flight is not None:
+            self._flight.emit(kind, **data)
 
     def _tick(self) -> int:
         self._clock += 1
@@ -101,6 +108,12 @@ class PrefixIndex:
             if donor is not None:
                 # touching the donor keeps a hot divergence point resident
                 donor.last_used = self._tick()
+        if ids or cow_rows:
+            # trie walk outcome: how many full pages / CoW rows this
+            # prompt can reuse (misses stay silent — they dominate cold
+            # workloads and carry no decision)
+            self._emit("prefix_match", pages=len(ids), rows=i,
+                       cow_rows=cow_rows)
         return PrefixMatch(ids, i, cow_src, cow_rows)
 
     # -- registration --------------------------------------------------------
@@ -115,6 +128,7 @@ class PrefixIndex:
         pages newly indexed."""
         page = self.page
         node, new = self._root, 0
+        new_ids = []
         for p in range(len(tokens) // page):
             block = tuple(int(t) for t in tokens[p * page:(p + 1) * page])
             child = node.children.get(block)
@@ -124,8 +138,12 @@ class PrefixIndex:
                 kv.ref_pages([child.page_id])
                 self.n_pages += 1
                 new += 1
+                new_ids.append(child.page_id)
             child.last_used = self._tick()
             node = child
+        if new:
+            # retention refs taken: these pages now outlive their slot
+            self._emit("prefix_register", pages=new_ids, total=self.n_pages)
         return new
 
     # -- eviction ------------------------------------------------------------
@@ -158,13 +176,24 @@ class PrefixIndex:
         actually freed."""
         protect = set(protect)
         freed = 0
+        dropped: list[int] = []
+        shielded: list[int] = []
         while freed < n_pages:
-            cands = [n for n in self._leaves()
+            leaves = self._leaves()
+            cands = [n for n in leaves
                      if kv.page_ref(n.page_id) == 1
                      and n.page_id not in protect]
             if not cands:
+                # leaves that WOULD have been evictable but for the shield
+                shielded = sorted(n.page_id for n in leaves
+                                  if kv.page_ref(n.page_id) == 1
+                                  and n.page_id in protect)
                 break
-            freed += self._drop(min(cands, key=lambda n: n.last_used), kv)
+            victim = min(cands, key=lambda n: n.last_used)
+            dropped.append(victim.page_id)
+            freed += self._drop(victim, kv)
+        self._emit("prefix_evict", need=n_pages, freed=freed,
+                   dropped=dropped, shielded=shielded)
         return freed
 
     def clear(self, kv) -> int:

@@ -68,6 +68,7 @@ from repro.core.types import PackedHiNM
 from repro.models import zoo
 from repro.serve import sampler
 from repro.serve import spec as spec_mod
+from repro.serve.flightrec import resolve_flightrec
 from repro.serve.kv import SlotKVCache
 from repro.serve.prefix import PrefixIndex
 from repro.serve.request import Request, RequestState, SamplingParams, ServeStats
@@ -118,7 +119,8 @@ class Scheduler:
                  packed: bool | str = "auto", telemetry=None,
                  prefix_share: bool | str = "auto",
                  prefill_chunk: int | None = None,
-                 async_admission: bool | str = "auto"):
+                 async_admission: bool | str = "auto",
+                 flightrec=None):
         if policy not in ("continuous", "static"):
             raise ValueError(f"unknown admission policy {policy!r}")
         self.cfg = cfg
@@ -129,6 +131,16 @@ class Scheduler:
         # are free per step; `enabled` gates the wall-clock histograms
         # and request-lifecycle span recording on the hot path.
         self.telemetry = resolve_telemetry(telemetry)
+        # flight recorder (serve/flightrec): the structured DECISION log
+        # telemetry aggregates away — every admission, page, prefix, spec
+        # and dispatch decision as a causally-keyed event stream that can
+        # be dumped, replayed and diffed.  Off by default (None/False);
+        # True builds a fresh recorder; an instance is shared as-is.
+        # Chrome-trace instant bridging only engages when telemetry spans
+        # are being recorded anyway — a bare recorder stays trace-free.
+        self.flight = resolve_flightrec(
+            flightrec,
+            tracer=self.telemetry.tracer if self.telemetry.enabled else None)
         m = self.telemetry.registry
         self._m_prefill_traces = m.counter("serve_prefill_traces")
         self._m_admit_wait = m.histogram("serve_admission_wait_seconds")
@@ -238,11 +250,14 @@ class Scheduler:
                 self.draft_kv = SlotKVCache(d.cfg, max_slots, max_seq,
                                             mesh=mesh,
                                             metrics=self.telemetry.registry,
-                                            metrics_labels={"pool": "draft"})
+                                            metrics_labels={"pool": "draft"},
+                                            flight=self.flight,
+                                            flight_label="draft")
 
         self.kv = SlotKVCache(cfg, max_slots, max_seq, page=page,
                               n_pages=n_pages, mesh=mesh,
                               metrics=self.telemetry.registry,
+                              flight=self.flight,
                               **(cache_kw or {}))
         # paged-attention kernel routing, resolved once per scheduler: the
         # family must expose the shared pool layout, and a page-sharded
@@ -264,6 +279,11 @@ class Scheduler:
             if KNOBS.paged_attn != "off":  # an actual downgrade, not a knob
                 m.counter("serve_paged_attn_deferred",
                           labels={"reason": defer}).inc()
+        if self.flight is not None:
+            # the kernel-dispatch decision, attributable per scheduler:
+            # what was asked for, what actually runs, and why it deferred
+            self.flight.emit("dispatch", requested=KNOBS.paged_attn,
+                             backend=self.paged_attn, defer=defer)
         # enc-dec pools cache the encoder output at fixed width t_enc
         # (pass cache_kw={"t_enc": ...} to right-size it for the workload)
         self._t_enc = (cache_kw or {}).get("t_enc") or max_seq
@@ -296,7 +316,8 @@ class Scheduler:
                     f"policy={policy!r})")
         self.prefix_share = bool(prefix_share)
         self.prefill_chunk = prefill_chunk
-        self.prefix = PrefixIndex(self.kv.page) if self.prefix_share else None
+        self.prefix = (PrefixIndex(self.kv.page, flight=self.flight)
+                       if self.prefix_share else None)
 
         # --- async (double-buffered) admission ---
         # While a decode chunk is in flight on device, the host prepares
@@ -335,6 +356,25 @@ class Scheduler:
         self._reset_state(rng_seed)
         pb, db = param_bytes(params)
         self.stats = ServeStats(0.0, 0.0, 0, pb, db)
+        if self.flight is not None:
+            # configuration fingerprint: replaying a record on a scheduler
+            # built differently diverges HERE, as the first event, instead
+            # of surfacing as a deep token mystery
+            self.flight.emit(
+                "config", family=cfg.family, vocab=int(cfg.vocab),
+                max_slots=max_slots, max_seq=max_seq,
+                decode_chunk=decode_chunk, policy=policy,
+                page=self.kv.page if self.kv.paged else None,
+                n_pages=self.kv.n_pages if self.kv.paged else None,
+                bucket=self.bucket, packed=self.packed_mode,
+                paged_attn=self.paged_attn, prefix_share=self.prefix_share,
+                prefill_chunk=self.prefill_chunk,
+                async_admission=self.async_admission, rng_seed=rng_seed,
+                sharded=self.mesh is not None,
+                spec=None if spec is None else {
+                    "k": spec.k, "fused": bool(spec.fused),
+                    "cycles": self._spec_cycles,
+                    "drafter": self.drafter.kind})
 
     # -- jitted kernels -----------------------------------------------------
 
@@ -694,7 +734,7 @@ class Scheduler:
         self._pending_pages = 0
         self._chunk_in_flight = False
         if self.prefix is not None:
-            self.prefix = PrefixIndex(self.kv.page)
+            self.prefix = PrefixIndex(self.kv.page, flight=self.flight)
         self.kv.reset_all()
         if self.draft_kv is not None:
             self.draft_kv.reset_all()
@@ -780,6 +820,18 @@ class Scheduler:
         req.state = RequestState.QUEUED
         req.submit_time = time.perf_counter()
         self._queue.append(req)
+        if self.flight is not None:
+            # the full admission schedule rides in this one event: prompt,
+            # sampling params, seed, arrival — everything `flightrec.replay`
+            # needs to rebuild the workload
+            p = req.params
+            self.flight.emit(
+                "submit", rid=req.rid,
+                prompt=[int(t) for t in req.prompt], arrival=req.arrival,
+                max_new=p.max_new_tokens, temperature=float(p.temperature),
+                top_k=int(p.top_k), top_p=float(p.top_p), eos=p.eos_id,
+                seed=p.seed, spec_k=p.spec_k, spec_accept=p.spec_accept,
+                embeds=req.embeds is not None)
 
     def _eff_eos(self, req: Request) -> int:
         if req.params.eos_id is not None:
@@ -805,9 +857,22 @@ class Scheduler:
             self.stats.finished_at_eos += 1
         self.stats.observe_finish(req)
         if self.telemetry.enabled and req.first_token_time:
-            self.telemetry.tracer.request_span(
-                req, "decode", req.first_token_time, req.finish_time,
-                tokens=req.n_generated, reason=req.finish_reason)
+            # the decode span was opened when the lane armed (so abandoned
+            # requests still export a valid, auto-closed span); requests
+            # that finished at their first token never armed one
+            open_span = next((s for s in reversed(req.spans)
+                              if s.name == "decode" and s.t1 is None), None)
+            if open_span is not None:
+                self.telemetry.tracer.end(
+                    open_span, req.finish_time, tokens=req.n_generated,
+                    reason=req.finish_reason)
+            else:
+                self.telemetry.tracer.request_span(
+                    req, "decode", req.first_token_time, req.finish_time,
+                    tokens=req.n_generated, reason=req.finish_reason)
+        if self.flight is not None:
+            self.flight.emit("finish", rid=req.rid, reason=req.finish_reason,
+                             n=req.n_generated, tokens=list(req.tokens))
         finished.append(req)
 
     def _extension_plan(self, req: Request):
@@ -987,6 +1052,15 @@ class Scheduler:
                 self._m_admit_wait.observe(req.admit_time - req.submit_time)
                 tr.request_span(req, "queued", req.submit_time, req.admit_time)
                 tr.request_span(req, f"prefill[b{blen}]", t0, t1)
+        if self.flight is not None:
+            # one event per admission group: membership, bucket geometry,
+            # and whether the prepare phase overlapped an in-flight chunk
+            # (its `commit` events then land at the NEXT step's start —
+            # the async prepare/commit pairing, visible in the stream)
+            self.flight.emit(
+                "admit", group=[r.rid for r in group],
+                bucket=int(tokens.shape[1]), width=k_b,
+                overlap=bool(self.async_admission and self._chunk_in_flight))
         rec = (group, first, cache_k, draft_cache_k)
         if self.async_admission and self._chunk_in_flight:
             # overlapped: the prepare window ran UNDER the in-flight decode
@@ -1035,6 +1109,9 @@ class Scheduler:
                 # finished at its first token: never touch the slot pool —
                 # acquiring a slot just to release it would dispatch a full
                 # template reset into a slot that was never written
+                if self.flight is not None:
+                    self.flight.emit("commit", rid=req.rid, slot=None,
+                                     first=first_i, finished=True)
                 self._finish(req, finished)
                 continue
             slot = self.kv.acquire()
@@ -1069,6 +1146,14 @@ class Scheduler:
             req.state = RequestState.DECODING
             req.slot = slot
             self._running[slot] = req
+            if self.flight is not None:
+                self.flight.emit("commit", rid=req.rid, slot=slot,
+                                 first=first_i, finished=False)
+            if self.telemetry.enabled:
+                # open-span decode lifecycle: closed by `_finish`, or
+                # auto-closed at export if the request is abandoned
+                req.spans.append(self.telemetry.tracer.begin(
+                    f"req{req.rid}", "decode", t0=now, rid=req.rid))
         # the whole commit — sync, pool inserts, slot arming — is admission
         # work; leaving the arming loop outside the window misreports it as
         # host gap (it dominated host_overhead_fraction at bench scale)
@@ -1105,6 +1190,15 @@ class Scheduler:
             self._m_hit_tokens.inc(hit)
         req.slot = slot
         self._prefilling[slot] = req
+        if self.flight is not None:
+            # the prefix decision this admission rode: which pages were
+            # mapped by reference, which page was CoW-copied, how many
+            # prompt rows never re-prefill
+            self.flight.emit(
+                "ext_admit", rid=req.rid, slot=slot,
+                shared=[int(p) for p in shared],
+                cow_src=None if m is None else m.cow_src,
+                cow_rows=0 if m is None else m.cow_rows, hit=hit)
         if self.telemetry.enabled:
             self._m_admit_wait.observe(req.admit_time - req.submit_time)
             self.telemetry.tracer.request_span(
@@ -1173,6 +1267,10 @@ class Scheduler:
             self.stats.prefill_chunks += 1
             self.stats.prefill_rows += width
             self.kv.slot_len[slot] += width
+            if self.flight is not None:
+                self.flight.emit("chunk", rid=req.rid, slot=slot,
+                                 width=width, cursor=req.prefill_cursor,
+                                 last=last)
             if self.telemetry.enabled:
                 self.telemetry.tracer.request_span(
                     req, f"prefill_chunk[b{w_b}]", t0, now)
@@ -1204,6 +1302,9 @@ class Scheduler:
             # finished at its first token: unlike the classic path this
             # slot exists (pages were mapped before prefill), so release
             # it — registered pages survive via the index's references
+            if self.flight is not None:
+                self.flight.emit("graduate", rid=req.rid, slot=slot,
+                                 first=first_i, finished=True)
             self.kv.release(slot)
             if self.draft_kv is not None:
                 self.draft_kv.release(slot)
@@ -1238,6 +1339,13 @@ class Scheduler:
         self._keff_host[slot] = keff
         req.state = RequestState.DECODING
         self._running[slot] = req
+        if self.flight is not None:
+            self.flight.emit("graduate", rid=req.rid, slot=slot,
+                             first=first_i, finished=False)
+        if self.telemetry.enabled:
+            # open-span decode lifecycle, same contract as `_commit_group`
+            req.spans.append(self.telemetry.tracer.begin(
+                f"req{req.rid}", "decode", t0=now, rid=req.rid))
 
     def _overlap_admit(self, finished: list[Request]) -> None:
         """Double-buffered admission: called between a decode dispatch and
@@ -1322,6 +1430,8 @@ class Scheduler:
                 f"slot {slot}: {self.kv.slot_len[slot]} cache rows exceed "
                 f"the {cap}-row reservation — accounting drift would "
                 f"corrupt a neighbor page")
+            if self.flight is not None and new:
+                self.flight.emit("emit", rid=req.rid, slot=slot, tokens=new)
             if not active_np[slot]:
                 self._finish(req, finished)
                 self._release_slot(slot)
@@ -1474,9 +1584,17 @@ class Scheduler:
             assert self.kv.slot_len[slot] <= cap, (
                 f"slot {slot}: {self.kv.slot_len[slot]} cache rows exceed "
                 f"the {cap}-row reservation — speculative rollback drifted")
+            if self.flight is not None and (new or proposed):
+                # per-window draft accounting next to the tokens it earned
+                self.flight.emit("emit", rid=req.rid, slot=slot, tokens=new,
+                                 proposed=proposed, accepted=accepted)
             if not active_np[slot]:
                 self._finish(req, finished)
                 self._release_slot(slot)
+        if self.flight is not None:
+            self.flight.emit("spec_window", cycles=cycles,
+                             proposed=self.stats.draft_proposed - dp0,
+                             accepted=self.stats.draft_accepted - da0)
         if tele:
             # per-window acceptance: this harvest's accepted/proposed ratio
             # (a drifting distribution here flags drafter quality decaying
@@ -1496,7 +1614,21 @@ class Scheduler:
         order double-buffers host work against device decode: groups
         whose prefill overlapped the PREVIOUS chunk commit first (their
         one sync — the prefill long finished), then the decode chunk
-        dispatches and `_admit` prepares the NEXT group while it runs."""
+        dispatches and `_admit` prepares the NEXT group while it runs.
+
+        Any exception escaping a step triggers the flight recorder's
+        crash dump (pool state, block tables, refcounts, in-flight
+        requests, event tail) and closes every open trace span, so the
+        observability artifacts stay loadable exactly when they matter."""
+        try:
+            return self._step_inner()
+        except Exception as exc:
+            if self.flight is not None:
+                self.flight.crash_dump(self, exc)
+            self.telemetry.tracer.finalize()
+            raise
+
+    def _step_inner(self) -> list[Request]:
         finished: list[Request] = []
         if self.async_admission:
             self._commit_admissions(finished)

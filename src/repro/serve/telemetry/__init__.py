@@ -24,13 +24,15 @@ from __future__ import annotations
 
 from repro.serve.telemetry.metrics import (GLOBAL, Counter, Gauge, Histogram,
                                            MetricsRegistry, reset_global)
-from repro.serve.telemetry.tracing import SpanEvent, TraceRecorder
+from repro.serve.telemetry.tracing import (InstantEvent, SpanEvent,
+                                           TraceRecorder)
 
 __all__ = [
     "GLOBAL",
     "Counter",
     "Gauge",
     "Histogram",
+    "InstantEvent",
     "MetricsRegistry",
     "SpanEvent",
     "Telemetry",

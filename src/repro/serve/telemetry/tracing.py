@@ -28,23 +28,42 @@ import time
 
 @dataclasses.dataclass
 class SpanEvent:
-    """One closed host span: [t0, t1] in perf_counter seconds."""
+    """One host span: [t0, t1] in perf_counter seconds.  `t1 is None`
+    marks a span still open (`TraceRecorder.begin`); export auto-closes
+    open spans so an abandoned request or a mid-step exception can never
+    leave an unmatched "B" event in the Chrome trace."""
 
     name: str
     t0: float
-    t1: float
+    t1: float | None
     track: str = "scheduler"
     args: dict = dataclasses.field(default_factory=dict)
 
     @property
+    def open(self) -> bool:
+        return self.t1 is None
+
+    @property
     def duration(self) -> float:
-        return self.t1 - self.t0
+        return (self.t1 if self.t1 is not None else self.t0) - self.t0
+
+
+@dataclasses.dataclass
+class InstantEvent:
+    """One zero-duration marker (Chrome trace "i" phase) — the flight
+    recorder's per-decision bridge onto the span timeline."""
+
+    name: str
+    t: float
+    track: str = "flightrec"
+    args: dict = dataclasses.field(default_factory=dict)
 
 
 class TraceRecorder:
     def __init__(self, annotate: bool = False):
         self.epoch = time.perf_counter()
         self.events: list[SpanEvent] = []
+        self.instants: list[InstantEvent] = []
         self.annotate = annotate
         self._tids: dict[str, int] = {}
 
@@ -52,6 +71,42 @@ class TraceRecorder:
              **args) -> SpanEvent:
         ev = SpanEvent(name, t0, t1, track=track, args=args)
         self.events.append(ev)
+        return ev
+
+    def begin(self, track: str, name: str, t0: float | None = None,
+              **args) -> SpanEvent:
+        """Open a span now; close it later with `end` (or let export /
+        `finalize` close it).  For lifecycles that may never reach their
+        natural end — a request abandoned mid-decode, a scheduler that
+        raises — so the trace stays structurally valid either way."""
+        ev = SpanEvent(name, time.perf_counter() if t0 is None else t0,
+                       None, track=track, args=args)
+        self.events.append(ev)
+        return ev
+
+    def end(self, ev: SpanEvent, t1: float | None = None, **args) -> SpanEvent:
+        ev.t1 = time.perf_counter() if t1 is None else t1
+        ev.args.update(args)
+        return ev
+
+    def finalize(self, t: float | None = None) -> int:
+        """Close every open span (at `t`, default now). Returns how many
+        were open — the scheduler calls this from its exception path so a
+        crash leaves a loadable trace, and export calls it implicitly."""
+        t = time.perf_counter() if t is None else t
+        n = 0
+        for ev in self.events:
+            if ev.t1 is None:
+                ev.t1 = max(ev.t0, t)
+                ev.args.setdefault("auto_closed", True)
+                n += 1
+        return n
+
+    def instant(self, track: str, name: str, t: float | None = None,
+                **args) -> InstantEvent:
+        ev = InstantEvent(name, time.perf_counter() if t is None else t,
+                          track=track, args=args)
+        self.instants.append(ev)
         return ev
 
     def request_span(self, req, name: str, t0: float, t1: float,
@@ -96,18 +151,30 @@ class TraceRecorder:
         recorder epoch, one named thread per track.  Events are sorted by
         (ts, E-before-B) so back-to-back spans whose edges share a
         timestamp still nest; negative-duration spans are clamped to
-        zero-width rather than emitting an unmatched pair.
+        zero-width rather than emitting an unmatched pair, and spans still
+        open at export (`begin` without `end`) are auto-closed first —
+        the trace parses even when a request was abandoned mid-decode.
+        Flight-recorder instants ride along as "i" events.
         """
+        self.finalize()
         raw = []
         for ev in self.events:
             tid = self._tid(ev.track)
             ts0 = max(0.0, (ev.t0 - self.epoch) * 1e6)
-            ts1 = max(ts0, (ev.t1 - self.epoch) * 1e6)
+            # a zero-width pair would sort its E before its own B under
+            # the E-before-B tiebreak below; 1ns of width keeps the pair
+            # matched (auto-closed spans clamp to their open time)
+            ts1 = max(ts0 + 1e-3, (ev.t1 - self.epoch) * 1e6)
             args = {k: v for k, v in ev.args.items()}
             raw.append({"name": ev.name, "cat": "serve", "ph": "B",
                         "ts": ts0, "pid": 0, "tid": tid, "args": args})
             raw.append({"name": ev.name, "cat": "serve", "ph": "E",
                         "ts": ts1, "pid": 0, "tid": tid})
+        for iv in self.instants:
+            raw.append({"name": iv.name, "cat": "flightrec", "ph": "i",
+                        "ts": max(0.0, (iv.t - self.epoch) * 1e6), "pid": 0,
+                        "tid": self._tid(iv.track), "s": "t",
+                        "args": _json_args(iv.args)})
         raw.sort(key=lambda e: (e["ts"], 0 if e["ph"] == "E" else 1))
         meta = [{"name": "process_name", "ph": "M", "pid": 0, "tid": 0,
                  "args": {"name": "repro.serve"}}]
@@ -119,3 +186,19 @@ class TraceRecorder:
     def dump(self, path: str) -> None:
         with open(path, "w") as f:
             json.dump(self.chrome_trace(), f)
+
+
+def _json_args(args: dict) -> dict:
+    """Instant-event args must survive json.dump (flight payloads carry
+    numpy scalars occasionally); anything exotic falls back to str."""
+    def f(v):
+        if isinstance(v, (list, tuple)):
+            return [f(x) for x in v]
+        if isinstance(v, (bool, int, float, str)) or v is None:
+            return v
+        try:
+            return v.item()  # numpy scalar
+        except AttributeError:
+            return str(v)
+
+    return {k: f(v) for k, v in args.items()}

@@ -134,7 +134,8 @@ def scheduler_tokens(family, layout, mesh=None, n_pages="auto",
     else:
         kw.update(page=None, bucket=False)
     sched = Scheduler(cfg, params, max_slots=max_slots, max_seq=MAX_SEQ,
-                      decode_chunk=decode_chunk, mesh=mesh, spec=spec, **kw)
+                      decode_chunk=decode_chunk, mesh=mesh, spec=spec,
+                      flightrec=True, **kw)
     reqs = [Request(rid=i, prompt=p, params=SamplingParams(max_new_tokens=c["max_new"]),
                     embeds=None if embeds is None else embeds[i], arrival=i)
             for i, p in enumerate(prompts)]
@@ -165,6 +166,48 @@ def _mesh_size(mesh):
     return int(np.prod(list(mesh.shape.values()))) if mesh is not None else 1
 
 
+# ---------------------------------------------------------------------------
+# flight-record triage: a conformance failure is a determinism failure, so
+# every scheduler here records its decision stream (serve/flightrec) and a
+# token mismatch dumps the records plus the first diverging event instead
+# of a bare token diff
+# ---------------------------------------------------------------------------
+
+TRIAGE_DIR = os.environ.get("REPRO_TRIAGE_DIR", os.path.join(REPO, "triage"))
+
+
+def _fail_with_triage(label, msg, **scheds):
+    """Dump each named scheduler's flight record to TRIAGE_DIR as JSONL;
+    with two records, also write a rendered first-divergence report.  The
+    paired runs differ in configuration by design (paged vs stripe, kernel
+    vs gather), so the construction-time `config`/`dispatch` events are
+    excluded from the diff — the first *workload* decision that diverged
+    is the triage lead.  Raises AssertionError naming that event."""
+    from repro.serve import diff_records
+
+    os.makedirs(TRIAGE_DIR, exist_ok=True)
+    safe = re.sub(r"[^A-Za-z0-9_.-]", "_", label)
+    recs = {}
+    for name, s in scheds.items():
+        if s is not None and getattr(s, "flight", None) is not None:
+            s.flight.dump(os.path.join(TRIAGE_DIR, f"{safe}.{name}.jsonl"))
+            recs[name] = [e for e in s.flight.events
+                          if e.kind not in ("config", "dispatch")]
+    lines = [msg, f"flight records {sorted(recs)} -> {TRIAGE_DIR}"]
+    if len(recs) >= 2:
+        (na, a), (nb, b) = list(recs.items())[:2]
+        rep = diff_records(a, b)
+        path = os.path.join(TRIAGE_DIR, f"{safe}.diff.txt")
+        with open(path, "w") as f:
+            f.write(f"a = {na}, b = {nb} "
+                    "(config/dispatch events excluded: the runs differ "
+                    "there by design)\n" + rep.render() + "\n")
+        if rep.first is not None:
+            lines.append("first diverging event: " + rep.first.describe())
+        lines.append(f"triage report: {path}")
+    raise AssertionError("\n".join(lines))
+
+
 def assert_conformance(family, mesh=None):
     """paged == stripe == isolated, on `mesh` (None = unsharded)."""
     iso = isolated_tokens(family)
@@ -174,8 +217,14 @@ def assert_conformance(family, mesh=None):
     # bucketed admission engages exactly where it is sound: attention-only
     # prefill stacks bucket, recurrent blocks admit at exact length
     assert sp.bucket == zoo.supports_bucketed_prefill(sp.cfg)
-    assert paged == iso, f"{family}: paged decode diverged from isolated"
-    assert stripe == iso, f"{family}: stripe decode diverged from isolated"
+    if paged != iso:
+        _fail_with_triage(f"conformance_{family}_paged",
+                          f"{family}: paged decode diverged from isolated",
+                          paged=sp, stripe=ss)
+    if stripe != iso:
+        _fail_with_triage(f"conformance_{family}_stripe",
+                          f"{family}: stripe decode diverged from isolated",
+                          stripe=ss, paged=sp)
     # all pages drained back to the free list once the workload finishes
     assert sp.kv.n_free_pages == sp.kv.n_alloc_pages
     if mesh is not None:
@@ -228,13 +277,25 @@ def assert_kernel_conformance(family, mesh=None, replicate=False):
             # assertion in assert_conformance
             assert _pool_leaf(sp.kv.cache).sharding.is_fully_replicated
             assert not sp.kv.page_sharded
-    assert toks == iso, f"{family}: kernel decode diverged from isolated"
+    if toks != iso:
+        # pair the kernel record with a gather-path run of the SAME
+        # workload: the streams match event-for-event up to the first
+        # tile the kernel resolved differently
+        _, ref = scheduler_tokens(family, "paged", mesh=mesh)
+        _fail_with_triage(f"kernel_{family}",
+                          f"{family}: kernel decode diverged from isolated",
+                          kernel=sp, gather=ref)
 
     with knobs(**kn):
         stoks, ss = scheduler_tokens(family, "paged", mesh=mesh,
                                      spec=SpecConfig(k=3))
-    assert stoks == iso, \
-        f"{family}: kernel speculative decode diverged from isolated"
+    if stoks != iso:
+        _, ref = scheduler_tokens(family, "paged", mesh=mesh,
+                                  spec=SpecConfig(k=3))
+        _fail_with_triage(
+            f"kernel_spec_{family}",
+            f"{family}: kernel speculative decode diverged from isolated",
+            kernel=ss, gather=ref)
     assert ss.stats.verify_steps > 0
 
 
@@ -342,7 +403,7 @@ def share_tokens(family, mesh=None, prefix_share="auto", prefill_chunk=None,
                       decode_chunk=4, mesh=mesh, spec=spec, page=c["page"],
                       n_pages="auto", cache_kw=c.get("cache_kw"),
                       prefix_share=prefix_share, prefill_chunk=prefill_chunk,
-                      async_admission=async_admission)
+                      async_admission=async_admission, flightrec=True)
     reqs = [Request(rid=i, prompt=p,
                     params=SamplingParams(max_new_tokens=c["max_new"]),
                     embeds=None if embeds is None else embeds[i], arrival=i)
@@ -368,10 +429,13 @@ def assert_share_conformance(family, mesh=None):
     pool that drains to pristine once the index is dropped.  Families
     without bitwise-sharable K/V rows must downgrade "auto" silently."""
     iso = isolated_share_tokens(family)
-    off, _ = share_tokens(family, mesh=mesh, prefix_share=False)
+    off, s_off = share_tokens(family, mesh=mesh, prefix_share=False)
     assert off == iso, f"{family}: sharing-off run diverged from isolated"
     on, sp = share_tokens(family, mesh=mesh)
-    assert on == iso, f"{family}: prefix sharing changed tokens"
+    if on != iso:
+        _fail_with_triage(f"share_{family}",
+                          f"{family}: prefix sharing changed tokens",
+                          shared=sp, unshared=s_off)
     if not zoo.supports_prefix_share(sp.cfg):
         assert sp.prefix is None  # "auto" downgraded silently
         return

@@ -1,0 +1,324 @@
+"""Flight recorder: ring bounds, replay determinism, first-divergence triage.
+
+The recorder's contract has three legs: (1) the ring buffer keeps the
+most recent `capacity` decisions and counts what it dropped, with event
+identity excluding wall-clock time; (2) a recorded run is a replay
+script — rebuilding the workload from `submit` events and re-driving a
+fresh identically-configured scheduler reproduces the event stream and
+token streams exactly; (3) two records diff by causal stream (`rid` >
+`slot` > global) and a perturbed run — here a forced kernel-dispatch
+change — is named at its FIRST diverging event, not discovered as a deep
+token mystery.  The crash dump must capture the pool's host-side truth
+(free lists, refcounts, block tables, in-flight requests) when the
+scheduler dies mid-step, and a small committed record must keep
+replaying across commits (the time-travel regression pin).
+"""
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import load_arch
+from repro.models import zoo
+from repro.serve import (FlightRecorder, Request, SamplingParams, Scheduler,
+                         SpecConfig, diff_records, load_jsonl, replay)
+from repro.serve.flightrec import FlightEvent, recorded_tokens
+from repro.serve.flightrec.replay import requests_from_record
+
+SMOKE_RECORD = os.path.join(os.path.dirname(__file__), "data",
+                            "flightrec_smoke.jsonl")
+
+
+# ---------------------------------------------------------------------------
+# ring buffer + event identity (no model needed)
+
+
+def test_ring_buffer_bounds_and_dropped():
+    rec = FlightRecorder(capacity=8)
+    for i in range(20):
+        rec.emit("tick", i=i)
+    assert len(rec) == 8
+    assert rec.seq == 20
+    assert rec.dropped == 12
+    # the ring kept the most recent window, in sequence order
+    assert [ev.data["i"] for ev in rec.events] == list(range(12, 20))
+    seqs = [ev.seq for ev in rec.events]
+    assert seqs == sorted(seqs) == list(range(12, 20))
+    with pytest.raises(ValueError):
+        FlightRecorder(capacity=0)
+
+
+def test_signature_excludes_wall_clock():
+    a = FlightEvent(0, "admit", 1.0, {"group": [1, 2], "bucket": 8})
+    b = FlightEvent(5, "admit", 99.0, {"bucket": 8, "group": [1, 2]})
+    # different seq, different t, different key order: same decision
+    assert a.signature() == b.signature()
+    c = FlightEvent(0, "admit", 1.0, {"group": [1, 3], "bucket": 8})
+    assert a.signature() != c.signature()
+
+
+def test_stream_key_priority():
+    assert FlightEvent(0, "emit", 0, {"rid": 3, "slot": 1}).stream_key() \
+        == ("rid", 3)
+    assert FlightEvent(0, "kv_ref", 0, {"slot": 1}).stream_key() == ("slot", 1)
+    assert FlightEvent(0, "config", 0, {"page": 16}).stream_key() == ("global",)
+
+
+def test_jsonl_round_trip(tmp_path):
+    rec = FlightRecorder()
+    rec.emit("admit", group=[0, 1], bucket=8, overlap=False)
+    rec.emit("emit", rid=0, slot=1, tokens=[5, 9])
+    path = str(tmp_path / "rec.jsonl")
+    rec.dump(path)
+    loaded = load_jsonl(path)
+    assert [ev.signature() for ev in loaded] \
+        == [ev.signature() for ev in rec.events]
+    assert [ev.seq for ev in loaded] == [0, 1]
+    assert loaded[1].data == {"rid": 0, "slot": 1, "tokens": [5, 9]}
+
+
+# ---------------------------------------------------------------------------
+# diff: causal-stream alignment
+
+
+def _ev(seq, kind, **data):
+    return FlightEvent(seq, kind, 0.0, data)
+
+
+def test_diff_aligns_by_causal_stream():
+    # the same per-request decisions, interleaved differently globally:
+    # stream-aligned diff sees no divergence
+    a = [_ev(0, "admit", rid=0, bucket=8), _ev(1, "admit", rid=1, bucket=8),
+         _ev(2, "emit", rid=0, tokens=[4]), _ev(3, "emit", rid=1, tokens=[7])]
+    b = [_ev(0, "admit", rid=1, bucket=8), _ev(1, "admit", rid=0, bucket=8),
+         _ev(2, "emit", rid=1, tokens=[7]), _ev(3, "emit", rid=0, tokens=[4])]
+    assert diff_records(a, b).equal
+
+    # one request's second event diverges: named with stream + index
+    b2 = [_ev(0, "admit", rid=0, bucket=8), _ev(1, "admit", rid=1, bucket=8),
+          _ev(2, "emit", rid=0, tokens=[4]), _ev(3, "emit", rid=1, tokens=[8])]
+    rep = diff_records(a, b2)
+    assert not rep.equal
+    assert rep.first.stream == ("rid", 1)
+    assert rep.first.index == 1
+    assert rep.first.a.data["tokens"] == [7]
+    assert rep.first.b.data["tokens"] == [8]
+    assert "emit" in rep.first.describe()
+    assert "rid" in rep.render()
+
+
+def test_diff_length_mismatch_is_divergence():
+    a = [_ev(0, "emit", rid=0, tokens=[1]), _ev(1, "finish", rid=0, n=1,
+                                                tokens=[1], reason="length")]
+    rep = diff_records(a, a[:1])
+    assert not rep.equal
+    assert rep.first.stream == ("rid", 0)
+    assert rep.first.a is not None and rep.first.b is None
+    assert "<stream ended>" in rep.first.describe()
+
+
+# ---------------------------------------------------------------------------
+# scheduler integration: record -> replay -> diff
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = load_arch("qwen2_0_5b").reduced(n_layers=2, d_model=64, n_heads=4,
+                                          n_kv_heads=2, d_ff=128, vocab=128,
+                                          head_dim=16)
+    return cfg, zoo.init(jax.random.PRNGKey(0), cfg)
+
+
+def _workload(cfg, n=4, max_new=5):
+    rng = np.random.default_rng(7)
+    return [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab, (8,)).astype(np.int32),
+                    params=SamplingParams(max_new_tokens=max_new), arrival=i)
+            for i in range(n)]
+
+
+def _sched(cfg, params, **kw):
+    kw.setdefault("max_slots", 2)
+    kw.setdefault("max_seq", 64)
+    kw.setdefault("decode_chunk", 4)
+    kw.setdefault("flightrec", True)
+    return Scheduler(cfg, params, **kw)
+
+
+def test_recorder_off_by_default_and_shared_instance(small_model):
+    cfg, params = small_model
+    assert Scheduler(cfg, params, max_slots=2, max_seq=64).flight is None
+    rec = FlightRecorder()
+    assert _sched(cfg, params, flightrec=rec).flight is rec
+
+
+def test_recording_does_not_change_tokens(small_model):
+    cfg, params = small_model
+    runs = {}
+    for mode in (False, True):
+        sched = Scheduler(cfg, params, max_slots=2, max_seq=64,
+                          decode_chunk=4, flightrec=mode)
+        reqs = _workload(cfg)
+        sched.run(reqs)
+        runs[mode] = [r.tokens for r in reqs]
+    assert runs[True] == runs[False]
+
+
+def test_record_replay_event_and_token_identical(small_model, tmp_path):
+    cfg, params = small_model
+    sched = _sched(cfg, params)
+    reqs = _workload(cfg)
+    sched.run(reqs)
+    path = str(tmp_path / "run.jsonl")
+    sched.flight.dump(path)
+
+    # the record carries the full workload: prompts, params, arrivals
+    rebuilt = requests_from_record(path)
+    assert [r.rid for r in rebuilt] == [r.rid for r in reqs]
+    assert all((a.prompt == b.prompt).all() for a, b in zip(rebuilt, reqs))
+    assert recorded_tokens(path) == {r.rid: r.tokens for r in reqs}
+
+    # replay through a FRESH identically-configured scheduler, from disk
+    rep = replay(path, _sched(cfg, params))
+    assert rep.events_equal and rep.tokens_equal and rep.ok
+    rep.assert_equal()
+    assert rep.n_requests == len(reqs)
+
+
+def test_record_replay_spec_chunked_sharing(small_model, tmp_path):
+    """Replay holds across the full admission machinery: speculative
+    fused scan + chunked prefill + prefix sharing + async admission."""
+    cfg, params = small_model
+    kw = dict(page=16, prefill_chunk=4, prefix_share=True,
+              spec=SpecConfig(k=2, drafter="ngram"))
+    sched = _sched(cfg, params, **kw)
+    reqs = _workload(cfg, n=4, max_new=6)
+    # shared prefixes so ext_admit / prefix_match events appear
+    for r in reqs[1:3]:
+        r.prompt = np.concatenate([reqs[0].prompt[:6],
+                                   r.prompt[6:]]).astype(np.int32)
+    sched.run(reqs)
+    kinds = {ev.kind for ev in sched.flight.events}
+    assert {"chunk", "spec_window", "graduate"} <= kinds
+    path = str(tmp_path / "spec.jsonl")
+    sched.flight.dump(path)
+    replay(path, _sched(cfg, params, **kw)).assert_equal()
+
+
+def test_perturbed_run_diff_names_dispatch_first(small_model):
+    """The acceptance pin: force the kernel-dispatch decision to differ
+    and the triage diff must name the seq-0 `dispatch` event as the first
+    divergence — before any token or admission event."""
+    from repro.perf_knobs import knobs
+
+    cfg, params = small_model
+    base = _sched(cfg, params, page=16)
+    base.run(_workload(cfg))
+    with knobs(paged_attn="off"):  # forced defer of the paged-attn kernel
+        pert = _sched(cfg, params, page=16)
+    pert.run(_workload(cfg))
+    rep = diff_records(base.flight, pert.flight)
+    assert not rep.equal
+    assert rep.first.stream == ("global",)
+    assert rep.first.a.kind == "dispatch" == rep.first.b.kind
+    assert rep.first.a.data["backend"] != rep.first.b.data["backend"]
+    assert "dispatch" in rep.first.describe()
+
+
+def test_replay_rejects_stale_or_nonrecording_scheduler(small_model):
+    cfg, params = small_model
+    sched = _sched(cfg, params)
+    reqs = _workload(cfg, n=2)
+    sched.run(reqs)
+    record = sched.flight.events
+    with pytest.raises(ValueError, match="fresh"):
+        replay(record, sched)  # already recorded this workload
+    with pytest.raises(ValueError, match="flightrec=True"):
+        replay(record, Scheduler(cfg, params, max_slots=2, max_seq=64))
+
+
+# ---------------------------------------------------------------------------
+# crash dump
+
+
+def test_crash_dump_snapshots_pool_and_requests(small_model, tmp_path):
+    cfg, params = small_model
+    from repro.serve import Telemetry
+
+    sched = _sched(cfg, params, page=16, telemetry=Telemetry(enabled=True))
+    sched.flight.crash_path = str(tmp_path / "crash.json")
+    reqs = _workload(cfg, n=3, max_new=6)
+    for r in reqs:
+        sched.submit(r)
+    sched.step()  # admit + first decode chunk: live slots, mapped pages
+    boom = RuntimeError("injected mid-step failure")
+
+    def explode(*a, **k):
+        raise boom
+
+    sched._decode_and_harvest = explode
+    with pytest.raises(RuntimeError, match="injected"):
+        sched.step()
+
+    crash = sched.flight.crash
+    assert crash is not None
+    assert "injected mid-step failure" in crash["error"]
+    # in-flight requests with their phase and slot attribution
+    assert crash["requests"], "no in-flight requests captured"
+    assert {"rid", "phase", "slot", "prefill_cursor"} \
+        <= set(crash["requests"][0])
+    # the pool's host-side truth: free lists, refcounts, block tables
+    pool = crash["pool"]
+    assert pool["paged"]
+    assert len(pool["page_ref"]) == pool["n_pages"]
+    assert pool["block_tables"], "no block tables captured"
+    live_pages = {p for pages in pool["block_tables"].values() for p in pages}
+    assert all(pool["page_ref"][p] >= 1 for p in live_pages)
+    assert pool["n_free_pages"] + pool["n_referenced_pages"] \
+        == pool["n_pages"] - 2  # minus the reserved sentinel pair
+    assert crash["events_tail"], "no event tail captured"
+    # the dump also landed on disk as JSON
+    with open(sched.flight.crash_path) as f:
+        assert json.load(f)["error"] == crash["error"]
+    # the exception path finalized the trace: no dangling open spans
+    assert all(s.t1 is not None for s in sched.telemetry.tracer.events)
+
+
+# ---------------------------------------------------------------------------
+# committed smoke record: replay must keep working across commits
+
+
+def _smoke_scheduler(cfg, params):
+    """The exact configuration the committed record was captured with."""
+    return Scheduler(cfg, params, max_slots=2, max_seq=64, decode_chunk=4,
+                     page=16, flightrec=True)
+
+
+def _smoke_workload(cfg):
+    rng = np.random.default_rng(11)
+    return [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab, (6,)).astype(np.int32),
+                    params=SamplingParams(max_new_tokens=4), arrival=i)
+            for i in range(3)]
+
+
+def test_committed_smoke_record_replays(small_model):
+    """Regenerate with:
+    REPRO_REGEN_FLIGHTREC=1 PYTHONPATH=src python -m pytest \
+        tests/test_flightrec.py -k smoke -q"""
+    cfg, params = small_model
+    if os.environ.get("REPRO_REGEN_FLIGHTREC"):
+        os.makedirs(os.path.dirname(SMOKE_RECORD), exist_ok=True)
+        sched = _smoke_scheduler(cfg, params)
+        sched.run(_smoke_workload(cfg))
+        sched.flight.dump(SMOKE_RECORD)
+    if not os.path.exists(SMOKE_RECORD):
+        pytest.skip("no committed smoke record")
+    record = load_jsonl(SMOKE_RECORD)
+    assert any(ev.kind == "submit" for ev in record)
+    assert any(ev.kind == "finish" for ev in record)
+    rep = replay(SMOKE_RECORD, _smoke_scheduler(cfg, params))
+    rep.assert_equal()
+    assert rep.n_events == len(record)

@@ -10,6 +10,7 @@ that telemetry on vs off yields bit-identical tokens."""
 import json
 import math
 import os
+import re
 
 import jax
 import numpy as np
@@ -177,7 +178,27 @@ def _validate_chrome_trace(doc: dict) -> None:
             stacks[key].pop()
     assert all(not s for s in stacks.values()), "unclosed B events"
     for e in evs:
-        assert e["ph"] in ("B", "E", "M")
+        assert e["ph"] in ("B", "E", "M", "i")
+        if e["ph"] == "i":  # instant events need a scope to parse
+            assert e["s"] in ("t", "p", "g")
+            assert e["ts"] >= 0
+
+
+def test_open_span_auto_closed_on_export():
+    """`begin` without `end` — an abandoned lifecycle — must export as a
+    matched, zero-or-positive-width B/E pair marked auto_closed."""
+    tr = TraceRecorder()
+    t = tr.epoch
+    done = tr.begin("req0", "decode", t + 0.001, rid=0)
+    tr.end(done, t + 0.003, tokens=4)
+    abandoned = tr.begin("req1", "decode", t + 0.002, rid=1)
+    assert abandoned.open and abandoned.duration == 0.0
+    doc = tr.chrome_trace()
+    _validate_chrome_trace(doc)
+    assert not abandoned.open
+    assert abandoned.args.get("auto_closed") is True
+    assert "auto_closed" not in done.args  # explicit ends stay unmarked
+    assert tr.finalize() == 0  # idempotent: nothing left open
 
 
 def test_trace_recorder_export_valid(tmp_path):
@@ -351,6 +372,86 @@ def test_paged_attn_deferral_reasons(small_model):
     assert sched.paged_attn == "off"
     assert sched.telemetry.registry.value(
         "serve_paged_attn_deferred", {"reason": "pool-not-paged"}) == 1
+
+
+def test_abandoned_request_trace_stays_valid(small_model):
+    """Walking away from a scheduler mid-decode (no drain, no finish)
+    must still export a Perfetto-valid trace: the in-flight requests'
+    open decode spans auto-close at export instead of leaving unmatched
+    B events."""
+    cfg, params = small_model
+    tele = Telemetry(enabled=True)
+    sched = Scheduler(cfg, params, max_slots=2, max_seq=64, decode_chunk=4,
+                      telemetry=tele)
+    for r in _workload(cfg, n=2, max_new=32):
+        sched.submit(r)
+    sched.step()
+    sched.step()  # requests are now mid-decode with OPEN spans
+    assert any(s.open for s in tele.tracer.events), \
+        "no open decode span to abandon"
+    doc = tele.tracer.chrome_trace()  # abandon: export without finishing
+    _validate_chrome_trace(doc)
+    assert any(s.args.get("auto_closed") for s in tele.tracer.events)
+    assert all(s.t1 is not None for s in tele.tracer.events)
+
+
+def test_prometheus_histogram_spec_compliance():
+    """Text-format contract (the round-trip pin): `le` bounds strictly
+    increase, bucket counts are CUMULATIVE, the +Inf bucket equals
+    `_count`, and `_sum` is the exact total — re-counted from the raw
+    observations, not just self-consistent."""
+    reg = MetricsRegistry()
+    h = reg.histogram("lat", labels={"phase": "decode"})
+    vals = [1e-5, 2e-4, 2e-4, 3e-3, 0.5]
+    for v in vals:
+        h.observe(v)
+    text = reg.render_prometheus()
+    buckets = []
+    for line in text.splitlines():
+        if line.startswith("lat_bucket"):
+            le = re.search(r'le="([^"]+)"', line).group(1)
+            buckets.append((math.inf if le == "+Inf" else float(le),
+                            int(float(line.rsplit(" ", 1)[1]))))
+    assert buckets, "no bucket lines rendered"
+    les, counts = zip(*buckets)
+    assert list(les) == sorted(les), "le bounds not increasing"
+    assert all(a <= b for a, b in zip(counts, counts[1:])), \
+        "bucket counts are not cumulative"
+    assert les[-1] == math.inf and counts[-1] == len(vals)
+    # every cumulative count matches a recount of the raw observations
+    for le, c in buckets:
+        assert c == sum(1 for v in vals if v <= le * (1 + 1e-12)), \
+            f"le={le}: cumulative count {c} wrong"
+    s = re.search(r"^lat_sum\{[^}]*\} (\S+)$", text, re.M)
+    assert float(s.group(1)) == pytest.approx(sum(vals))
+    c = re.search(r"^lat_count\{[^}]*\} (\S+)$", text, re.M)
+    assert int(float(c.group(1))) == len(vals)
+
+
+def test_async_admission_telemetry_attribution(small_model):
+    """Telemetry under overlapped admission: the prepare/commit split
+    must not lose per-request attribution (every request still gets its
+    admission-wait observation and a closed decode span), overlapped
+    admissions are counted, and the `serve_inflight_syncs` canary stays
+    zero — instrumentation must never force a blocking host sync while a
+    decode chunk is in flight."""
+    cfg, params = small_model
+    tele = Telemetry(enabled=True)
+    sched = Scheduler(cfg, params, max_slots=2, max_seq=64, decode_chunk=4,
+                      async_admission=True, telemetry=tele)
+    assert sched.async_admission
+    reqs = _workload(cfg)
+    sched.run(reqs)
+    reg = tele.registry
+    assert reg.counter("serve_overlap_admissions").value > 0, \
+        "no admission ever overlapped a decode chunk"
+    assert reg.counter("serve_inflight_syncs").value == 0
+    assert reg.histogram("serve_admission_wait_seconds").count == len(reqs)
+    assert reg.histogram("serve_decode_step_seconds").count \
+        == sched.stats.decode_steps
+    assert all(any(s.name == "decode" for s in r.spans) for r in reqs)
+    assert all(s.t1 is not None for r in reqs for s in r.spans)
+    _validate_chrome_trace(tele.tracer.chrome_trace())
 
 
 # ---------------------------------------------------------------------------
